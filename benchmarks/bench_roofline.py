@@ -1,0 +1,54 @@
+"""Roofline summary rows derived from the dry-run cache (no recompilation).
+
+Reads experiments/dryrun/*.json and emits one row per (arch, shape, mesh):
+compute/memory/collective seconds per step, the dominant term, and the
+useful-FLOPs ratio (6*N*D_tokens over compiled FLOPs).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec.get("model_params_active") or rec.get("model_params", 0)
+    toks = TOKENS.get(rec["shape"], 0)
+    mult = 6.0 if rec["shape"] == "train_4k" else 2.0
+    return mult * n * toks
+
+
+def run() -> List[str]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(f))
+        if not rec.get("ok"):
+            continue
+        a = rec["analysis"]
+        ct = a["flops_per_device"] / PEAK_FLOPS_BF16
+        mt = a["bytes_per_device"] / HBM_BW
+        lt = a["collective_bytes_per_device"] / ICI_BW
+        dom = max((ct, "compute"), (mt, "memory"), (lt, "collective"))[1]
+        mf = model_flops(rec) / rec["devices"]
+        useful = mf / max(a["flops_per_device"], 1)
+        tag = f"__{rec['tag']}" if rec.get("tag") else ""
+        rows.append(
+            f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag},"
+            f"{max(ct, mt, lt):.3f},bound_s dom={dom} comp={ct:.3f} mem={mt:.3f} "
+            f"coll={lt:.3f} useful_flops={useful:.2f} "
+            f"peakGiB={rec['memory']['peak_bytes_est'] / 2**30:.1f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_latency    -> paper Fig 4 (per-op latency: local / NFS-like / FaaSFS)
+  bench_filebench  -> paper Fig 5 (workload personalities, per-op deltas)
+  bench_tpcc       -> paper Fig 6 (contended multi-client scaling + aborts)
+  bench_fullstack  -> paper Fig 7 (elastic snapshot serving vs fixed servers)
+  bench_delta_ckpt -> ours (block-granular delta checkpoint + int8 kernel)
+  bench_roofline   -> ours (dry-run derived roofline terms per arch x shape)
+
+Prints ``name,value,unit/derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_delta_ckpt,
+        bench_filebench,
+        bench_fullstack,
+        bench_latency,
+        bench_roofline,
+        bench_tpcc,
+    )
+
+    suites = [
+        ("latency", bench_latency),
+        ("filebench", bench_filebench),
+        ("tpcc", bench_tpcc),
+        ("fullstack", bench_fullstack),
+        ("delta_ckpt", bench_delta_ckpt),
+        ("roofline", bench_roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,derived")
+    for name, mod in suites:
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+            print(f"suite_{name}_wall,{time.perf_counter() - t0:.2f},s", flush=True)
+        except Exception as e:  # keep the harness going; failures are visible
+            print(f"suite_{name}_FAILED,{type(e).__name__},{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower tagged variants of the three chosen cells.
+
+Each variant is a (cell, overrides, tag) tuple; results land in
+experiments/dryrun/<cell>__<tag>.json next to the baselines, and
+launch/roofline.py --tag <tag> renders them.
+
+Usage: PYTHONPATH=src python experiments/hillclimb.py [variant ...]
+"""
+import sys
+
+from repro.launch.dryrun import run_cell
+from repro.models.runtime import train_rules_v2
+
+VARIANTS = {
+    # H2 (deepseek): output-dim FSDP sharding kills projection all-reduces
+    "deepseek_fsdp2": dict(
+        arch="deepseek-coder-33b", shape="train_4k", mesh="pod",
+        overrides={"rules": train_rules_v2()}, tag="fsdp2",
+    ),
+    # H2b: same, multipod (verifies the pod axis still shards)
+    "deepseek_fsdp2_mp": dict(
+        arch="deepseek-coder-33b", shape="train_4k", mesh="multipod",
+        overrides={"rules": train_rules_v2()}, tag="fsdp2",
+    ),
+    # H3 (deepseek): fsdp2 + smaller q chunks (bound score transients)
+    "deepseek_fsdp2_qc256": dict(
+        arch="deepseek-coder-33b", shape="train_4k", mesh="pod",
+        overrides={"rules": train_rules_v2(), "q_chunk": 256}, tag="fsdp2qc256",
+    ),
+    # H5 (qwen3 moe): output-dim FSDP for the dense parts of the MoE net
+    "qwen3_fsdp2": dict(
+        arch="qwen3-moe-30b-a3b", shape="train_4k", mesh="pod",
+        overrides={"rules": train_rules_v2()}, tag="fsdp2",
+    ),
+    # H4 (qwen3 moe): shard_map expert-parallel all-to-all
+    "qwen3_a2a": dict(
+        arch="qwen3-moe-30b-a3b", shape="train_4k", mesh="pod",
+        overrides={"moe_impl": "a2a"}, tag="a2a",
+    ),
+    "qwen3_a2a_mp": dict(
+        arch="qwen3-moe-30b-a3b", shape="train_4k", mesh="multipod",
+        overrides={"moe_impl": "a2a"}, tag="a2a",
+    ),
+    # H7 (deepseek): save dot outputs in remat (kill recompute traffic)
+    "deepseek_rematdots": dict(
+        arch="deepseek-coder-33b", shape="train_4k", mesh="pod",
+        overrides={"remat_policy": "dots"}, tag="rematdots",
+    ),
+    # H9: int8 KV cache for the over-HBM decode cells
+    "musicgen_int8kv": dict(
+        arch="musicgen-large", shape="decode_32k", mesh="pod",
+        overrides={"kv_dtype": "int8"}, tag="int8kv",
+    ),
+    "internvl2_int8kv": dict(
+        arch="internvl2-76b", shape="decode_32k", mesh="pod",
+        overrides={"kv_dtype": "int8"}, tag="int8kv",
+    ),
+    "mixtral_long_int8kv": dict(
+        arch="mixtral-8x7b", shape="long_500k", mesh="pod",
+        overrides={"kv_dtype": "int8"}, tag="int8kv",
+    ),
+    # H6 (falcon): fsdp2 on the ssm projections
+    "falcon_fsdp2": dict(
+        arch="falcon-mamba-7b", shape="train_4k", mesh="pod",
+        overrides={"rules": train_rules_v2()}, tag="fsdp2",
+    ),
+}
+
+
+def main() -> None:
+    import jax.numpy as jnp
+
+    names = sys.argv[1:] or list(VARIANTS)
+    for name in names:
+        spec = VARIANTS[name]
+        ov = spec.get("overrides") or {}
+        if ov.get("kv_dtype") == "int8":
+            ov["kv_dtype"] = jnp.int8
+        rec = run_cell(
+            spec["arch"], spec["shape"], spec["mesh"],
+            overrides=spec.get("overrides"), tag=spec["tag"], force=True,
+        )
+        if rec.get("ok"):
+            a = rec["analysis"]
+            print(f"[OK] {name}: peak={rec['memory']['peak_bytes_est']/2**30:.1f}GiB "
+                  f"comp={a['flops_per_device']/197e12:.2f}s "
+                  f"mem={a['bytes_per_device']/819e9:.2f}s "
+                  f"coll={a['collective_bytes_per_device']/50e9:.2f}s")
+        else:
+            print(f"[FAIL] {name}: {rec.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""§Perf: Pallas-kernel roofline accounting, grounded in parsed HLO bytes.
+
+The dry-run lowers the ``xla`` reference paths (Pallas cannot lower to the
+CPU backend un-interpreted), so attention materializes S^2 score chains and
+the SSM materializes (B, c, Di, N) state chains in the compiled HLO. On TPU
+those live in VMEM inside the flash_attention / ssm_scan kernels
+(src/repro/kernels/), so the §Perf 'kernel-accounted' rows subtract exactly
+the ops the kernel fuses — identified by result element count (the score /
+state tensor sizes are known from the cell's sharded shapes, and the
+subtraction is the PARSED bytes of those ops, not a napkin estimate) — and
+remove the attention-chain partial-sum collectives the fused kernel never
+emits. Add-backs (the kernel's true HBM traffic: one pass over Q/K/V/O or
+x/dt/B/C/y) are computed analytically and stated per cell.
+
+Writes <cell>__<tag>.json records so launch/roofline.py --tag renders them.
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.perf import load_cell
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+# per-cell fusion spec:
+#   elems — exact result-element-counts of the fused intermediate family
+#           (derived from the cell's sharded score/state shapes; explicit
+#           sets, not thresholds, so gathered weights / MLP hiddens of
+#           similar size are never wrongly subtracted)
+#   coll_markers — op_name substrings of collectives the kernel eliminates
+#   addback_bytes — kernel HBM traffic added back (analytic, per device/step)
+CELLS = {
+    # deepseek 33B train_4k pod: score-chain tensors are
+    # (B=16, KV(pad), G=7, qc=512, S=4096)-family; smallest member 29.36M elems.
+    # Flash add-back: Q/K/V/O already flow through retained projection ops.
+    "deepseek-coder-33b__train_4k__pod": dict(
+        base_tag="", tag="flash",
+        elems={29_360_128, 58_720_256, 117_440_512, 1_820_327_936},
+        coll_markers=("bqkgd,bskd", "bkgqs,bskd"),
+        addback_bytes=0.0,
+    ),
+    # falcon-mamba train_4k pod: fused state family (B=16, c=256, Di=512, N=16)
+    # = 33.5M elems and its halves; conservative cutoff at 4.19M keeps ALL
+    # sub-state-size chunk ops in the memory term. Add-back: one fwd+bwd pass
+    # over x/dt/B/C/y f32 chunks = 5 x (16*4096*512*4B) * 64L * 3.
+    "falcon-mamba-7b__train_4k__pod": dict(
+        base_tag="", tag="fusedscan",
+        elems={33_554_432, 16_777_216, 8_388_608, 4_194_304},
+        coll_markers=(),
+        addback_bytes=5 * (16 * 4096 * 512 * 4) * 64 * 3,
+    ),
+    # deepseek prefill_32k pod: prefill shape class; score family
+    # {234.9M, 14.7M, 7.3M elems} = the (B=2, G=7, qc=1024, S-shard) chain.
+    "deepseek-coder-33b__prefill_32k__pod": dict(
+        base_tag="", tag="flash",
+        elems={234_881_024, 14_680_064, 7_340_032},
+        coll_markers=("bqkgd,bskd", "bkgqs,bskd"),
+        addback_bytes=0.0,
+    ),
+    # internvl2 76B train_4k pod: the fleet's best baseline roofline cell;
+    # score family {33.5M, 268M, 2.68G elems} (d8192, 64H, qc1024 chunks).
+    "internvl2-76b__train_4k__pod": dict(
+        base_tag="", tag="flash",
+        elems={33_554_432, 268_435_456, 2_684_354_560},
+        coll_markers=("bqkgd,bskd", "bkgqs,bskd"),
+        addback_bytes=0.0,
+    ),
+    # qwen3 a2a variant + flash on its attention scores
+    # (B=16, KV=4(pad), G=8, qc=1024, S=4096)-family.
+    "qwen3-moe-30b-a3b__train_4k__pod": dict(
+        base_tag="a2a", tag="a2a_flash",
+        elems={134_217_728},
+        coll_markers=("bqkgd,bskd", "bkgqs,bskd"),
+        addback_bytes=0.0,
+    ),
+}
+
+
+def main() -> None:
+    for cell, spec in CELLS.items():
+        base_id = cell + (f"__{spec['base_tag']}" if spec["base_tag"] else "")
+        rec = json.loads((DRYRUN / f"{base_id}.json").read_text())
+        att = load_cell(base_id)
+        total = sum(att.by_bytes.values())
+        fused = sum(att.by_elems.get(e, 0.0) for e in spec["elems"])
+        coll_total = sum(att.by_coll.values())
+        coll_removed = sum(
+            b for (kind, name), b in att.by_coll.items()
+            if any(m in name for m in spec["coll_markers"])
+        )
+        a = dict(rec["analysis"])
+        a["bytes_per_device"] = total - fused + spec["addback_bytes"]
+        a["collective_bytes_per_device"] = coll_total - coll_removed
+        a["kernel_accounting"] = dict(
+            fused_bytes=fused, fused_frac=fused / total,
+            coll_removed=coll_removed,
+            addback=spec["addback_bytes"],
+            fused_elem_families=sorted(spec["elems"]),
+        )
+        out = dict(rec, analysis=a, tag=spec["tag"])
+        out_path = DRYRUN / f"{cell}__{spec['tag']}.json"
+        out_path.write_text(json.dumps(out, indent=2))
+        print(f"{cell} [{spec['tag']}]: "
+              f"mem {rec['analysis']['bytes_per_device']/819e9:.1f}s -> "
+              f"{a['bytes_per_device']/819e9:.1f}s  "
+              f"coll {rec['analysis']['collective_bytes_per_device']/50e9:.1f}s -> "
+              f"{a['collective_bytes_per_device']/50e9:.1f}s  "
+              f"(fused {fused/total*100:.0f}% of bytes)")
+
+
+if __name__ == "__main__":
+    main()

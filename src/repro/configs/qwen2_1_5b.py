@@ -1,0 +1,18 @@
+"""Qwen2-1.5B — dense GQA with QKV bias, tied embeddings [arXiv:2407.10671; hf]."""
+from repro.configs.base import ModelConfig, register
+
+QWEN2_1_5B = register(ModelConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    source="arXiv:2407.10671; hf",
+))

@@ -1,0 +1,290 @@
+"""The FaaSFS Backend Service (paper §4.1-4.2).
+
+Monolithic, in-memory, transactional — deliberately matching the paper's
+prototype scope ("a prototype backend implemented as a monolithic server
+that maintains state in memory"; scalable backends are cited as future
+work). It provides:
+
+  * a Sequencer issuing commit timestamps,
+  * OCC validation (Kung-Robinson backward validation over block versions
+    and file-length predicates),
+  * atomic application of write sets with version-chain (undo log) retention,
+  * the transaction log that drives block-granular cache updates
+    (eager / lazy / invalidate / stale / frequency-heuristic policies),
+  * multiversion snapshot block fetches at a historical T_R.
+
+Validation detail: the paper validates ``T_W^B <= T_R`` for each read,
+which is sound when caches are synchronized at transaction begin (its
+eager/lazy protocols guarantee this). Because we also allow the 'stale'
+policy (backend does nothing at begin; paper §4.2 explicitly permits this),
+we validate against the *observed* version timestamp instead — equivalent
+under begin-sync, and still strictly serializable without it.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.blockstore import BlockStore, FileMeta
+from repro.core.types import (
+    BLOCK_SIZE_DEFAULT,
+    BlockKey,
+    CachePolicy,
+    Conflict,
+    FileId,
+    LengthPredicate,
+    ReadRecord,
+    Timestamp,
+    WriteRecord,
+)
+
+
+@dataclass
+class CommitRecord:
+    ts: Timestamp
+    blocks: List[BlockKey]
+    meta_files: List[FileId]
+    names: List[str]
+
+
+@dataclass
+class TxnPayload:
+    """What a client ships at commit time."""
+
+    read_ts: Timestamp
+    reads: List[ReadRecord] = field(default_factory=list)
+    writes: List[WriteRecord] = field(default_factory=list)
+    predicates: List[LengthPredicate] = field(default_factory=list)
+    # metadata mutations: fid -> new length (None => delete)
+    meta_updates: Dict[FileId, Optional[int]] = field(default_factory=dict)
+    # namespace mutations: path -> fid (None => unbind)
+    name_updates: Dict[str, Optional[FileId]] = field(default_factory=dict)
+    # names whose resolution the txn depends on: path -> observed version
+    name_reads: Dict[str, Timestamp] = field(default_factory=dict)
+    # metadata observed versions: fid -> version ts
+    meta_reads: Dict[FileId, Timestamp] = field(default_factory=dict)
+    read_only: bool = False
+
+
+@dataclass
+class BeginReply:
+    read_ts: Timestamp
+    # block-granular cache updates (the paper's key mechanism):
+    updates: Dict[BlockKey, Tuple[Timestamp, bytes]]
+    invalidations: List[BlockKey]
+    file_invalidations: List[FileId]
+
+
+@dataclass
+class BackendStats:
+    commits: int = 0
+    aborts: int = 0
+    begins: int = 0
+    blocks_pushed: int = 0
+    blocks_invalidated: int = 0
+    block_fetches: int = 0
+    bytes_pushed: int = 0
+    validation_checks: int = 0
+
+
+class BackendService:
+    def __init__(
+        self,
+        block_size: int = BLOCK_SIZE_DEFAULT,
+        versions_kept: int = 16,
+        policy: CachePolicy = CachePolicy.INVALIDATE,
+        hot_threshold: int = 3,
+        log_horizon: int = 4096,
+        rpc_latency_s: float = 0.0,
+    ):
+        self.store = BlockStore(block_size, versions_kept)
+        self.policy = policy
+        self.hot_threshold = hot_threshold
+        self.log_horizon = log_horizon
+        self.rpc_latency_s = rpc_latency_s
+        self._commit_lock = threading.Lock()
+        self._ts = 0  # sequencer
+        self._log: List[CommitRecord] = []
+        self._fetch_counts: Dict[BlockKey, int] = defaultdict(int)
+        self.stats = BackendStats()
+
+    def _rpc(self) -> None:
+        """Simulated network round trip (benchmarks model the paper's EC2
+        setting where begin/commit/fetch each cost one RPC; 0 in tests)."""
+        if self.rpc_latency_s:
+            import time
+
+            time.sleep(self.rpc_latency_s)
+
+    # ------------------------------------------------------------------ #
+    # sequencer
+    # ------------------------------------------------------------------ #
+    @property
+    def latest_ts(self) -> Timestamp:
+        return self._ts
+
+    def _next_ts(self) -> Timestamp:
+        self._ts += 1
+        return self._ts
+
+    # ------------------------------------------------------------------ #
+    # begin: hand out T_R + cache-update message per policy
+    # ------------------------------------------------------------------ #
+    def begin(
+        self,
+        last_sync_ts: Timestamp,
+        cached_keys: Optional[Set[BlockKey]] = None,
+        policy: Optional[CachePolicy] = None,
+    ) -> BeginReply:
+        policy = policy or self.policy
+        self.stats.begins += 1
+        self._rpc()
+        with self._commit_lock:
+            read_ts = self._ts
+            changed: Dict[BlockKey, bool] = {}
+            changed_files: Set[FileId] = set()
+            for rec in reversed(self._log):
+                if rec.ts <= last_sync_ts:
+                    break
+                for k in rec.blocks:
+                    changed[k] = True
+                changed_files.update(rec.meta_files)
+
+        updates: Dict[BlockKey, Tuple[Timestamp, bytes]] = {}
+        invals: List[BlockKey] = []
+        file_invals: List[FileId] = []
+        if policy == CachePolicy.STALE:
+            pass
+        elif policy == CachePolicy.LAZY:
+            # client defers to per-file sync on first open
+            file_invals = sorted(changed_files)
+        else:
+            relevant = [
+                k for k in changed
+                if cached_keys is None or k in cached_keys
+            ]
+            for k in relevant:
+                push = policy == CachePolicy.EAGER or (
+                    policy == CachePolicy.FREQUENT
+                    and self._fetch_counts[k] >= self.hot_threshold
+                )
+                if push:
+                    ts, data = self.store.block(k)
+                    updates[k] = (ts, data)
+                    self.stats.blocks_pushed += 1
+                    self.stats.bytes_pushed += len(data)
+                else:
+                    invals.append(k)
+                    self.stats.blocks_invalidated += 1
+        return BeginReply(read_ts, updates, invals, file_invals)
+
+    def sync_file(
+        self, fid: FileId, known_versions: Dict[BlockKey, Timestamp]
+    ) -> Dict[BlockKey, Tuple[Timestamp, bytes]]:
+        """Lazy policy: bring one file's cached blocks current."""
+        self._rpc()
+        out: Dict[BlockKey, Tuple[Timestamp, bytes]] = {}
+        for key in self.store.blocks_of(fid):
+            cur = self.store.block_version(key)
+            if known_versions.get(key, -1) != cur:
+                ts, data = self.store.block(key)
+                out[key] = (ts, data)
+                self.stats.blocks_pushed += 1
+                self.stats.bytes_pushed += len(data)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # reads (cache miss path) — multiversion via the undo log
+    # ------------------------------------------------------------------ #
+    def fetch_block(
+        self, key: BlockKey, at_ts: Optional[Timestamp] = None
+    ) -> Tuple[Timestamp, bytes]:
+        self.stats.block_fetches += 1
+        self._fetch_counts[key] += 1
+        self._rpc()
+        return self.store.block(key, at_ts)
+
+    def fetch_meta(self, fid: FileId, at_ts: Optional[Timestamp] = None):
+        return self.store.meta(fid, at_ts)
+
+    def lookup(self, path: str, at_ts: Optional[Timestamp] = None):
+        return self.store.lookup(path, at_ts)
+
+    # ------------------------------------------------------------------ #
+    # commit: OCC validation + atomic apply
+    # ------------------------------------------------------------------ #
+    def commit(self, payload: TxnPayload) -> Timestamp:
+        """Validate and apply. Raises Conflict on validation failure."""
+        self._rpc()
+        if payload.read_only and not (
+            payload.writes or payload.meta_updates or payload.name_updates
+        ):
+            # snapshot-read transaction: serializes at its T_R; no validation
+            self.stats.commits += 1
+            return payload.read_ts
+
+        with self._commit_lock:
+            bad: List = []
+            # 1. block read validation (observed version still current)
+            for r in payload.reads:
+                self.stats.validation_checks += 1
+                if self.store.block_version(r.key) != r.version:
+                    bad.append(("block", r.key))
+            # 2. name resolution validation
+            for path, ver in payload.name_reads.items():
+                if self.store.name_version(path) != ver:
+                    bad.append(("name", path))
+            # 3. metadata (length) version validation
+            for fid, ver in payload.meta_reads.items():
+                try:
+                    cur_ver, _ = self.store.meta(fid)
+                except Exception:
+                    cur_ver = -1
+                if cur_ver != ver:
+                    bad.append(("meta", fid))
+            # 4. length predicates (paper §4.2: reads assert file length)
+            for pred in payload.predicates:
+                try:
+                    _, meta = self.store.meta(pred.file_id)
+                    length = meta.length if meta.exists else -1
+                except Exception:
+                    length = -1
+                if not pred.holds(length):
+                    bad.append(("predicate", pred))
+            if bad:
+                self.stats.aborts += 1
+                raise Conflict(f"validation failed on {len(bad)} item(s)", bad)
+
+            # 5. apply atomically at the next commit timestamp
+            ts = self._next_ts()
+            touched_blocks: List[BlockKey] = []
+            for w in payload.writes:
+                _, base = self.store.block(w.key)
+                self.store.put_block(
+                    w.key, w.apply_to(base, self.store.block_size), ts
+                )
+                touched_blocks.append(w.key)
+            touched_files: List[FileId] = []
+            for fid, new_len in payload.meta_updates.items():
+                if new_len is None:
+                    self.store.put_meta(fid, FileMeta(0, exists=False), ts)
+                else:
+                    self.store.put_meta(fid, FileMeta(new_len, exists=True), ts)
+                touched_files.append(fid)
+            touched_names: List[str] = []
+            for path, fid in payload.name_updates.items():
+                self.store.bind_name(path, fid, ts)
+                touched_names.append(path)
+            self._log.append(
+                CommitRecord(ts, touched_blocks, touched_files, touched_names)
+            )
+            if len(self._log) > self.log_horizon:
+                del self._log[: len(self._log) - self.log_horizon]
+            self.stats.commits += 1
+            return ts
+
+    # convenience for tests / benchmarks
+    def alloc_file_id(self) -> FileId:
+        return self.store.alloc_file_id()

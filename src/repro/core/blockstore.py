@@ -1,0 +1,170 @@
+"""Multiversioned block store + undo log (the backend's storage engine).
+
+Each block carries a bounded version chain ``[(commit_ts, bytes), ...]``
+(newest last). The newest entry is the current state; older entries are the
+undo log that serves snapshot reads at a historical read timestamp — the
+paper's mechanism for letting intermittently-connected clients with stale
+caches keep making progress (FaaSFS §4.2: "uses the Undo Log to retrieve an
+older version of the block").
+
+File metadata (length, existence) is versioned the same way, because POSIX
+makes every read implicitly a predicate on the file length.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.types import BlockKey, FileId, NotFound, Timestamp
+
+
+class SnapshotTooOld(Exception):
+    """The requested version was garbage-collected from the undo log."""
+
+
+@dataclass
+class Versioned:
+    """A bounded version chain; newest last."""
+
+    versions: List[Tuple[Timestamp, object]] = field(default_factory=list)
+    truncated: bool = False  # True once GC dropped old entries
+
+    def current(self) -> Tuple[Timestamp, object]:
+        return self.versions[-1]
+
+    def at(self, ts: Timestamp) -> Optional[Tuple[Timestamp, object]]:
+        """Latest version with commit_ts <= ts (snapshot read).
+
+        Raises SnapshotTooOld when the needed undo entry was GC'd — never
+        silently serves wrong data. A chain whose oldest entry postdates
+        ``ts`` WITHOUT truncation simply didn't exist at the snapshot
+        (returns None).
+        """
+        for cts, val in reversed(self.versions):
+            if cts <= ts:
+                return cts, val
+        if self.versions and self.truncated:
+            raise SnapshotTooOld(
+                f"oldest retained version {self.versions[0][0]} > snapshot {ts}"
+            )
+        return None
+
+    def put(self, ts: Timestamp, value: object, keep: int) -> None:
+        self.versions.append((ts, value))
+        if len(self.versions) > keep:
+            del self.versions[: len(self.versions) - keep]
+            self.truncated = True
+
+
+@dataclass
+class FileMeta:
+    length: int
+    exists: bool = True
+
+
+class BlockStore:
+    """In-memory versioned store: blocks + file metadata + namespace.
+
+    Thread-safe for concurrent readers; writers (commit apply) must hold the
+    backend's commit lock — this class only guards its own maps.
+    """
+
+    def __init__(self, block_size: int, versions_kept: int = 16):
+        self.block_size = block_size
+        self.versions_kept = versions_kept
+        self._blocks: Dict[BlockKey, Versioned] = {}
+        self._meta: Dict[FileId, Versioned] = {}
+        self._names: Dict[str, Versioned] = {}  # path -> file_id (or None)
+        self._lock = threading.RLock()
+        self._next_file_id = 1
+
+    # ------------------------------------------------------------------ #
+    # namespace
+    # ------------------------------------------------------------------ #
+    def alloc_file_id(self) -> FileId:
+        with self._lock:
+            fid = self._next_file_id
+            self._next_file_id += 1
+            return fid
+
+    def bind_name(self, path: str, fid: Optional[FileId], ts: Timestamp) -> None:
+        with self._lock:
+            v = self._names.setdefault(path, Versioned())
+            v.put(ts, fid, self.versions_kept)
+
+    def lookup(self, path: str, ts: Optional[Timestamp] = None) -> Optional[FileId]:
+        with self._lock:
+            v = self._names.get(path)
+            if v is None or not v.versions:
+                return None
+            ent = v.at(ts) if ts is not None else v.current()
+            return None if ent is None else ent[1]  # type: ignore[return-value]
+
+    def name_version(self, path: str) -> Timestamp:
+        with self._lock:
+            v = self._names.get(path)
+            return v.current()[0] if v and v.versions else 0
+
+    def listdir(self, prefix: str, ts: Optional[Timestamp] = None) -> List[str]:
+        if not prefix.endswith("/"):
+            prefix += "/"
+        with self._lock:
+            out = []
+            for path, v in self._names.items():
+                if not path.startswith(prefix):
+                    continue
+                ent = v.at(ts) if ts is not None else (v.current() if v.versions else None)
+                if ent is not None and ent[1] is not None:
+                    rest = path[len(prefix):]
+                    if rest and "/" not in rest:
+                        out.append(rest)
+            return sorted(out)
+
+    # ------------------------------------------------------------------ #
+    # metadata
+    # ------------------------------------------------------------------ #
+    def put_meta(self, fid: FileId, meta: FileMeta, ts: Timestamp) -> None:
+        with self._lock:
+            v = self._meta.setdefault(fid, Versioned())
+            v.put(ts, meta, self.versions_kept)
+
+    def meta(self, fid: FileId, ts: Optional[Timestamp] = None) -> Tuple[Timestamp, FileMeta]:
+        with self._lock:
+            v = self._meta.get(fid)
+            if v is None or not v.versions:
+                raise NotFound(f"file {fid}")
+            ent = v.at(ts) if ts is not None else v.current()
+            if ent is None:
+                raise NotFound(f"file {fid} @ {ts}")
+            return ent  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------ #
+    # blocks
+    # ------------------------------------------------------------------ #
+    def put_block(self, key: BlockKey, data: bytes, ts: Timestamp) -> None:
+        with self._lock:
+            v = self._blocks.setdefault(key, Versioned())
+            v.put(ts, data, self.versions_kept)
+
+    def block(
+        self, key: BlockKey, ts: Optional[Timestamp] = None
+    ) -> Tuple[Timestamp, bytes]:
+        """(version_ts, bytes) — zero block if never written."""
+        with self._lock:
+            v = self._blocks.get(key)
+            if v is None or not v.versions:
+                return 0, b"\0" * self.block_size
+            ent = v.at(ts) if ts is not None else v.current()
+            if ent is None:
+                return 0, b"\0" * self.block_size
+            return ent  # type: ignore[return-value]
+
+    def block_version(self, key: BlockKey) -> Timestamp:
+        with self._lock:
+            v = self._blocks.get(key)
+            return v.current()[0] if v and v.versions else 0
+
+    def blocks_of(self, fid: FileId) -> Iterable[BlockKey]:
+        with self._lock:
+            return [k for k in self._blocks if k[0] == fid]

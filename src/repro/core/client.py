@@ -1,0 +1,384 @@
+"""The FaaSFS Local Server + Transactional Client (paper §4.1, Fig 2-3).
+
+One ``LocalServer`` lives inside each cloud-function instance (for us: each
+training/serving worker). It holds the block cache across invocations (the
+paper's key performance lever: instances are reused, caches survive between
+requests) and speaks to the ``BackendService``.
+
+A ``Transaction`` is implicitly created per function invocation: all lock
+and read operations succeed locally and speculatively; reads record the
+observed block versions in **R**, writes buffer (offset, bytes) patches in
+**W**, and POSIX length semantics are captured as predicates — all shipped
+to the backend at commit for OCC validation.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.backend import BackendService, BeginReply, TxnPayload
+from repro.core.types import (
+    BlockKey,
+    CachePolicy,
+    Conflict,
+    FileId,
+    LengthPredicate,
+    NotFound,
+    PredicateKind,
+    ReadRecord,
+    Timestamp,
+    TxnStateError,
+    WriteRecord,
+)
+
+
+@dataclass
+class CacheEntry:
+    version: Timestamp
+    data: bytes
+
+
+class LocalServer:
+    """Per-worker block cache + backend connection (survives invocations)."""
+
+    def __init__(
+        self,
+        backend: BackendService,
+        policy: Optional[CachePolicy] = None,
+        max_blocks: int = 65536,
+    ):
+        self.backend = backend
+        self.policy = policy or backend.policy
+        self.max_blocks = max_blocks
+        self.cache: Dict[BlockKey, CacheEntry] = {}
+        self.synced_files: Dict[FileId, Timestamp] = {}
+        self.last_sync_ts: Timestamp = 0
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------ #
+    def begin(self, read_only: bool = False) -> "Transaction":
+        reply = self.backend.begin(
+            self.last_sync_ts, set(self.cache), self.policy
+        )
+        with self._lock:
+            for key, (ver, data) in reply.updates.items():
+                self._put(key, ver, data)
+            for key in reply.invalidations:
+                self.cache.pop(key, None)
+            for fid in reply.file_invalidations:
+                self.synced_files.pop(fid, None)
+                for key in [k for k in self.cache if k[0] == fid]:
+                    self.cache.pop(key, None)
+            if self.policy != CachePolicy.STALE:
+                self.last_sync_ts = reply.read_ts
+        return Transaction(self, reply.read_ts, read_only=read_only)
+
+    def _put(self, key: BlockKey, version: Timestamp, data: bytes) -> None:
+        if len(self.cache) >= self.max_blocks:
+            # simple clock-ish eviction: drop an arbitrary cold entry
+            self.cache.pop(next(iter(self.cache)))
+        self.cache[key] = CacheEntry(version, data)
+
+    def cached_read(
+        self, key: BlockKey, at_ts: Optional[Timestamp] = None
+    ) -> Tuple[Timestamp, bytes]:
+        with self._lock:
+            ent = self.cache.get(key)
+            if ent is not None:
+                if at_ts is None:
+                    # optimistic path: staleness is caught at commit validation
+                    self.hits += 1
+                    return ent.version, ent.data
+                if ent.version <= at_ts and self.last_sync_ts >= at_ts:
+                    # snapshot path: the entry is provably the latest version
+                    # <= at_ts only if the cache has been synced past at_ts
+                    self.hits += 1
+                    return ent.version, ent.data
+        self.misses += 1
+        ver, data = self.backend.fetch_block(key, at_ts)
+        with self._lock:
+            if at_ts is None:
+                self._put(key, ver, data)
+        return ver, data
+
+    def lazy_sync_file(self, fid: FileId) -> None:
+        if self.policy != CachePolicy.LAZY:
+            return
+        with self._lock:
+            if self.synced_files.get(fid, -1) >= self.last_sync_ts:
+                return
+            known = {
+                k: e.version for k, e in self.cache.items() if k[0] == fid
+            }
+        updates = self.backend.sync_file(fid, known)
+        with self._lock:
+            for key, (ver, data) in updates.items():
+                self._put(key, ver, data)
+            self.synced_files[fid] = self.last_sync_ts
+
+
+@dataclass
+class _TxnFile:
+    fid: FileId
+    length: int           # txn-local view of the length
+    base_length: int      # committed length observed
+    meta_version: Timestamp
+    dirty_meta: bool = False
+
+
+class Transaction:
+    """One function invocation's implicit transaction."""
+
+    def __init__(self, local: LocalServer, read_ts: Timestamp, read_only: bool = False):
+        self.local = local
+        self.backend = local.backend
+        self.read_ts = read_ts
+        self.read_only = read_only
+        self.block_size = self.backend.store.block_size
+        self.reads: Dict[BlockKey, Timestamp] = {}
+        self.writes: Dict[BlockKey, WriteRecord] = {}
+        self.predicates: List[LengthPredicate] = []
+        self.name_reads: Dict[str, Timestamp] = {}
+        self.name_updates: Dict[str, Optional[FileId]] = {}
+        self.meta_reads: Dict[FileId, Timestamp] = {}
+        self._files: Dict[FileId, _TxnFile] = {}
+        self._created: Set[FileId] = set()
+        self._deleted: Set[FileId] = set()
+        self.done = False
+
+    # ------------------------------------------------------------------ #
+    # namespace
+    # ------------------------------------------------------------------ #
+    def lookup(self, path: str) -> Optional[FileId]:
+        at = self.read_ts if self.read_only else None
+        if path in self.name_updates:
+            return self.name_updates[path]
+        fid = self.backend.lookup(path, at)
+        if not self.read_only:
+            self.name_reads[path] = self.backend.store.name_version(path)
+        return fid
+
+    def create(self, path: str, exist_ok: bool = False) -> FileId:
+        self._check_open()
+        existing = self.lookup(path)
+        if existing is not None:
+            if exist_ok:
+                return existing
+            from repro.core.types import Exists
+
+            raise Exists(path)
+        fid = self.backend.alloc_file_id()
+        self.name_updates[path] = fid
+        self._files[fid] = _TxnFile(fid, 0, 0, 0, dirty_meta=True)
+        self._created.add(fid)
+        return fid
+
+    def unlink(self, path: str) -> None:
+        self._check_open()
+        fid = self.lookup(path)
+        if fid is None:
+            raise NotFound(path)
+        self.name_updates[path] = None
+        tf = self._file(fid)
+        tf.dirty_meta = True
+        tf.length = 0
+        self._files[fid] = tf
+        self._deleted.add(fid)
+
+    def rename(self, src: str, dst: str) -> None:
+        """Atomic rename (POSIX: never visible under both names)."""
+        self._check_open()
+        fid = self.lookup(src)
+        if fid is None:
+            raise NotFound(src)
+        self.name_updates[src] = None
+        self.name_updates[dst] = fid
+
+    # ------------------------------------------------------------------ #
+    # file state
+    # ------------------------------------------------------------------ #
+    def _file(self, fid: FileId) -> _TxnFile:
+        tf = self._files.get(fid)
+        if tf is None:
+            at = self.read_ts if self.read_only else None
+            try:
+                ver, meta = self.backend.fetch_meta(fid, at)
+            except NotFound:
+                ver, meta = 0, None
+            if meta is None or not meta.exists:
+                raise NotFound(f"file {fid}")
+            if not self.read_only:
+                self.meta_reads.setdefault(fid, ver)
+            self.local.lazy_sync_file(fid)
+            tf = _TxnFile(fid, meta.length, meta.length, ver)
+            self._files[fid] = tf
+        return tf
+
+    def length(self, fid: FileId) -> int:
+        tf = self._file(fid)
+        if not tf.dirty_meta:
+            # stat pins the exact length (EQ predicate)
+            self.predicates.append(
+                LengthPredicate(fid, PredicateKind.EQ, tf.base_length)
+            )
+        return tf.length
+
+    # ------------------------------------------------------------------ #
+    # byte-level read/write (the POSIX layer calls these)
+    # ------------------------------------------------------------------ #
+    def _read_block(self, key: BlockKey) -> bytes:
+        at = self.read_ts if self.read_only else None
+        ver, data = self.local.cached_read(key, at)
+        if not self.read_only:
+            self.reads.setdefault(key, ver)
+        w = self.writes.get(key)
+        if w is not None:
+            data = w.apply_to(data, self.block_size)
+        return data
+
+    def read(self, fid: FileId, offset: int, size: int) -> bytes:
+        self._check_open()
+        tf = self._file(fid)
+        if offset >= tf.length:
+            # read beyond EOF: returns empty, asserts filelength <= offset
+            if not tf.dirty_meta:
+                self.predicates.append(
+                    LengthPredicate(fid, PredicateKind.GE, 0)
+                )
+                self.predicates.append(
+                    LengthPredicate(fid, PredicateKind.LE, offset)
+                )
+            return b""
+        end = min(offset + size, tf.length)
+        truncated = end < offset + size
+        if not tf.dirty_meta:
+            if truncated:
+                self.predicates.append(
+                    LengthPredicate(fid, PredicateKind.EQ, tf.base_length)
+                )
+            else:
+                self.predicates.append(
+                    LengthPredicate(fid, PredicateKind.GE, end)
+                )
+        out = bytearray()
+        b0, b1 = offset // self.block_size, (end - 1) // self.block_size
+        for bi in range(b0, b1 + 1):
+            data = self._read_block((fid, bi))
+            lo = offset - bi * self.block_size if bi == b0 else 0
+            hi = end - bi * self.block_size if bi == b1 else self.block_size
+            out += data[lo:hi]
+        return bytes(out)
+
+    def write(self, fid: FileId, offset: int, data: bytes) -> int:
+        self._check_open()
+        if self.read_only:
+            raise TxnStateError("write in read-only transaction")
+        tf = self._file(fid)
+        end = offset + len(data)
+        b0, b1 = offset // self.block_size, max(offset, end - 1) // self.block_size
+        pos = 0
+        for bi in range(b0, b1 + 1):
+            lo = offset - bi * self.block_size if bi == b0 else 0
+            hi = min(end - bi * self.block_size, self.block_size)
+            n = hi - lo
+            w = self.writes.setdefault((fid, bi), WriteRecord((fid, bi)))
+            w.add(lo, data[pos : pos + n])
+            pos += n
+        if end > tf.length:
+            tf.length = end
+            tf.dirty_meta = True
+        return len(data)
+
+    def truncate(self, fid: FileId, length: int) -> None:
+        self._check_open()
+        tf = self._file(fid)
+        if length < tf.length:
+            # POSIX: bytes past the new length must read as zeros if the
+            # file later regrows — zero the boundary block's tail AND every
+            # later block that held data (property tests caught the
+            # boundary-only version leaking stale bytes).
+            bi = length // self.block_size
+            lo = length - bi * self.block_size
+            w = self.writes.setdefault((fid, bi), WriteRecord((fid, bi)))
+            w.add(lo, b"\0" * (self.block_size - lo))
+            last_old = (tf.length - 1) // self.block_size
+            for bj in range(bi + 1, last_old + 1):
+                w = self.writes.setdefault((fid, bj), WriteRecord((fid, bj)))
+                w.add(0, b"\0" * self.block_size)
+        tf.length = length
+        tf.dirty_meta = True
+
+    # ------------------------------------------------------------------ #
+    # commit / abort
+    # ------------------------------------------------------------------ #
+    def payload(self) -> TxnPayload:
+        deleted = self._deleted
+        meta_updates: Dict[FileId, Optional[int]] = {}
+        for fid, tf in self._files.items():
+            if fid in deleted:
+                meta_updates[fid] = None
+            elif tf.dirty_meta:
+                meta_updates[fid] = tf.length
+        return TxnPayload(
+            read_ts=self.read_ts,
+            reads=[ReadRecord(k, v) for k, v in self.reads.items()],
+            writes=list(self.writes.values()),
+            predicates=self.predicates,
+            meta_updates=meta_updates,
+            name_updates=self.name_updates,
+            name_reads={} if self.read_only else self.name_reads,
+            meta_reads={} if self.read_only else self.meta_reads,
+            read_only=self.read_only,
+        )
+
+    def commit(self) -> Timestamp:
+        self._check_open()
+        self.done = True
+        payload = self.payload()
+        try:
+            ts = self.backend.commit(payload)
+        except Conflict:
+            # drop local cache entries for conflicting keys so the retry
+            # re-fetches fresh state
+            for w in payload.writes:
+                self.local.cache.pop(w.key, None)
+            for r in payload.reads:
+                self.local.cache.pop(r.key, None)
+            raise
+        # Write-through committed blocks we can reconstruct exactly: if the
+        # txn READ the block, our cached base is the validated base the
+        # backend patched, so patch-apply is exact. Blind writes (base never
+        # observed) are invalidated instead — the backend may have patched a
+        # different base.
+        with self.local._lock:
+            for w in payload.writes:
+                ent = self.local.cache.get(w.key)
+                if w.key in self.reads and ent is not None and ent.version == self.reads[w.key]:
+                    self.local._put(w.key, ts, w.apply_to(ent.data, self.block_size))
+                else:
+                    fully_covered = w.apply_to(b"", self.block_size)
+                    covered = bytearray(self.block_size)
+                    n = 0
+                    for off, data in w.patches:
+                        for i in range(off, min(off + len(data), self.block_size)):
+                            if not covered[i]:
+                                covered[i] = 1
+                                n += 1
+                    if n == self.block_size:
+                        self.local._put(w.key, ts, fully_covered)
+                    else:
+                        self.local.cache.pop(w.key, None)
+            # NOTE: last_sync_ts must NOT advance here — other clients may
+            # have committed between our begin and our commit, and we have
+            # not seen their cache updates (snapshot reads rely on this).
+        return ts
+
+    def abort(self) -> None:
+        self.done = True
+
+    def _check_open(self) -> None:
+        if self.done:
+            raise TxnStateError("transaction already finished")

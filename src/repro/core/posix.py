@@ -1,0 +1,175 @@
+"""POSIX-style file API over the transactional client (paper Fig 2).
+
+This is the layer the paper's own workloads exercise: open/close, positioned
+and sequential read/write, lseek, ftruncate, fsync, rename, unlink, mkdir /
+readdir, stat. Calls are routed by path prefix (default ``/mnt/tsfs``),
+mirroring the paper's syscall-intercept routing; operations outside the
+prefix raise (in the real system they fall through to the kernel).
+
+Locks (flock/fcntl) are *elided optimistically*: they always succeed locally
+and are recorded as reads of a lock block, so commit validation enforces the
+serialization they would have provided (paper §3.1 "optimistic lock
+elision").
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.client import Transaction
+from repro.core.types import Exists, NotFound, WriteRecord
+
+O_CREAT = os.O_CREAT
+O_TRUNC = os.O_TRUNC
+O_APPEND = os.O_APPEND
+O_EXCL = os.O_EXCL
+
+SEEK_SET, SEEK_CUR, SEEK_END = 0, 1, 2
+
+
+@dataclass
+class _FD:
+    fid: int
+    path: str
+    pos: int = 0
+    append: bool = False
+
+
+class FaaSFS:
+    """POSIX facade bound to one transaction (one function invocation)."""
+
+    def __init__(self, txn: Transaction, mount: str = "/mnt/tsfs"):
+        self.txn = txn
+        self.mount = mount.rstrip("/")
+        self._fds: Dict[int, _FD] = {}
+        self._next_fd = 3
+
+    # ------------------------------------------------------------------ #
+    def _norm(self, path: str) -> str:
+        p = os.path.normpath(path)
+        if not p.startswith(self.mount + "/") and p != self.mount:
+            raise ValueError(f"path {path!r} outside FaaSFS mount {self.mount}")
+        return p
+
+    # ------------------------------------------------------------------ #
+    def open(self, path: str, flags: int = 0) -> int:
+        p = self._norm(path)
+        fid = self.txn.lookup(p)
+        if fid is None:
+            if not flags & O_CREAT:
+                raise NotFound(p)
+            fid = self.txn.create(p)
+        elif flags & O_CREAT and flags & O_EXCL:
+            raise Exists(p)
+        if flags & O_TRUNC:
+            self.txn.truncate(fid, 0)
+        fd = self._next_fd
+        self._next_fd += 1
+        self._fds[fd] = _FD(fid, p, append=bool(flags & O_APPEND))
+        return fd
+
+    def close(self, fd: int) -> None:
+        self._fds.pop(fd)
+
+    def _fd(self, fd: int) -> _FD:
+        try:
+            return self._fds[fd]
+        except KeyError:
+            raise OSError(f"bad fd {fd}") from None
+
+    # ------------------------------------------------------------------ #
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        f = self._fd(fd)
+        return self.txn.read(f.fid, offset, size)
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        f = self._fd(fd)
+        return self.txn.write(f.fid, offset, data)
+
+    def read(self, fd: int, size: int) -> bytes:
+        f = self._fd(fd)
+        out = self.txn.read(f.fid, f.pos, size)
+        f.pos += len(out)
+        return out
+
+    def write(self, fd: int, data: bytes) -> int:
+        f = self._fd(fd)
+        if f.append:
+            f.pos = self.txn.length(f.fid)
+        n = self.txn.write(f.fid, f.pos, data)
+        f.pos += n
+        return n
+
+    def lseek(self, fd: int, offset: int, whence: int = SEEK_SET) -> int:
+        f = self._fd(fd)
+        if whence == SEEK_SET:
+            f.pos = offset
+        elif whence == SEEK_CUR:
+            f.pos += offset
+        else:
+            f.pos = self.txn.length(f.fid) + offset
+        return f.pos
+
+    def ftruncate(self, fd: int, length: int) -> None:
+        f = self._fd(fd)
+        self.txn.truncate(f.fid, length)
+
+    def fsync(self, fd: int) -> None:
+        # durability is provided by atomic commit at function boundary;
+        # fsync is a no-op that still validates the fd (paper: sync time
+        # largely disappears into commit)
+        self._fd(fd)
+
+    def fstat(self, fd: int) -> Dict[str, int]:
+        f = self._fd(fd)
+        return {"st_size": self.txn.length(f.fid)}
+
+    # ------------------------------------------------------------------ #
+    def stat(self, path: str) -> Dict[str, int]:
+        p = self._norm(path)
+        fid = self.txn.lookup(p)
+        if fid is None:
+            raise NotFound(p)
+        return {"st_size": self.txn.length(fid)}
+
+    def unlink(self, path: str) -> None:
+        self.txn.unlink(self._norm(path))
+
+    def rename(self, src: str, dst: str) -> None:
+        self.txn.rename(self._norm(src), self._norm(dst))
+
+    def mkdir(self, path: str) -> None:
+        # directories are implicit (prefix namespace); record a marker so
+        # readdir on empty dirs works
+        p = self._norm(path)
+        self.txn.create(p + "/.dir", exist_ok=True)
+
+    def readdir(self, path: str) -> List[str]:
+        p = self._norm(path)
+        at = self.txn.read_ts if self.txn.read_only else None
+        names = self.txn.backend.store.listdir(p, at)
+        return [n for n in names if n != ".dir"]
+
+    def exists(self, path: str) -> bool:
+        try:
+            return self.txn.lookup(self._norm(path)) is not None
+        except ValueError:
+            raise
+        except Exception:
+            return False
+
+    # ------------------------------------------------------------------ #
+    # optimistic lock elision: flock always succeeds; the lock word is a
+    # block read+write so conflicting lockers fail validation at commit.
+    # ------------------------------------------------------------------ #
+    def flock(self, fd: int, exclusive: bool = True) -> None:
+        f = self._fd(fd)
+        key = (f.fid, 1 << 30)  # reserved lock block index
+        self.txn._read_block(key)
+        if exclusive:
+            w = self.txn.writes.setdefault(key, WriteRecord(key))
+            w.add(0, b"L")
+
+    def funlock(self, fd: int) -> None:
+        self._fd(fd)

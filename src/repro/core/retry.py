@@ -1,0 +1,71 @@
+"""Function-grained execution: implicit transactions + retry on conflict.
+
+``run_function`` is the FaaS invocation wrapper: BEGIN at entry, COMMIT at
+return (the paper's transparent transaction boundaries). The function must
+be retry-safe — exactly the idempotence contract cloud platforms already
+impose — and atomic commit upgrades that contract to exactly-once visible
+effects (paper §3.3, citing AFT [68]).
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.core.client import LocalServer, Transaction
+from repro.core.posix import FaaSFS
+from repro.core.types import Conflict
+
+
+@dataclass
+class InvocationStats:
+    attempts: int = 0
+    aborts: int = 0
+    commit_ts: int = 0
+    wall_s: float = 0.0
+
+
+def run_function(
+    local: LocalServer,
+    fn: Callable[[FaaSFS], Any],
+    *,
+    read_only: bool = False,
+    max_retries: int = 64,
+    backoff_s: float = 0.0005,
+    mount: str = "/mnt/tsfs",
+    stats: Optional[InvocationStats] = None,
+) -> Any:
+    """Invoke ``fn`` as a cloud function with an implicit transaction."""
+    t0 = time.perf_counter()
+    last: Optional[Conflict] = None
+    for attempt in range(max_retries):
+        txn = local.begin(read_only=read_only)
+        fs = FaaSFS(txn, mount=mount)
+        if stats:
+            stats.attempts += 1
+        try:
+            result = fn(fs)
+        except Conflict as c:  # pragma: no cover - functions normally don't
+            txn.abort()
+            last = c
+            continue
+        except BaseException:
+            txn.abort()
+            raise
+        try:
+            ts = txn.commit()
+            if stats:
+                stats.commit_ts = ts
+                stats.wall_s = time.perf_counter() - t0
+            return result
+        except Conflict as c:
+            last = c
+            if stats:
+                stats.aborts += 1
+            if backoff_s:
+                time.sleep(backoff_s * (1 + random.random()) * min(attempt + 1, 8))
+    raise Conflict(
+        f"function failed to commit after {max_retries} attempts: {last}",
+        last.keys if last else [],
+    )

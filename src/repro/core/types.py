@@ -1,0 +1,93 @@
+"""Core types for the FaaSFS transactional block store."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Tuple
+
+BLOCK_SIZE_DEFAULT = 4096           # POSIX byte-file layer
+TENSOR_BLOCK_BYTES = 4 * 2**20      # tensor-state layer (4 MiB slabs)
+
+Timestamp = int
+FileId = int
+BlockKey = Tuple[int, int]          # (file_id, block_index)
+
+
+class Conflict(Exception):
+    """Raised when OCC validation fails at commit; the function must retry."""
+
+    def __init__(self, reason: str, keys: Optional[List] = None):
+        super().__init__(reason)
+        self.reason = reason
+        self.keys = keys or []
+
+
+class NotFound(Exception):
+    pass
+
+
+class Exists(Exception):
+    pass
+
+
+class TxnStateError(Exception):
+    pass
+
+
+class PredicateKind(Enum):
+    GE = "ge"   # filelength >= n  (read fully within file)
+    LE = "le"   # filelength <= n  (read started beyond EOF)
+    EQ = "eq"   # filelength == n  (read truncated by EOF / explicit stat)
+
+
+@dataclass(frozen=True)
+class LengthPredicate:
+    file_id: FileId
+    kind: PredicateKind
+    value: int
+
+    def holds(self, length: int) -> bool:
+        if self.kind == PredicateKind.GE:
+            return length >= self.value
+        if self.kind == PredicateKind.LE:
+            return length <= self.value
+        return length == self.value
+
+
+@dataclass
+class ReadRecord:
+    """A block read: the version timestamp actually observed.
+
+    The paper records (blocknum, T_R) and relies on begin-time cache sync;
+    recording the observed version validates identically under the eager /
+    lazy policies and stays correct under the 'leave stale' policy (see
+    core/backend.py docstring).
+    """
+
+    key: BlockKey
+    version: Timestamp
+
+
+@dataclass
+class WriteRecord:
+    """Partial block update: list of (offset, bytes) patches within a block."""
+
+    key: BlockKey
+    patches: List[Tuple[int, bytes]] = field(default_factory=list)
+
+    def apply_to(self, base: bytes, block_size: int) -> bytes:
+        buf = bytearray(base.ljust(block_size, b"\0"))
+        for off, data in self.patches:
+            buf[off : off + len(data)] = data
+        return bytes(buf)
+
+    def add(self, offset: int, data: bytes) -> None:
+        self.patches.append((offset, data))
+
+
+class CachePolicy(Enum):
+    EAGER = "eager"        # push data for all changed blocks at txn begin
+    LAZY = "lazy"          # file-level sync on first access within the txn
+    INVALIDATE = "invalidate"  # block-level invalidations only, fetch on miss
+    STALE = "stale"        # do nothing; commit validation catches misreads
+    FREQUENT = "frequent"  # push hot blocks (fetch-frequency heuristic), invalidate rest

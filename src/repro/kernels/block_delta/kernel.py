@@ -1,0 +1,63 @@
+"""Block-delta Pallas kernel: the paper's fine-grained change tracking,
+computed on-device.
+
+Given the new and previous values of a flat parameter buffer laid out in
+FaaSFS blocks, one grid step per block computes, entirely in VMEM:
+
+  * the block's delta L2 norm^2 (dirty detection / significance),
+  * the block's max-abs (int8 quantization scale),
+  * the int8-quantized delta.
+
+The commit path then ships only blocks whose norm clears a threshold, as
+int8 + one fp32 scale — the paper's block-granular cache-update protocol
+doubling as gradient/update compression (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _delta_kernel(new_ref, old_ref, q_ref, norm_ref, scale_ref):
+    new = new_ref[...].astype(jnp.float32)      # (1, block)
+    old = old_ref[...].astype(jnp.float32)
+    diff = new - old
+    norm2 = jnp.sum(diff * diff)
+    maxabs = jnp.max(jnp.abs(diff))
+    scale = jnp.where(maxabs > 0, maxabs / 127.0, 1.0)
+    q = jnp.clip(jnp.round(diff / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q
+    norm_ref[0, 0] = norm2
+    scale_ref[0, 0] = scale
+
+
+def block_delta(
+    new: jax.Array,      # (nblocks, block_elems)
+    old: jax.Array,      # (nblocks, block_elems)
+    *,
+    interpret: bool = False,
+):
+    """Returns (q int8 (nblocks, block_elems), norm2 (nblocks,), scale (nblocks,))."""
+    nb, be = new.shape
+    q, norm2, scale = pl.pallas_call(
+        _delta_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, be), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(new, old)
+    return q, norm2[:, 0], scale[:, 0]

@@ -1,0 +1,44 @@
+"""Jit'd public wrapper: layout adaptation + impl dispatch.
+
+Model code uses (B, S, H, hd); the kernel wants (B, H, S, hd) with the
+sequence on the second-minor axis (MXU-friendly contiguous tiles).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "impl", "block_q", "block_k")
+)
+def attention(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, S, KV, hd)
+    v: jax.Array,          # (B, S, KV, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    impl: str = "pallas",  # pallas | pallas_interpret | xla
+    block_q: int = 128,
+    block_k: int = 256,
+) -> jax.Array:
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    if impl == "xla":
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention(
+            qt, kt, vt,
+            causal=causal, window=window,
+            block_q=block_q, block_k=block_k,
+            interpret=(impl == "pallas_interpret"),
+        )
+    return out.swapaxes(1, 2)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,          # (B, H, Sq, hd)
+    k: jax.Array,          # (B, KV, Sk, hd)
+    v: jax.Array,          # (B, KV, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    # guard fully-masked rows (all NEG_INF) to match kernel semantics
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    p = p / l
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,90 @@
+"""Selective-scan (mamba-1) Pallas kernel for TPU.
+
+Tiling: grid = (batch, d_inner_blocks, seq_chunks) with the sequence-chunk
+axis LAST, so the (block_d, N) hidden state lives in VMEM scratch and
+carries across chunks — HBM sees x/dt/B/C exactly once and never the
+(S, d_inner, N) discretized tensors the pure-jnp path materializes.
+
+Inside a chunk the recurrence h_t = exp(dt_t*A) h_{t-1} + dt_t*x_t*B_t is
+stepped sequentially (VPU elementwise (block_d, N) work + an (N,) matvec
+per step); the chunk-parallel SSD formulation that trades this for MXU
+matmuls is the recorded next §Perf iteration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(
+    x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref,   # tiles
+    y_ref,                                        # (1, chunk, block_d)
+    h_scr,                                        # (block_d, N) f32
+    *,
+    chunk: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = -jnp.exp(a_ref[...].astype(jnp.float32))          # (block_d, N)
+    dskip = d_ref[...].astype(jnp.float32)                # (1, block_d)
+
+    def step(t, h):
+        xt = x_ref[0, t, :].astype(jnp.float32)           # (block_d,)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)         # (block_d,)
+        bt = b_ref[0, t, :].astype(jnp.float32)           # (N,)
+        ct = c_ref[0, t, :].astype(jnp.float32)           # (N,)
+        abar = jnp.exp(dtt[:, None] * a)                  # (block_d, N)
+        bx = (dtt * xt)[:, None] * bt[None, :]            # (block_d, N)
+        h = abar * h + bx
+        yt = jnp.sum(h * ct[None, :], axis=1) + dskip[0] * xt
+        y_ref[0, t, :] = yt.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+
+def ssm_scan(
+    x: jax.Array,       # (B, S, Di)
+    dt: jax.Array,      # (B, S, Di)   (already softplus'd)
+    b: jax.Array,       # (B, S, N)
+    c: jax.Array,       # (B, S, N)
+    a_log: jax.Array,   # (Di, N)
+    d: jax.Array,       # (Di,)
+    *,
+    chunk: int = 128,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Di = x.shape
+    N = a_log.shape[1]
+    chunk = min(chunk, S)
+    block_d = min(block_d, Di)
+    assert S % chunk == 0 and Di % block_d == 0, (S, chunk, Di, block_d)
+    nc, nd = S // chunk, Di // block_d
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, chunk, block_d), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, chunk, N), lambda bi, di, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, di, ci: (bi, ci, 0)),
+            pl.BlockSpec((block_d, N), lambda bi, di, ci: (di, 0)),
+            pl.BlockSpec((1, block_d), lambda bi, di, ci: (0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda bi, di, ci: (bi, ci, di)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b, c, a_log, d.reshape(1, Di))

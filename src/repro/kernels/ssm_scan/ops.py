@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "block_d"))
+def selective_scan(
+    x, dt, b, c, a_log, d,
+    *,
+    impl: str = "pallas",       # pallas | pallas_interpret | xla
+    chunk: int = 128,
+    block_d: int = 256,
+):
+    if impl == "xla":
+        return ssm_scan_ref(x, dt, b, c, a_log, d)
+    return ssm_scan(
+        x, dt, b, c, a_log, d,
+        chunk=chunk, block_d=block_d,
+        interpret=(impl == "pallas_interpret"),
+    )

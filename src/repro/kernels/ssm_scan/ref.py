@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(
+    x: jax.Array,       # (B, S, Di)
+    dt: jax.Array,      # (B, S, Di)
+    b: jax.Array,       # (B, S, N)
+    c: jax.Array,       # (B, S, N)
+    a_log: jax.Array,   # (Di, N)
+    d: jax.Array,       # (Di,)
+) -> jax.Array:
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    abar = jnp.exp(dtf[..., None] * a[None, None])               # (B,S,Di,N)
+    bx = (dtf * xf)[..., None] * b.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, inp):
+        ab, bx_t, c_t = inp
+        h = ab * h + bx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    B, S, Di = x.shape
+    N = a_log.shape[1]
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (abar.swapaxes(0, 1), bx.swapaxes(0, 1),
+         c.astype(jnp.float32).swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1) + xf * d.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype)

@@ -1,0 +1,155 @@
+"""§Perf attribution tool: where do the roofline bytes/collectives come from?
+
+Reads a dry-run cell's compiled HLO (cached .hlo.txt.gz), scales every op by
+its while-loop trip count, and aggregates:
+
+  * HBM bytes by (opcode, jax op_name metadata) — finds the S^2 score
+    chains, SSM state chains, re-gathered loop invariants, ...
+  * collective wire bytes by (kind, op_name) — finds which all-gathers/
+    all-reduces dominate,
+  * what-if kernel accounting: subtract ops a Pallas kernel keeps in VMEM
+    (matched by result element count), add back the kernel's true HBM
+    traffic. Used to compute the flash-attention / fused-scan §Perf rows,
+    grounded in parsed per-op bytes rather than napkin math.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --cell deepseek-coder-33b__train_4k__pod --top 25
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import os
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.hlo_analysis import (
+    COLLECTIVES,
+    HloCostModel,
+    parse_type,
+    type_bytes,
+)
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))), "experiments", "dryrun")
+
+_NAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _short_name(line: str) -> str:
+    m = _NAME_RE.search(line)
+    if not m:
+        return "?"
+    name = m.group(1)
+    # keep the trailing 3 segments of the jax scope path
+    return "/".join(name.split("/")[-3:])[:90]
+
+
+class Attribution:
+    def __init__(self, text: str):
+        self.model = HloCostModel(text)
+        self.by_bytes: Dict[Tuple[str, str], float] = defaultdict(float)
+        self.by_coll: Dict[Tuple[str, str], float] = defaultdict(float)
+        self.by_elems: Dict[int, float] = defaultdict(float)
+        self._walk(self.model.entry, 1.0)
+
+    def _walk(self, comp_name: str, times: float) -> None:
+        comp = self.model.comps.get(comp_name)
+        if comp is None:
+            return
+        for opn in comp.order:
+            op = comp.ops[opn]
+            oc = op.opcode
+            if oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all"):
+                continue
+            if oc == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.line)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.line)
+                trips = 1
+                if cond and cond.group(1) in self.model.comps:
+                    from repro.launch.hlo_analysis import _trip_count
+                    trips = _trip_count(self.model.comps[cond.group(1)])
+                if body:
+                    self._walk(body.group(1), times * trips)
+                continue
+            if oc in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", op.line)
+                if m:
+                    self._walk(m.group(1), times)
+                continue
+            if oc == "conditional":
+                continue
+            table = {o.name: o.result_type for o in comp.ops.values()}
+            ob = sum(type_bytes(table.get(o, "")) for o in op.operands)
+            rb = type_bytes(op.result_type)
+            key = (oc, _short_name(op.line))
+            self.by_bytes[key] += (ob + rb) * times
+            shapes = parse_type(op.result_type)
+            if shapes:
+                self.by_elems[max(s.elems for s in shapes)] += (ob + rb) * times
+            kind = next((c for c in COLLECTIVES if oc == c or oc == c + "-start"), None)
+            if kind and not oc.endswith("-done"):
+                from repro.launch.hlo_analysis import _group_size
+                g = _group_size(op.attrs, op.line)
+                if kind == "all-reduce":
+                    wire = 2 * rb * (g - 1) / max(g, 1)
+                elif kind == "all-gather":
+                    wire = rb * (g - 1) / max(g, 1)
+                elif kind == "reduce-scatter":
+                    wire = rb * (g - 1)
+                elif kind == "all-to-all":
+                    wire = rb * (g - 1) / max(g, 1)
+                else:
+                    wire = rb
+                self.by_coll[(kind, _short_name(op.line))] += wire * times
+
+    # ------------------------------------------------------------------ #
+    def whatif_fuse(self, min_elems: int, max_elems: Optional[int] = None) -> Tuple[float, float]:
+        """(total_bytes, bytes attributed to ops with result elems in range).
+
+        Models a fusion kernel that keeps those intermediates in VMEM.
+        """
+        total = sum(self.by_bytes.values())
+        hit = sum(
+            b for e, b in self.by_elems.items()
+            if e >= min_elems and (max_elems is None or e <= max_elems)
+        )
+        return total, hit
+
+
+def load_cell(cell: str) -> Attribution:
+    path = os.path.join(DRYRUN_DIR, f"{cell}.hlo.txt.gz")
+    text = gzip.decompress(open(path, "rb").read()).decode()
+    return Attribution(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--fuse-min-elems", type=int, default=0)
+    args = ap.parse_args()
+    att = load_cell(args.cell)
+
+    total = sum(att.by_bytes.values())
+    print(f"== HBM bytes by op (total {total/1e12:.2f} TB/device/step) ==")
+    for (oc, name), b in sorted(att.by_bytes.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {b/1e9:10.1f} GB  {b/total*100:5.1f}%  {oc:18s} {name}")
+
+    ctot = sum(att.by_coll.values())
+    print(f"\n== collective wire bytes (total {ctot/1e9:.1f} GB/device/step) ==")
+    for (kind, name), b in sorted(att.by_coll.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {b/1e9:10.1f} GB  {b/ctot*100:5.1f}%  {kind:18s} {name}")
+
+    if args.fuse_min_elems:
+        tot, hit = att.whatif_fuse(args.fuse_min_elems)
+        print(f"\nwhat-if fuse(elems>={args.fuse_min_elems:,}): "
+              f"removes {hit/1e12:.2f} TB of {tot/1e12:.2f} TB "
+              f"({hit/tot*100:.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

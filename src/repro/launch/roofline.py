@@ -1,0 +1,124 @@
+"""Roofline report generator: reads the dry-run cache, emits markdown.
+
+Terms (per device, v5e constants from launch/mesh.py):
+  compute    = corrected_HLO_FLOPs / 197 TF/s
+  memory     = corrected_HLO_bytes / 819 GB/s
+  collective = collective_wire_bytes / 50 GB/s
+
+'corrected' = while-bodies scaled by trip count (launch/hlo_analysis.py);
+MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (inference) per device.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh pod] [--tag X]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))), "experiments", "dryrun")
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+HBM_PER_CHIP = 16 * 2**30
+
+
+def model_flops(rec: dict) -> float:
+    n = rec.get("model_params_active") or rec.get("model_params", 0)
+    toks = TOKENS.get(rec["shape"], 0)
+    mult = 6.0 if rec["shape"] == "train_4k" else 2.0
+    return mult * n * toks
+
+
+def load(mesh: Optional[str] = None, tag: str = "") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def analyze(rec: dict) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    a = rec["analysis"]
+    ct = a["flops_per_device"] / PEAK_FLOPS_BF16
+    mt = a["bytes_per_device"] / HBM_BW
+    lt = a["collective_bytes_per_device"] / ICI_BW
+    dom = max((ct, "compute"), (mt, "memory"), (lt, "collective"))[1]
+    mf = model_flops(rec) / rec["devices"]
+    bound = max(ct, mt, lt)
+    return {
+        "compute_s": ct, "memory_s": mt, "collective_s": lt,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / max(a["flops_per_device"], 1),
+        # fraction of peak FLOP/s actually achieved if the dominant term
+        # sets step time (the roofline score):
+        "roofline_frac": (mf / PEAK_FLOPS_BF16) / max(bound, 1e-12),
+        "peak_gib": rec["memory"]["peak_bytes_est"] / 2**30,
+        "fits_hbm": rec["memory"]["peak_bytes_est"] <= HBM_PER_CHIP,
+    }
+
+
+def next_move(rec: dict, a: dict) -> str:
+    dom = a["dominant"]
+    if dom == "memory":
+        if rec["shape"] in ("train_4k", "prefill_32k"):
+            return "fuse attention/scan into Pallas kernels (no S^2 / state materialization)"
+        return "shrink KV traffic: int8 cache, larger decode batch per fetch"
+    if dom == "collective":
+        return "overlap/shrink collectives: shard_map a2a for MoE, bf16 grads, 2D-shard tuning"
+    return "already compute-bound: raise MXU utilization (tile alignment, bf16 flow)"
+
+
+def markdown(mesh: str = "pod", tag: str = "") -> str:
+    rows = [
+        "| arch | shape | comp s | mem s | coll s | dominant | useful | roofline | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh, tag):
+        if not rec.get("applicable", True):
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | SKIP "
+                f"({rec.get('skip_reason', '')[:40]}…) | | | | |"
+            )
+            continue
+        a = analyze(rec)
+        if a is None:
+            rows.append(f"| {rec['arch']} | {rec['shape']} | FAIL | | | | | | | |")
+            continue
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {a['compute_s']:.3f} | "
+            f"{a['memory_s']:.3f} | {a['collective_s']:.3f} | {a['dominant']} | "
+            f"{a['useful_ratio']:.2f} | {a['roofline_frac']*100:.1f}% | "
+            f"{a['peak_gib']:.1f} | {'Y' if a['fits_hbm'] else 'N'} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(markdown(args.mesh, args.tag))
+    print()
+    for rec in load(args.mesh, args.tag):
+        a = analyze(rec)
+        if a:
+            print(f"{rec['arch']:22s} {rec['shape']:12s} -> {next_move(rec, a)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Shared building blocks: norms, RoPE, sharding helpers, embeddings, MLP."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------- #
+# Sharding helpers
+# --------------------------------------------------------------------------- #
+def mesh_active() -> bool:
+    """True when running under a named mesh (pjit); False on bare CPU."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover - old jax fallback
+        return False
+    return bool(m.shape_tuple)
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """``with_sharding_constraint`` that is a no-op outside a mesh context."""
+    if not mesh_active():
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def batch_axes_for(global_batch: int, mesh_axis_sizes: dict) -> Optional[tuple]:
+    """Largest prefix of ("pod","data") that evenly divides the batch.
+
+    ``long_500k`` has batch 1 — replicate instead of forcing uneven sharding.
+    """
+    axes = [a for a in ("pod", "data") if a in mesh_axis_sizes]
+    chosen = []
+    prod = 1
+    for a in axes:
+        if global_batch % (prod * mesh_axis_sizes[a]) == 0:
+            chosen.append(a)
+            prod *= mesh_axis_sizes[a]
+    if not chosen:
+        return None
+    return tuple(chosen)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rms_norm_headwise(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """QK-norm: normalize over the trailing head_dim. scale: (head_dim,)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim//2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd//2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd//2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, hd//2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head
+# --------------------------------------------------------------------------- #
+def embed_tokens(embedding: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(embedding, tokens, axis=0).astype(compute_dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Dense SwiGLU MLP
+# --------------------------------------------------------------------------- #
+def swiglu_mlp(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    """x: (B, S, D); wi/wg: (D, F); wo: (F, D)."""
+    h = jnp.einsum("bsd,df->bsf", x, wi)
+    g = jnp.einsum("bsd,df->bsf", x, wg)
+    h = h * jax.nn.sigmoid(g.astype(jnp.float32)).astype(h.dtype) * g  # silu(g)*h
+    return jnp.einsum("bsf,fd->bsd", h, wo)
+
+
+def cross_entropy_chunked(
+    x: jax.Array,
+    head: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    *,
+    chunk: int = 512,
+    logits_spec: Optional[P] = None,
+) -> jax.Array:
+    """Memory-bounded CE: scan over sequence chunks, remat the chunk body.
+
+    x: (B, S, D) final hidden states; head: (D, V); labels/mask: (B, S).
+    Returns (sum_nll, sum_mask).
+    """
+    B, S, D = x.shape
+    n_chunks = max(1, S // chunk)
+    c = S // n_chunks
+    xs = x[:, : n_chunks * c].reshape(B, n_chunks, c, D).swapaxes(0, 1)
+    ls = labels[:, : n_chunks * c].reshape(B, n_chunks, c).swapaxes(0, 1)
+    ms = mask[:, : n_chunks * c].reshape(B, n_chunks, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc, mc):
+        logits = jnp.einsum("bcd,dv->bcv", xc, head)
+        if logits_spec is not None:
+            logits = constrain(logits, logits_spec)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return jnp.sum(nll)
+
+    def body(carry, inputs):
+        xc, lc, mc = inputs
+        return carry + chunk_loss(xc, lc, mc), ()
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls, ms))
+    return total, jnp.sum(mask.astype(jnp.float32))

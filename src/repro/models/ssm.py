@@ -1,0 +1,172 @@
+"""Mamba-1 selective SSM block (xla reference path).
+
+Training/prefill uses a chunked scan: a sequential ``lax.scan`` over sequence
+chunks carrying the (B, D_inner, N) state, with an associative scan inside
+each chunk — this bounds the materialized (B, chunk, D_inner, N) tensors
+(the same chunking scheme the Pallas ``ssm_scan`` kernel implements with
+VMEM tiles). Decode is the O(1) single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, Di); w: (Di, K); b: (Di,)."""
+    K = w.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[:, i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_params(x: jax.Array, p: Dict[str, jax.Array], dt_rank: int, n: int):
+    """x: (B, S, Di) -> dt (B,S,Di) fp32, B_ (B,S,N) fp32, C (B,S,N) fp32."""
+    proj = jnp.einsum("bsd,dr->bsr", x, p["x_proj"]).astype(jnp.float32)
+    dt_in, B_, C = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32)[None, None, :])
+    return dt, B_, C
+
+
+def _discretize(dt, B_, x, A):
+    """dt: (B,S,Di); B_: (B,S,N); x: (B,S,Di); A: (Di,N) negative.
+
+    Returns Abar (B,S,Di,N), Bx (B,S,Di,N) in fp32.
+    """
+    Abar = jnp.exp(dt[..., None] * A[None, None])             # (B,S,Di,N)
+    Bx = dt[..., None] * B_[..., None, :] * x.astype(jnp.float32)[..., None]
+    return Abar, Bx
+
+
+def _chunk_scan(Abar, Bx, h0):
+    """Associative scan within a chunk, seeded with carry state h0.
+
+    Abar/Bx: (B, c, Di, N); h0: (B, Di, N). Returns (h_all (B,c,Di,N), h_last).
+    """
+    def combine(a, b):
+        a_l, b_l = a
+        a_r, b_r = b
+        return a_l * a_r, b_l * a_r + b_r
+
+    Aacc, Bacc = jax.lax.associative_scan(combine, (Abar, Bx), axis=1)
+    h_all = Aacc * h0[:, None] + Bacc
+    return h_all, h_all[:, -1]
+
+
+def selective_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    B_: jax.Array,
+    C: jax.Array,
+    A: jax.Array,
+    D: jax.Array,
+    *,
+    chunk: int = 1024,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """y = SSM(x) with selective (input-dependent) dynamics.
+
+    x: (B, S, Di); dt: (B, S, Di); B_/C: (B, S, N); A: (Di, N) (negative);
+    D: (Di,) skip. Returns (y (B,S,Di) in x.dtype, h_last (B,Di,N) fp32).
+    """
+    Bsz, S, Di = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, Di, N), jnp.float32)
+
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n_chunks = S // c
+
+    if n_chunks == 1:
+        Abar, Bx = _discretize(dt, B_, x, A)
+        h_all, h_last = _chunk_scan(Abar, Bx, h0)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, C)
+    else:
+        # Discretize INSIDE the chunk so (B, c, Di, N) tensors never
+        # materialize for the full sequence (and remat recomputes them in
+        # the backward pass instead of saving them).
+        def split(t):
+            return t.reshape(Bsz, n_chunks, c, *t.shape[2:]).swapaxes(0, 1)
+
+        x_c, dt_c, B_c, C_c = split(x), split(dt), split(B_), split(C)
+
+        @jax.checkpoint
+        def chunk_fn(h, xc, dtc, Bc, Cc):
+            Abar, Bx = _discretize(dtc, Bc, xc, A)
+            h_all, h_last = _chunk_scan(Abar, Bx, h)
+            yc = jnp.einsum("bsdn,bsn->bsd", h_all, Cc)
+            return h_last, yc
+
+        def body(h, inp):
+            xc, dtc, Bc, Cc = inp
+            return chunk_fn(h, xc, dtc, Bc, Cc)
+
+        h_last, ys = jax.lax.scan(body, h0, (x_c, dt_c, B_c, C_c))
+        y = ys.swapaxes(0, 1).reshape(Bsz, S, Di)
+
+    y = y + x.astype(jnp.float32) * D[None, None, :]
+    return y.astype(x.dtype), h_last
+
+
+def mamba_block(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    *,
+    dt_rank: int,
+    ssm_state: int,
+    chunk: int = 256,
+) -> jax.Array:
+    """Full mamba-1 mixer. x: (B, S, D) -> (B, S, D)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B,S,Di) each
+    xi = causal_conv1d(xi, p["conv_w"], p["conv_b"])
+    xi = xi * jax.nn.sigmoid(xi.astype(jnp.float32)).astype(xi.dtype)  # silu
+    dt, B_, C = _ssm_params(xi, p, dt_rank, ssm_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = selective_scan(xi, dt, B_, C, A, p["D"].astype(jnp.float32), chunk=chunk)
+    y = y * (z * jax.nn.sigmoid(z.astype(jnp.float32)).astype(z.dtype))  # gate
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+# --------------------------------------------------------------------------- #
+# Decode (single-step recurrence)
+# --------------------------------------------------------------------------- #
+def mamba_decode_step(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    conv_state: jax.Array,
+    ssm_state_v: jax.Array,
+    *,
+    dt_rank: int,
+    ssm_state: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, 1, D); conv_state: (B, K-1, Di); ssm_state_v: (B, Di, N).
+
+    Returns (y (B,1,D), new_conv_state, new_ssm_state).
+    """
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)          # (B,1,Di)
+    K = p["conv_w"].shape[1]
+    window = jnp.concatenate([conv_state, xi], axis=1)      # (B,K,Di)
+    conv = jnp.einsum("bkd,dk->bd", window, p["conv_w"]) + p["conv_b"]
+    conv = conv[:, None, :]                                  # (B,1,Di)
+    conv = conv * jax.nn.sigmoid(conv.astype(jnp.float32)).astype(conv.dtype)
+    dt, B_, C = _ssm_params(conv, p, dt_rank, ssm_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Abar = jnp.exp(dt[:, 0, :, None] * A[None])              # (B,Di,N)
+    Bx = dt[:, 0, :, None] * B_[:, 0, None, :] * conv.astype(jnp.float32)[:, 0, :, None]
+    h = Abar * ssm_state_v + Bx                              # (B,Di,N)
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0]) + conv.astype(jnp.float32)[:, 0] * p["D"].astype(jnp.float32)[None]
+    y = y.astype(x.dtype)[:, None, :]
+    y = y * (z * jax.nn.sigmoid(z.astype(jnp.float32)).astype(z.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, window[:, 1:], h

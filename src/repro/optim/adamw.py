@@ -1,0 +1,102 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Hand-rolled (no optax dependency); optimizer state is a pytree mirroring the
+params, so it shards with the same PartitionSpecs (ZeRO-style: the FSDP axis
+shards first/second moments along with the master weights).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to lr_min."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: PyTree) -> Dict[str, PyTree]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_p: PyTree) -> Dict[str, PyTree]:
+    sds = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_p)
+    return {
+        "m": sds,
+        "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_p),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: PyTree,
+    grads: PyTree,
+    opt_state: Dict[str, PyTree],
+) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jax.Array]]:
+    count = opt_state["count"] + 1
+    lr = lr_schedule(cfg, count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step + decay)
+        return newp.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,52 @@
+"""Versioned block store: version chains, snapshot reads, namespace."""
+import pytest
+
+from repro.core.blockstore import BlockStore, FileMeta
+
+
+def test_block_versions_and_snapshot():
+    bs = BlockStore(block_size=16)
+    key = (1, 0)
+    assert bs.block(key) == (0, b"\0" * 16)
+    bs.put_block(key, b"a" * 16, ts=5)
+    bs.put_block(key, b"b" * 16, ts=9)
+    assert bs.block(key) == (9, b"b" * 16)
+    # snapshot read via the undo chain
+    assert bs.block(key, ts=7) == (5, b"a" * 16)
+    assert bs.block(key, ts=5) == (5, b"a" * 16)
+    assert bs.block(key, ts=4) == (0, b"\0" * 16)
+    assert bs.block_version(key) == 9
+
+
+def test_version_chain_bounded():
+    bs = BlockStore(block_size=4, versions_kept=3)
+    key = (1, 0)
+    for i in range(1, 10):
+        bs.put_block(key, bytes([i] * 4), ts=i)
+    v = bs._blocks[key]
+    assert len(v.versions) == 3
+    assert bs.block(key) == (9, bytes([9] * 4))
+
+
+def test_meta_versions():
+    bs = BlockStore(block_size=16)
+    bs.put_meta(1, FileMeta(10), ts=2)
+    bs.put_meta(1, FileMeta(20), ts=6)
+    assert bs.meta(1)[1].length == 20
+    assert bs.meta(1, ts=3)[1].length == 10
+
+
+def test_namespace_versions_and_listdir():
+    bs = BlockStore(block_size=16)
+    bs.bind_name("/mnt/tsfs/a", 1, ts=1)
+    bs.bind_name("/mnt/tsfs/b", 2, ts=2)
+    bs.bind_name("/mnt/tsfs/a", None, ts=3)  # unlink
+    assert bs.lookup("/mnt/tsfs/a") is None
+    assert bs.lookup("/mnt/tsfs/a", ts=2) == 1
+    assert bs.lookup("/mnt/tsfs/b") == 2
+    assert bs.listdir("/mnt/tsfs") == ["b"]
+    assert bs.listdir("/mnt/tsfs", ts=2) == ["a", "b"]
+    # nested paths are not listed at the parent
+    bs.bind_name("/mnt/tsfs/dir/c", 3, ts=4)
+    assert "c" not in bs.listdir("/mnt/tsfs")
+    assert bs.listdir("/mnt/tsfs/dir") == ["c"]

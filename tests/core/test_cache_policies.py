@@ -1,0 +1,146 @@
+"""Cache update policies: eager / lazy / invalidate / frequent (paper §4.2)."""
+import pytest
+
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.posix import FaaSFS, O_CREAT
+from repro.core.retry import run_function
+from repro.core.types import CachePolicy
+
+
+def setup_file(local, path="/mnt/tsfs/f", size=64):
+    def fn(fs):
+        fd = fs.open(path, O_CREAT)
+        fs.pwrite(fd, b"0" * size, 0)
+
+    run_function(local, fn)
+
+
+def warm(local, path="/mnt/tsfs/f", size=64):
+    def fn(fs):
+        fd = fs.open(path)
+        fs.pread(fd, size, 0)
+
+    run_function(local, fn, read_only=False)
+
+
+def modify(local, path="/mnt/tsfs/f", offset=0, data=b"MOD!"):
+    def fn(fs):
+        fd = fs.open(path)
+        fs.pwrite(fd, data, offset)
+
+    run_function(local, fn)
+
+
+def test_eager_pushes_changed_blocks():
+    be = BackendService(block_size=16, policy=CachePolicy.EAGER)
+    a, b = LocalServer(be), LocalServer(be)
+    setup_file(a)
+    warm(b)
+    modify(a, offset=0)          # one dirty block out of 4
+    pushed_before = be.stats.blocks_pushed
+    misses_before = b.misses
+    txn = b.begin()              # eager: data arrives at begin
+    fid = txn.lookup("/mnt/tsfs/f")
+    assert txn.read(fid, 0, 4) == b"MOD!"
+    txn.commit()
+    assert be.stats.blocks_pushed > pushed_before
+    assert b.misses == misses_before  # served from pushed cache, no fetch
+
+
+def test_eager_is_block_granular_not_whole_file():
+    be = BackendService(block_size=16, policy=CachePolicy.EAGER)
+    a, b = LocalServer(be), LocalServer(be)
+    setup_file(a, size=64)       # 4 blocks
+    warm(b)
+    modify(a, offset=0)          # dirty exactly 1 block
+    before = be.stats.blocks_pushed
+    b.begin().commit()
+    assert be.stats.blocks_pushed - before == 1   # NOT 4 (no NFS whole-file)
+
+
+def test_invalidate_policy_fetches_on_demand():
+    be = BackendService(block_size=16, policy=CachePolicy.INVALIDATE)
+    a, b = LocalServer(be), LocalServer(be)
+    setup_file(a)
+    warm(b)
+    modify(a, offset=0)
+    pushed = be.stats.blocks_pushed
+    txn = b.begin()
+    fid = txn.lookup("/mnt/tsfs/f")
+    misses_before = b.misses
+    assert txn.read(fid, 0, 4) == b"MOD!"   # miss -> fetch
+    assert b.misses == misses_before + 1
+    # unchanged blocks still hit cache
+    hits_before = b.hits
+    txn.read(fid, 32, 4)
+    assert b.hits == hits_before + 1
+    txn.commit()
+    assert be.stats.blocks_pushed == pushed  # nothing was pushed
+
+
+def test_lazy_policy_syncs_on_first_access():
+    be = BackendService(block_size=16, policy=CachePolicy.LAZY)
+    a, b = LocalServer(be), LocalServer(be)
+    setup_file(a)
+    warm(b)
+    modify(a, offset=0)
+    txn = b.begin()
+    fid = txn.lookup("/mnt/tsfs/f")
+    assert txn.read(fid, 0, 4) == b"MOD!"   # file synced at first access
+    txn.commit()
+
+
+def test_frequent_policy_pushes_hot_blocks():
+    be = BackendService(block_size=16, policy=CachePolicy.FREQUENT, hot_threshold=2)
+    a, b = LocalServer(be), LocalServer(be)
+    setup_file(a)
+    # make block 0 hot: fetch it repeatedly
+    for _ in range(3):
+        b.cache.clear()
+        warm(b, size=4)
+    warm(b)                       # cache all blocks
+    modify(a, offset=0)           # dirty the hot block
+    modify(a, offset=32)          # dirty a cold block
+    before_push = be.stats.blocks_pushed
+    before_inv = be.stats.blocks_invalidated
+    b.begin().commit()
+    assert be.stats.blocks_pushed - before_push >= 1      # hot block pushed
+    assert be.stats.blocks_invalidated - before_inv >= 1  # cold invalidated
+
+
+def test_serializability_under_every_policy():
+    """Same concurrent increment workload must be lost-update-free under
+    all cache policies (correctness is policy-independent; only perf moves)."""
+    for policy in CachePolicy:
+        be = BackendService(block_size=16, policy=policy)
+        locals_ = [LocalServer(be) for _ in range(3)]
+
+        def init(fs):
+            fd = fs.open("/mnt/tsfs/ctr", O_CREAT)
+            fs.pwrite(fd, (0).to_bytes(8, "little"), 0)
+
+        run_function(locals_[0], init)
+
+        def incr(fs):
+            fd = fs.open("/mnt/tsfs/ctr")
+            cur = int.from_bytes(fs.pread(fd, 8, 0), "little")
+            fs.pwrite(fd, (cur + 1).to_bytes(8, "little"), 0)
+
+        import threading
+
+        def worker(l):
+            for _ in range(10):
+                run_function(l, incr)
+
+        ts = [threading.Thread(target=worker, args=(l,)) for l in locals_]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+
+        def check(fs):
+            fd = fs.open("/mnt/tsfs/ctr")
+            assert int.from_bytes(fs.pread(fd, 8, 0), "little") == 30, policy
+
+        run_function(locals_[0], check, read_only=True)

@@ -1,0 +1,182 @@
+"""OCC validation semantics: the paper's §4.2 commit rules."""
+import pytest
+
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.types import CachePolicy, Conflict
+
+
+def make(policy=CachePolicy.EAGER, block_size=16):
+    be = BackendService(block_size=block_size, policy=policy)
+    return be
+
+
+def new_file(local, path="/f", size=0):
+    txn = local.begin()
+    fid = txn.create(path)
+    if size:
+        txn.write(fid, 0, b"\0" * size)
+    txn.commit()
+    return fid
+
+
+def test_write_write_conflict_aborts():
+    be = make()
+    a, b = LocalServer(be), LocalServer(be)
+    fid = new_file(a, size=16)
+
+    ta = a.begin()
+    tb = b.begin()
+    ta.read(fid, 0, 4)
+    tb.read(fid, 0, 4)
+    ta.write(fid, 0, b"AAAA")
+    tb.write(fid, 0, b"BBBB")
+    ta.commit()
+    with pytest.raises(Conflict):
+        tb.commit()
+
+
+def test_disjoint_block_writes_both_commit():
+    be = make()
+    a, b = LocalServer(be), LocalServer(be)
+    fid = new_file(a, size=64)  # 4 blocks of 16
+
+    ta = a.begin()
+    tb = b.begin()
+    ta.read(fid, 0, 4)
+    tb.read(fid, 32, 4)
+    ta.write(fid, 0, b"AAAA")
+    tb.write(fid, 32, b"BBBB")
+    ta.commit()
+    tb.commit()  # disjoint blocks + lengths unchanged: no conflict
+
+    tc = a.begin()
+    assert tc.read(fid, 0, 4) == b"AAAA"
+    assert tc.read(fid, 32, 4) == b"BBBB"
+    tc.commit()
+
+
+def test_blind_write_does_not_conflict():
+    """Writes without reads validate nothing (paper: only R is validated)."""
+    be = make()
+    a, b = LocalServer(be), LocalServer(be)
+    fid = new_file(a, size=16)
+    ta = a.begin()
+    tb = b.begin()
+    ta.write(fid, 0, b"AAAA")
+    tb.write(fid, 4, b"BBBB")
+    ta.commit()
+    tb.commit()
+    tc = a.begin()
+    assert tc.read(fid, 0, 8) == b"AAAABBBB"
+    tc.commit()
+
+
+def test_stale_policy_aborts_on_stale_read():
+    """'Do nothing at begin' policy: commit validation catches staleness."""
+    be = make(policy=CachePolicy.STALE)
+    a, b = LocalServer(be), LocalServer(be)
+    fid = new_file(a, size=16)
+
+    # warm b's cache
+    tb = b.begin()
+    tb.read(fid, 0, 4)
+    tb.commit()
+
+    # a changes the block; b's cache is NOT updated (stale policy)
+    ta = a.begin()
+    ta.read(fid, 0, 4)
+    ta.write(fid, 0, b"AAAA")
+    ta.commit()
+
+    tb = b.begin()
+    stale = tb.read(fid, 0, 4)          # optimistically served from cache
+    assert stale == b"\0\0\0\0"          # stale value!
+    tb.write(fid, 8, b"XXXX")
+    with pytest.raises(Conflict):
+        tb.commit()                      # validation catches it
+
+    # retry sees fresh state and succeeds
+    tb = b.begin()
+    assert tb.read(fid, 0, 4) == b"AAAA" or tb.read(fid, 0, 4) == b"\0\0\0\0"
+
+
+def test_read_only_snapshot_never_aborts():
+    be = make()
+    a, b = LocalServer(be), LocalServer(be)
+    fid = new_file(a, size=16)
+    ta = a.begin()
+    ta.write(fid, 0, b"v1v1")
+    ta.commit()
+
+    tb = b.begin(read_only=True)
+    v_before = tb.read(fid, 0, 4)
+
+    ta = a.begin()
+    ta.write(fid, 0, b"v2v2")
+    ta.commit()
+
+    # snapshot read still sees the pinned version, commit cannot conflict
+    assert tb.read(fid, 0, 4) == v_before == b"v1v1"
+    tb.commit()
+
+
+def test_length_predicate_append_conflict():
+    """Reads near EOF assert the length; a concurrent append invalidates."""
+    be = make()
+    a, b = LocalServer(be), LocalServer(be)
+    fid = new_file(a, size=8)
+
+    tb = b.begin()
+    data = tb.read(fid, 0, 100)     # truncated by EOF -> EQ(8) predicate
+    assert len(data) == 8
+    tb.write(fid, 100, b"Z")        # some dependent write
+
+    ta = a.begin()
+    ta.write(fid, 8, b"MORE")       # append grows the file
+    ta.commit()
+
+    with pytest.raises(Conflict):
+        tb.commit()
+
+
+def test_read_beyond_eof_le_predicate():
+    be = make()
+    a, b = LocalServer(be), LocalServer(be)
+    fid = new_file(a, size=8)
+    tb = b.begin()
+    assert tb.read(fid, 100, 4) == b""   # LE(100) predicate
+
+    ta = a.begin()
+    ta.write(fid, 200, b"Y")             # length 201 > 100
+    ta.commit()
+
+    tb.write(fid, 0, b"Q")
+    with pytest.raises(Conflict):
+        tb.commit()
+
+
+def test_rename_atomicity():
+    be = make()
+    a = LocalServer(be)
+    new_file(a, "/src", size=4)
+    t = a.begin()
+    t.rename("/src", "/dst")
+    t.commit()
+    t2 = a.begin()
+    assert t2.lookup("/src") is None
+    assert t2.lookup("/dst") is not None
+    t2.commit()
+
+
+def test_name_conflict_on_concurrent_rename():
+    be = make()
+    a, b = LocalServer(be), LocalServer(be)
+    new_file(a, "/f", size=4)
+    ta = a.begin()
+    tb = b.begin()
+    ta.rename("/f", "/g")
+    tb.rename("/f", "/h")
+    ta.commit()
+    with pytest.raises(Conflict):
+        tb.commit()

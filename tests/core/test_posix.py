@@ -1,0 +1,169 @@
+"""POSIX semantics through the FaaSFS facade."""
+import pytest
+
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.posix import O_APPEND, O_CREAT, O_EXCL, O_TRUNC, SEEK_END, FaaSFS
+from repro.core.retry import run_function
+from repro.core.types import Conflict, Exists, NotFound
+
+
+@pytest.fixture
+def local():
+    return LocalServer(BackendService(block_size=16))
+
+
+def test_open_create_write_read(local):
+    def fn(fs: FaaSFS):
+        fd = fs.open("/mnt/tsfs/a.txt", O_CREAT)
+        fs.write(fd, b"hello world")
+        fs.lseek(fd, 0)
+        assert fs.read(fd, 5) == b"hello"
+        assert fs.read(fd, 6) == b" world"
+        fs.close(fd)
+
+    run_function(local, fn)
+
+    def check(fs: FaaSFS):
+        fd = fs.open("/mnt/tsfs/a.txt")
+        assert fs.pread(fd, 11, 0) == b"hello world"
+        assert fs.fstat(fd)["st_size"] == 11
+
+    run_function(local, check, read_only=True)
+
+
+def test_multiblock_write_and_zero_fill(local):
+    def fn(fs: FaaSFS):
+        fd = fs.open("/mnt/tsfs/b", O_CREAT)
+        fs.pwrite(fd, b"X" * 40, 0)           # spans 3 blocks of 16
+        fs.pwrite(fd, b"Y", 100)              # sparse write -> hole
+        assert fs.fstat(fd)["st_size"] == 101
+        assert fs.pread(fd, 40, 0) == b"X" * 40
+        # POSIX zero-fills the gap
+        assert fs.pread(fd, 10, 60) == b"\0" * 10
+        assert fs.pread(fd, 1, 100) == b"Y"
+
+    run_function(local, fn)
+
+
+def test_append_mode(local):
+    def fn(fs: FaaSFS):
+        fd = fs.open("/mnt/tsfs/log", O_CREAT | O_APPEND)
+        fs.write(fd, b"one.")
+        fs.write(fd, b"two.")
+        fs.close(fd)
+
+    run_function(local, fn)
+
+    def again(fs: FaaSFS):
+        fd = fs.open("/mnt/tsfs/log", O_APPEND)
+        fs.write(fd, b"three.")
+        assert fs.pread(fd, 100, 0) == b"one.two.three."
+
+    run_function(local, again)
+
+
+def test_truncate_and_regrow_zero_fill(local):
+    def fn(fs: FaaSFS):
+        fd = fs.open("/mnt/tsfs/t", O_CREAT)
+        fs.pwrite(fd, b"A" * 32, 0)
+        fs.ftruncate(fd, 8)
+        assert fs.fstat(fd)["st_size"] == 8
+        fs.pwrite(fd, b"B", 15)
+        # bytes 8..14 must read back as zeros, not stale 'A's
+        assert fs.pread(fd, 8, 8) == b"\0" * 7 + b"B"
+
+    run_function(local, fn)
+
+
+def test_o_trunc_and_o_excl(local):
+    def create(fs):
+        fd = fs.open("/mnt/tsfs/c", O_CREAT)
+        fs.write(fd, b"data")
+
+    run_function(local, create)
+
+    def excl(fs):
+        with pytest.raises(Exists):
+            fs.open("/mnt/tsfs/c", O_CREAT | O_EXCL)
+        fd = fs.open("/mnt/tsfs/c", O_TRUNC)
+        assert fs.fstat(fd)["st_size"] == 0
+
+    run_function(local, excl)
+
+
+def test_lseek_end(local):
+    def fn(fs):
+        fd = fs.open("/mnt/tsfs/s", O_CREAT)
+        fs.write(fd, b"12345678")
+        assert fs.lseek(fd, -3, SEEK_END) == 5
+        assert fs.read(fd, 3) == b"678"
+
+    run_function(local, fn)
+
+
+def test_unlink_and_rename_visibility(local):
+    def setup(fs):
+        fd = fs.open("/mnt/tsfs/old", O_CREAT)
+        fs.write(fd, b"payload")
+
+    run_function(local, setup)
+
+    def do_rename(fs):
+        fs.rename("/mnt/tsfs/old", "/mnt/tsfs/new")
+        # atomic within the txn: old gone, new present
+        assert not fs.exists("/mnt/tsfs/old")
+        assert fs.exists("/mnt/tsfs/new")
+
+    run_function(local, do_rename)
+
+    def check(fs):
+        with pytest.raises(NotFound):
+            fs.open("/mnt/tsfs/old")
+        fd = fs.open("/mnt/tsfs/new")
+        assert fs.pread(fd, 7, 0) == b"payload"
+
+    run_function(local, check, read_only=True)
+
+
+def test_readdir(local):
+    def fn(fs):
+        fs.mkdir("/mnt/tsfs/d")
+        for n in ("x", "y", "z"):
+            fs.open(f"/mnt/tsfs/d/{n}", O_CREAT)
+
+    run_function(local, fn)
+
+    def check(fs):
+        assert fs.readdir("/mnt/tsfs/d") == ["x", "y", "z"]
+
+    run_function(local, check, read_only=True)
+
+
+def test_path_routing_outside_mount(local):
+    def fn(fs):
+        with pytest.raises(ValueError):
+            fs.open("/etc/passwd")
+
+    run_function(local, fn)
+
+
+def test_flock_elision_conflicts():
+    be = BackendService(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    def setup(fs):
+        fs.open("/mnt/tsfs/lockfile", O_CREAT)
+
+    run_function(a, setup)
+
+    ta = a.begin()
+    tb = b.begin()
+    fa, fb = FaaSFS(ta), FaaSFS(tb)
+    fda = fa.open("/mnt/tsfs/lockfile")
+    fdb = fb.open("/mnt/tsfs/lockfile")
+    fa.flock(fda)       # both succeed locally (optimistic elision)
+    fb.flock(fdb)
+    ta.commit()
+    with pytest.raises(Conflict):
+        tb.commit()     # serialization enforced at validation

@@ -1,0 +1,190 @@
+"""Property-based tests (hypothesis): serializability invariants of the core.
+
+Invariants checked against randomized workloads:
+  1. no lost updates: N counter increments across random clients == N,
+  2. atomicity: multi-block writes are never observed torn,
+  3. equivalence to a serial execution for randomized read-modify-write
+     programs over several files (final state must equal running the
+     committed transactions in commit-timestamp order on a plain dict).
+"""
+import threading
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.posix import FaaSFS, O_CREAT
+from repro.core.retry import run_function
+from repro.core.types import CachePolicy
+
+POLICIES = st.sampled_from(list(CachePolicy))
+
+
+@settings(max_examples=15, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    policy=POLICIES,
+    n_clients=st.integers(2, 4),
+    n_incr=st.integers(3, 12),
+    block_size=st.sampled_from([8, 16, 64]),
+)
+def test_no_lost_updates(policy, n_clients, n_incr, block_size):
+    be = BackendService(block_size=block_size, policy=policy)
+    clients = [LocalServer(be) for _ in range(n_clients)]
+
+    def setup(fs):
+        fd = fs.open("/mnt/tsfs/ctr", O_CREAT)
+        fs.pwrite(fd, (0).to_bytes(8, "little"), 0)
+
+    run_function(clients[0], setup)
+
+    def incr(fs):
+        fd = fs.open("/mnt/tsfs/ctr")
+        cur = int.from_bytes(fs.pread(fd, 8, 0), "little")
+        fs.pwrite(fd, (cur + 1).to_bytes(8, "little"), 0)
+
+    def worker(local):
+        for _ in range(n_incr):
+            run_function(local, incr, max_retries=500)
+
+    threads = [threading.Thread(target=worker, args=(c,)) for c in clients]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    def check(fs):
+        fd = fs.open("/mnt/tsfs/ctr")
+        assert (
+            int.from_bytes(fs.pread(fd, 8, 0), "little") == n_clients * n_incr
+        )
+
+    run_function(clients[0], check, read_only=True)
+
+
+@settings(max_examples=10, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    policy=POLICIES,
+    n_writers=st.integers(1, 3),
+    rounds=st.integers(2, 6),
+)
+def test_multiblock_writes_never_torn(policy, n_writers, rounds):
+    """Writers stamp a uniform byte across 4 blocks; readers must never see
+    a mix of two stamps (per-transaction atomicity)."""
+    be = BackendService(block_size=16, policy=policy)
+    writers = [LocalServer(be) for _ in range(n_writers)]
+    reader = LocalServer(be)
+    SIZE = 64
+
+    def setup(fs):
+        fd = fs.open("/mnt/tsfs/blob", O_CREAT)
+        fs.pwrite(fd, b"\0" * SIZE, 0)
+
+    run_function(writers[0], setup)
+    stop = threading.Event()
+    torn = []
+
+    def write_worker(local, stamp):
+        for _ in range(rounds):
+            def fn(fs, stamp=stamp):
+                fd = fs.open("/mnt/tsfs/blob")
+                fs.pread(fd, SIZE, 0)
+                fs.pwrite(fd, bytes([stamp]) * SIZE, 0)
+
+            run_function(local, fn, max_retries=500)
+
+    def read_worker():
+        while not stop.is_set():
+            def fn(fs):
+                fd = fs.open("/mnt/tsfs/blob")
+                data = fs.pread(fd, SIZE, 0)
+                if len(set(data)) > 1:
+                    torn.append(bytes(data))
+
+            run_function(reader, fn, read_only=True)
+
+    rt = threading.Thread(target=read_worker)
+    rt.start()
+    wts = [
+        threading.Thread(target=write_worker, args=(w, i + 1))
+        for i, w in enumerate(writers)
+    ]
+    for t in wts:
+        t.start()
+    for t in wts:
+        t.join()
+    stop.set()
+    rt.join()
+    assert not torn, f"observed torn writes: {torn[:2]}"
+
+
+@settings(max_examples=15, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    policy=POLICIES,
+    data=st.data(),
+)
+def test_equivalent_to_serial_execution(policy, data):
+    """Random single-threaded txn programs must produce the same final state
+    as a plain-dict replay (sequential == trivially serializable; exercises
+    read-your-writes, patches, truncation, zero-fill)."""
+    be = BackendService(block_size=8, policy=policy)
+    local = LocalServer(be)
+    files = ["/mnt/tsfs/p", "/mnt/tsfs/q"]
+    model = {f: bytearray() for f in files}
+
+    def setup(fs):
+        for f in files:
+            fs.open(f, O_CREAT)
+
+    run_function(local, setup)
+
+    n_txns = data.draw(st.integers(1, 8))
+    for _ in range(n_txns):
+        ops = data.draw(
+            st.lists(
+                st.tuples(
+                    st.sampled_from(["write", "read", "truncate"]),
+                    st.sampled_from(files),
+                    st.integers(0, 40),     # offset
+                    st.integers(1, 24),     # size
+                    st.integers(0, 255),    # fill byte
+                ),
+                min_size=1,
+                max_size=6,
+            )
+        )
+
+        def txn_fn(fs, ops=ops):
+            for op, f, off, size, fill in ops:
+                fd = fs.open(f)
+                if op == "write":
+                    fs.pwrite(fd, bytes([fill]) * size, off)
+                elif op == "read":
+                    fs.pread(fd, size, off)
+                else:
+                    fs.ftruncate(fd, off)
+                fs.close(fd)
+
+        run_function(local, txn_fn)
+        # replay on the model
+        for op, f, off, size, fill in ops:
+            buf = model[f]
+            if op == "write":
+                if len(buf) < off + size:
+                    buf.extend(b"\0" * (off + size - len(buf)))
+                buf[off : off + size] = bytes([fill]) * size
+            elif op == "truncate":
+                if off < len(buf):
+                    del buf[off:]
+                else:
+                    buf.extend(b"\0" * (off - len(buf)))  # POSIX: extend w/ zeros
+
+    def check(fs):
+        for f in files:
+            fd = fs.open(f)
+            n = fs.fstat(fd)["st_size"]
+            assert n == len(model[f]), (f, n, len(model[f]))
+            assert fs.pread(fd, n, 0) == bytes(model[f])
+
+    run_function(local, check, read_only=True)
