@@ -16,6 +16,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List
 
+from repro.core.api import LatencyInjector
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.nfs_baseline import NFSClient, NFSServer
@@ -49,7 +50,9 @@ RPC_S = 100e-6   # same network for both systems
 
 
 def _faasfs_run(p: Personality) -> float:
-    be = BackendService(block_size=BLOCK, policy=CachePolicy.EAGER, rpc_latency_s=RPC_S)
+    be = LatencyInjector(
+        BackendService(block_size=BLOCK, policy=CachePolicy.EAGER), RPC_S
+    )
     local = LocalServer(be)
 
     def init(fs: FaaSFS) -> None:

@@ -14,6 +14,7 @@ import statistics
 import time
 from typing import Callable, Dict, List
 
+from repro.core.api import LatencyInjector
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.nfs_baseline import NFSClient, NFSServer
@@ -62,7 +63,9 @@ def bench_nfs(rpc_latency_s: float = RPC_S) -> Dict[str, float]:
 
 
 def bench_faasfs() -> Dict[str, float]:
-    be = BackendService(block_size=BLOCK, policy=CachePolicy.EAGER, rpc_latency_s=RPC_S)
+    be = LatencyInjector(
+        BackendService(block_size=BLOCK, policy=CachePolicy.EAGER), RPC_S
+    )
     local = LocalServer(be)
     txn = local.begin()
     fs = FaaSFS(txn)

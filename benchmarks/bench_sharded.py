@@ -1,0 +1,157 @@
+"""Shard-count scaling of the transactional backend (this repo's analogue
+of λFS's elastic-shard scaling argument).
+
+Setup: N worker threads drive read-modify-write transactions against a
+``ShardedBackend`` with 1 / 2 / 4 / 8 shards. Each shard charges
+``COMMIT_SERVICE_S`` of simulated durable-apply time (log fsync) per
+commit-lock acquisition — the serialized resource that sharding
+parallelizes and group commit amortizes. Client-side RPC latency is NOT
+injected (``rpc_latency_s = 0``): the curve isolates backend commit
+throughput.
+
+Two workloads:
+  * **uncontended** — each worker owns a private file (round-robin fid
+    allocation spreads them across shards), so every transaction takes
+    the single-shard fast path and never aborts. This is the pure
+    scaling curve.
+  * **contended** — all workers RMW random blocks of a small shared file
+    set, producing cross-worker conflicts (OCC aborts + retries) and a
+    mix of fast-path and cross-shard commits.
+
+Also reported: group-commit batching on a single shard (window on vs
+off), and a monolithic ``BackendService`` reference row.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Tuple
+
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.sharded import ShardedBackend
+from repro.core.types import CachePolicy, Conflict
+
+SHARD_COUNTS = (1, 2, 4, 8)
+N_CLIENTS = 8
+BLOCK = 1024
+FILE_BYTES = 8 * BLOCK
+DURATION_S = 0.8
+COMMIT_SERVICE_S = 300e-6
+GROUP_WINDOW_S = 1e-3
+CONTENDED_FILES = 4
+
+
+def _mk_files(backend, n: int) -> List[int]:
+    setup = LocalServer(backend)
+    fids = []
+    for i in range(n):
+        txn = setup.begin()
+        fid = txn.create(f"/bench/f{i}")
+        txn.write(fid, 0, b"\0" * FILE_BYTES)
+        txn.commit()
+        fids.append(fid)
+    return fids
+
+
+def _drive(backend, plan_fn) -> Tuple[float, float]:
+    """Run N_CLIENTS workers for DURATION_S; return (txn/s, abort_frac)."""
+    committed = [0] * N_CLIENTS
+    attempts = [0] * N_CLIENTS
+    start_gate = threading.Barrier(N_CLIENTS)
+    stop_at = [0.0]
+
+    def worker(ci: int) -> None:
+        local = LocalServer(backend)
+        start_gate.wait()
+        if ci == 0:
+            stop_at[0] = time.perf_counter() + DURATION_S
+        while stop_at[0] == 0.0:
+            time.sleep(1e-5)
+        while time.perf_counter() < stop_at[0]:
+            fid, blk = plan_fn(ci, committed[ci])
+            while True:
+                attempts[ci] += 1
+                txn = local.begin()
+                try:
+                    cur = int.from_bytes(txn.read(fid, blk * BLOCK, 8), "little")
+                    txn.write(fid, blk * BLOCK, (cur + 1).to_bytes(8, "little"))
+                    txn.commit()
+                    committed[ci] += 1
+                    break
+                except Conflict:
+                    continue
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(N_CLIENTS)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    total = sum(committed)
+    return total / wall, 1 - total / max(sum(attempts), 1)
+
+
+def run_uncontended(backend) -> Tuple[float, float]:
+    fids = _mk_files(backend, N_CLIENTS)
+
+    def plan(ci: int, it: int):
+        return fids[ci], it % (FILE_BYTES // BLOCK)
+
+    return _drive(backend, plan)
+
+
+def run_contended(backend) -> Tuple[float, float]:
+    fids = _mk_files(backend, CONTENDED_FILES)
+
+    def plan(ci: int, it: int):
+        # deterministic pseudo-random spread over the shared hot set
+        h = (ci * 2654435761 + it * 40503) & 0xFFFFFFFF
+        return fids[h % CONTENDED_FILES], (h >> 8) % (FILE_BYTES // BLOCK)
+
+    return _drive(backend, plan)
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    base = dict(
+        block_size=BLOCK,
+        policy=CachePolicy.INVALIDATE,
+        commit_service_s=COMMIT_SERVICE_S,
+    )
+
+    tps_by_shards = {}
+    for n in SHARD_COUNTS:
+        be = ShardedBackend(n_shards=n, **base)
+        tps, ab = run_uncontended(be)
+        tps_by_shards[n] = tps
+        rows.append(f"sharded_uncontended_s{n},{tps:.0f},txn/s abort={ab:.3f}")
+    for n in SHARD_COUNTS:
+        be = ShardedBackend(n_shards=n, **base)
+        tps, ab = run_contended(be)
+        rows.append(f"sharded_contended_s{n},{tps:.0f},txn/s abort={ab:.3f}")
+
+    # monolithic reference (same service cost, no shard layer overhead)
+    mono = BackendService(**base)
+    tps_mono, ab_mono = run_uncontended(mono)
+    rows.append(f"sharded_uncontended_mono,{tps_mono:.0f},txn/s abort={ab_mono:.3f}")
+
+    speedup = tps_by_shards[4] / max(tps_by_shards[1], 1e-9)
+    rows.append(f"sharded_speedup_s4_vs_s1,{speedup:.2f},x")
+
+    # group-commit batching on ONE shard: one durable apply per batch
+    for window, tag in ((0.0, "off"), (GROUP_WINDOW_S, "on")):
+        be = ShardedBackend(n_shards=1, group_commit_window_s=window, **base)
+        tps, ab = run_uncontended(be)
+        rows.append(f"sharded_groupcommit_{tag}_s1,{tps:.0f},txn/s abort={ab:.3f}")
+        if tag == "on":
+            agg = be.stats
+            per_batch = agg.group_committed / max(agg.group_batches, 1)
+            rows.append(f"sharded_groupcommit_batchsize,{per_batch:.1f},txns/batch")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

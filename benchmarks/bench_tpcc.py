@@ -20,11 +20,13 @@ import threading
 import time
 from typing import Dict, List, Tuple
 
+from repro.core.api import LatencyInjector
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.nfs_baseline import NFSClient, NFSServer
 from repro.core.posix import FaaSFS, O_CREAT
 from repro.core.retry import run_function
+from repro.core.sharded import ShardedBackend
 from repro.core.types import CachePolicy
 
 N_WAREHOUSES = 64
@@ -48,8 +50,21 @@ def _txn_plan(rng: random.Random, home: int) -> List[Tuple[int, int]]:
 
 
 # --------------------------------------------------------------------------- #
-def run_faasfs(n_clients: int, policy: CachePolicy) -> Tuple[float, float]:
-    be = BackendService(block_size=BLOCK, policy=policy, rpc_latency_s=RPC_S)
+def make_backend(kind: str, policy: CachePolicy):
+    """'mono' — the paper's monolithic backend; 'sharded4' — 4 hash
+    partitions with per-shard sequencers and 2PC cross-shard commits.
+    Both sit behind the same latency-injecting transport."""
+    if kind == "mono":
+        inner = BackendService(block_size=BLOCK, policy=policy)
+    else:
+        inner = ShardedBackend(n_shards=4, block_size=BLOCK, policy=policy)
+    return LatencyInjector(inner, RPC_S)
+
+
+def run_faasfs(
+    n_clients: int, policy: CachePolicy, backend_kind: str = "mono"
+) -> Tuple[float, float]:
+    be = make_backend(backend_kind, policy)
     setup = LocalServer(be)
 
     def init(fs: FaaSFS) -> None:
@@ -142,9 +157,11 @@ def run() -> List[str]:
     for n in (1, 2, 4, 8):
         tpm_e, ab_e = run_faasfs(n, CachePolicy.EAGER)
         tpm_l, ab_l = run_faasfs(n, CachePolicy.LAZY)
+        tpm_s, ab_s = run_faasfs(n, CachePolicy.EAGER, backend_kind="sharded4")
         tpm_n, _ = run_nfs(n)
         rows.append(f"tpcc_faasfs_eager_c{n},{tpm_e:.0f},tpm abort={ab_e:.3f}")
         rows.append(f"tpcc_faasfs_lazy_c{n},{tpm_l:.0f},tpm abort={ab_l:.3f}")
+        rows.append(f"tpcc_faasfs_sharded4_eager_c{n},{tpm_s:.0f},tpm abort={ab_s:.3f}")
         rows.append(f"tpcc_nfs_c{n},{tpm_n:.0f},tpm")
         rows.append(f"tpcc_speedup_eager_vs_nfs_c{n},{tpm_e / max(tpm_n, 1):.2f},x")
     return rows

@@ -6,13 +6,55 @@
   bench_fullstack  -> paper Fig 7 (elastic snapshot serving vs fixed servers)
   bench_delta_ckpt -> ours (block-granular delta checkpoint + int8 kernel)
   bench_roofline   -> ours (dry-run derived roofline terms per arch x shape)
+  bench_sharded    -> ours (shard-count scaling + group-commit batching)
 
-Prints ``name,value,unit/derived`` CSV lines.
+Prints ``name,value,unit/derived`` CSV lines, and writes one
+``BENCH_<suite>.json`` artifact per suite (records
+``{suite, metric, value, unit}`` rows plus wall time) so the perf
+trajectory accumulates across PRs. Set ``BENCH_DIR`` to redirect the
+artifacts (default: current directory).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+from typing import List, Optional
+
+
+def _parse_row(row: str) -> dict:
+    parts = row.split(",", 2)
+    metric = parts[0]
+    value: object = parts[1] if len(parts) > 1 else ""
+    try:
+        value = float(value)  # type: ignore[arg-type]
+    except (TypeError, ValueError):
+        pass
+    return {
+        "metric": metric,
+        "value": value,
+        "unit": parts[2] if len(parts) > 2 else "",
+    }
+
+
+def _write_artifact(
+    name: str, rows: List[str], wall_s: float, error: Optional[str]
+) -> None:
+    out_dir = os.environ.get("BENCH_DIR", ".")
+    payload = {
+        "suite": name,
+        "results": [_parse_row(r) for r in rows],
+        "wall_s": round(wall_s, 3),
+        "error": error,
+    }
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    try:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+    except OSError as e:  # an unwritable BENCH_DIR must not kill the run
+        print(f"artifact_{name}_FAILED,{type(e).__name__},{e}", flush=True)
 
 
 def main() -> None:
@@ -22,6 +64,7 @@ def main() -> None:
         bench_fullstack,
         bench_latency,
         bench_roofline,
+        bench_sharded,
         bench_tpcc,
     )
 
@@ -29,6 +72,7 @@ def main() -> None:
         ("latency", bench_latency),
         ("filebench", bench_filebench),
         ("tpcc", bench_tpcc),
+        ("sharded", bench_sharded),
         ("fullstack", bench_fullstack),
         ("delta_ckpt", bench_delta_ckpt),
         ("roofline", bench_roofline),
@@ -39,12 +83,19 @@ def main() -> None:
         if only and only != name:
             continue
         t0 = time.perf_counter()
+        rows: List[str] = []
+        error: Optional[str] = None
         try:
             for row in mod.run():
+                rows.append(row)
                 print(row, flush=True)
-            print(f"suite_{name}_wall,{time.perf_counter() - t0:.2f},s", flush=True)
+            wall = time.perf_counter() - t0
+            print(f"suite_{name}_wall,{wall:.2f},s", flush=True)
         except Exception as e:  # keep the harness going; failures are visible
+            wall = time.perf_counter() - t0
+            error = f"{type(e).__name__}: {e}"
             print(f"suite_{name}_FAILED,{type(e).__name__},{e}", flush=True)
+        _write_artifact(name, rows, wall, error)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,221 @@
+"""Backend transport API — the contract between clients and any backend.
+
+The paper's prototype wires the Local Server directly to one in-process
+monolithic backend. To grow past that (sharded backends, networked
+transports), every client-visible operation is pinned down here as an
+abstract ``BackendAPI``:
+
+  begin / sync_file / fetch_block / fetch_meta / lookup / listdir /
+  commit / alloc_file_id
+
+plus a small *timestamp algebra* (``zero_ts`` / ``ts_geq`` /
+``snapshot_cache_ok``) so clients never interpret sync timestamps
+themselves: the monolithic backend uses scalar timestamps, the sharded
+backend a per-shard vector, and client code works unchanged over both.
+
+Transport concerns live in wrappers, not in the backend:
+``LatencyInjector`` charges one simulated network round trip per
+client-visible call (replacing the old ad-hoc ``rpc_latency_s`` sleeps
+inside ``BackendService``). A real networked transport would be another
+``BackendAPI`` implementation that serializes these calls over a socket;
+see ROADMAP "Open items" for what that needs.
+"""
+from __future__ import annotations
+
+import time
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Dict, List, Optional, Set, Tuple
+
+from repro.core.types import (
+    BlockKey,
+    CachePolicy,
+    FileId,
+    SyncTimestamp,
+    Timestamp,
+)
+
+if TYPE_CHECKING:  # avoid an import cycle with backend.py at runtime
+    from repro.core.backend import BeginReply
+
+
+@dataclass
+class CommitReply:
+    """Result of a successful commit.
+
+    ``ts``             — backend-assigned commit token, one uniform kind
+                         per backend: the commit timestamp under the
+                         monolithic backend (its read timestamp for
+                         read-only commits), the coordinator's global
+                         scalar timestamp under the sharded backend.
+                         Monotone across a client's sequential commits;
+                         informational only — never fed back into reads.
+    ``block_versions`` — shard-local version assigned to each written
+                         block, so the client can write committed data
+                         through into its cache with the exact version
+                         that commit validation will later compare.
+    """
+
+    ts: SyncTimestamp
+    block_versions: Dict[BlockKey, Timestamp] = field(default_factory=dict)
+
+
+class BackendAPI(ABC):
+    """Abstract transactional backend (paper §4.1's Backend Service)."""
+
+    # Implementations expose these (attribute or property):
+    block_size: int
+    policy: CachePolicy
+
+    @property
+    def zero_ts(self) -> SyncTimestamp:
+        """The sync timestamp of a brand-new client (never synced)."""
+        return 0
+
+    # ------------------------- timestamp algebra ---------------------- #
+    def ts_geq(self, a: SyncTimestamp, b: SyncTimestamp) -> bool:
+        """a >= b, componentwise for vector timestamps."""
+        return a >= b  # type: ignore[operator]
+
+    def snapshot_cache_ok(
+        self,
+        key: BlockKey,
+        version: Timestamp,
+        at_ts: SyncTimestamp,
+        last_sync_ts: SyncTimestamp,
+    ) -> bool:
+        """May a cached entry (``version``) serve a snapshot read at
+        ``at_ts``?  Only if it is provably the latest version <= at_ts,
+        i.e. the cache has been synced past the snapshot point."""
+        return version <= at_ts and last_sync_ts >= at_ts  # type: ignore
+
+    # ----------------------------- RPCs ------------------------------- #
+    @abstractmethod
+    def begin(
+        self,
+        last_sync_ts: SyncTimestamp,
+        cached_keys: Optional[Set[BlockKey]] = None,
+        policy: Optional[CachePolicy] = None,
+    ) -> "BeginReply": ...
+
+    @abstractmethod
+    def sync_file(
+        self, fid: FileId, known_versions: Dict[BlockKey, Timestamp]
+    ) -> Dict[BlockKey, Tuple[Timestamp, bytes]]: ...
+
+    @abstractmethod
+    def fetch_block(
+        self, key: BlockKey, at_ts: Optional[SyncTimestamp] = None
+    ) -> Tuple[Timestamp, bytes]: ...
+
+    @abstractmethod
+    def fetch_meta(self, fid: FileId, at_ts: Optional[SyncTimestamp] = None): ...
+
+    @abstractmethod
+    def lookup(
+        self, path: str, at_ts: Optional[SyncTimestamp] = None
+    ) -> Tuple[Timestamp, Optional[FileId]]:
+        """(observed name version, bound file id or None), atomically."""
+
+    @abstractmethod
+    def listdir(
+        self, prefix: str, at_ts: Optional[SyncTimestamp] = None
+    ) -> List[Tuple[str, Timestamp, Optional[FileId]]]:
+        """Direct children of ``prefix`` as (full_path, version, fid);
+        unbound tombstones are included (fid None) so callers can record
+        the observed absence."""
+
+    @abstractmethod
+    def commit(self, payload) -> CommitReply:
+        """OCC-validate and apply a TxnPayload; raises Conflict."""
+
+    @abstractmethod
+    def alloc_file_id(self) -> FileId: ...
+
+
+#: calls that cost one network round trip in the paper's EC2 deployment;
+#: lookup/fetch_meta/listdir piggyback on other messages there.
+DEFAULT_CHARGED_CALLS = ("begin", "sync_file", "fetch_block", "commit")
+
+
+class LatencyInjector(BackendAPI):
+    """Transport wrapper charging a simulated RTT per client-visible call.
+
+    Wrap any ``BackendAPI`` (monolithic or sharded) to model a networked
+    deployment::
+
+        be = LatencyInjector(BackendService(...), rpc_latency_s=100e-6)
+    """
+
+    def __init__(
+        self,
+        inner: BackendAPI,
+        rpc_latency_s: float,
+        charged_calls: Tuple[str, ...] = DEFAULT_CHARGED_CALLS,
+    ):
+        self.inner = inner
+        self.rpc_latency_s = rpc_latency_s
+        self.charged_calls = frozenset(charged_calls)
+
+    def _rpc(self, call: str) -> None:
+        if self.rpc_latency_s and call in self.charged_calls:
+            time.sleep(self.rpc_latency_s)
+
+    # -------------------------- delegation ---------------------------- #
+    @property
+    def block_size(self) -> int:
+        return self.inner.block_size
+
+    @property
+    def policy(self) -> CachePolicy:
+        return self.inner.policy
+
+    @property
+    def zero_ts(self) -> SyncTimestamp:
+        return self.inner.zero_ts
+
+    @property
+    def stats(self):
+        return self.inner.stats
+
+    @property
+    def latest_ts(self):
+        return self.inner.latest_ts
+
+    def ts_geq(self, a, b) -> bool:
+        return self.inner.ts_geq(a, b)
+
+    def snapshot_cache_ok(self, key, version, at_ts, last_sync_ts) -> bool:
+        return self.inner.snapshot_cache_ok(key, version, at_ts, last_sync_ts)
+
+    def begin(self, last_sync_ts, cached_keys=None, policy=None):
+        self._rpc("begin")
+        return self.inner.begin(last_sync_ts, cached_keys, policy)
+
+    def sync_file(self, fid, known_versions):
+        self._rpc("sync_file")
+        return self.inner.sync_file(fid, known_versions)
+
+    def fetch_block(self, key, at_ts=None):
+        self._rpc("fetch_block")
+        return self.inner.fetch_block(key, at_ts)
+
+    def fetch_meta(self, fid, at_ts=None):
+        self._rpc("fetch_meta")
+        return self.inner.fetch_meta(fid, at_ts)
+
+    def lookup(self, path, at_ts=None):
+        self._rpc("lookup")
+        return self.inner.lookup(path, at_ts)
+
+    def listdir(self, prefix, at_ts=None):
+        self._rpc("listdir")
+        return self.inner.listdir(prefix, at_ts)
+
+    def commit(self, payload) -> CommitReply:
+        self._rpc("commit")
+        return self.inner.commit(payload)
+
+    def alloc_file_id(self) -> FileId:
+        self._rpc("alloc_file_id")
+        return self.inner.alloc_file_id()

@@ -1,9 +1,10 @@
 """The FaaSFS Backend Service (paper §4.1-4.2).
 
-Monolithic, in-memory, transactional — deliberately matching the paper's
-prototype scope ("a prototype backend implemented as a monolithic server
-that maintains state in memory"; scalable backends are cited as future
-work). It provides:
+In-memory, transactional — one *shard* of state. Used standalone it
+matches the paper's prototype scope ("a prototype backend implemented as
+a monolithic server that maintains state in memory"); composed by
+``repro.core.sharded.ShardedBackend`` it is one hash partition of a
+horizontally sharded backend. It provides:
 
   * a Sequencer issuing commit timestamps,
   * OCC validation (Kung-Robinson backward validation over block versions
@@ -11,7 +12,16 @@ work). It provides:
   * atomic application of write sets with version-chain (undo log) retention,
   * the transaction log that drives block-granular cache updates
     (eager / lazy / invalidate / stale / frequency-heuristic policies),
-  * multiversion snapshot block fetches at a historical T_R.
+  * multiversion snapshot block fetches at a historical T_R,
+  * optional group-commit batching: commits arriving within a short
+    window are validated and applied under ONE commit-lock acquisition
+    (and one simulated durable-log write), amortizing the per-commit
+    critical section.
+
+The commit path is decomposed into ``validate_locked`` / ``next_ts_locked``
+/ ``apply_locked`` / ``undo_locked`` / ``log_commit_locked`` so a
+cross-shard two-phase-commit coordinator can drive the same machinery
+while holding several shards' commit locks (see core/sharded.py).
 
 Validation detail: the paper validates ``T_W^B <= T_R`` for each read,
 which is sound when caches are synchronized at transaction begin (its
@@ -19,14 +29,19 @@ eager/lazy protocols guarantee this). Because we also allow the 'stale'
 policy (backend does nothing at begin; paper §4.2 explicitly permits this),
 we validate against the *observed* version timestamp instead — equivalent
 under begin-sync, and still strictly serializable without it.
+
+Transport note: simulated network latency is no longer injected here;
+wrap the backend in ``repro.core.api.LatencyInjector`` instead.
 """
 from __future__ import annotations
 
 import threading
+import time
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from repro.core.api import BackendAPI, CommitReply
 from repro.core.blockstore import BlockStore, FileMeta
 from repro.core.types import (
     BLOCK_SIZE_DEFAULT,
@@ -67,6 +82,9 @@ class TxnPayload:
     meta_reads: Dict[FileId, Timestamp] = field(default_factory=dict)
     read_only: bool = False
 
+    def has_effects(self) -> bool:
+        return bool(self.writes or self.meta_updates or self.name_updates)
+
 
 @dataclass
 class BeginReply:
@@ -87,9 +105,106 @@ class BackendStats:
     block_fetches: int = 0
     bytes_pushed: int = 0
     validation_checks: int = 0
+    group_batches: int = 0       # group-commit lock acquisitions
+    group_committed: int = 0     # payloads committed through batches
 
 
-class BackendService:
+#: touched-state summary returned by apply_locked, consumed by
+#: log_commit_locked / undo_locked
+Touched = Tuple[List[BlockKey], List[FileId], List[str]]
+
+
+@dataclass
+class _Pending:
+    """One payload queued for a group-commit batch."""
+
+    payload: TxnPayload
+    done: threading.Event = field(default_factory=threading.Event)
+    reply: Optional[CommitReply] = None
+    error: Optional[BaseException] = None
+
+
+class _GroupCommitter:
+    """Accumulate commit payloads for a short window; the first arrival
+    becomes the batch leader, sleeps out the window, then validates and
+    applies the whole batch under ONE commit-lock acquisition (and one
+    simulated durable-log write). Later payloads in a batch validate
+    against the state left by earlier ones — exactly the serial order
+    their commit timestamps record."""
+
+    def __init__(self, backend: "BackendService", window_s: float):
+        self.backend = backend
+        self.window_s = window_s
+        self._mu = threading.Lock()
+        self._queue: List[_Pending] = []
+        self._leader_active = False
+
+    def submit(self, payload: TxnPayload) -> CommitReply:
+        p = _Pending(payload)
+        with self._mu:
+            self._queue.append(p)
+            lead = not self._leader_active
+            if lead:
+                self._leader_active = True
+        if lead:
+            clean_exit = False
+            try:
+                time.sleep(self.window_s)
+                while True:
+                    with self._mu:
+                        batch = self._queue
+                        self._queue = []
+                        if not batch:
+                            # leadership must be released under the SAME
+                            # lock hold as the emptiness check, so a
+                            # payload enqueued right after sees
+                            # _leader_active False and leads itself
+                            self._leader_active = False
+                            clean_exit = True
+                            break
+                    self._run_batch(batch)
+            finally:
+                # Exceptional exit only (e.g. KeyboardInterrupt during
+                # the window sleep): never leave the committer wedged —
+                # hand leadership back and fail genuinely stranded
+                # waiters rather than letting them block forever.
+                if not clean_exit:
+                    with self._mu:
+                        self._leader_active = False
+                        stranded, self._queue = self._queue, []
+                    for q in stranded:
+                        if not q.done.is_set():
+                            q.error = RuntimeError(
+                                "group-commit leader died before this batch"
+                            )
+                            q.done.set()
+        p.done.wait()
+        if p.error is not None:
+            raise p.error
+        assert p.reply is not None
+        return p.reply
+
+    def _run_batch(self, batch: List[_Pending]) -> None:
+        be = self.backend
+        try:
+            with be.commit_lock:
+                be.stats.group_batches += 1
+                be._service()  # one durable-log write for the whole batch
+                for p in batch:
+                    try:
+                        p.reply = be._commit_locked(p.payload, service=False)
+                        be.stats.group_committed += 1
+                    except Conflict as e:
+                        p.error = e
+                    p.done.set()
+        finally:
+            for p in batch:  # a non-Conflict failure must not strand waiters
+                if not p.done.is_set():
+                    p.error = RuntimeError("group-commit batch failed")
+                    p.done.set()
+
+
+class BackendService(BackendAPI):
     def __init__(
         self,
         block_size: int = BLOCK_SIZE_DEFAULT,
@@ -97,26 +212,38 @@ class BackendService:
         policy: CachePolicy = CachePolicy.INVALIDATE,
         hot_threshold: int = 3,
         log_horizon: int = 4096,
-        rpc_latency_s: float = 0.0,
+        group_commit_window_s: float = 0.0,
+        commit_service_s: float = 0.0,
     ):
         self.store = BlockStore(block_size, versions_kept)
         self.policy = policy
         self.hot_threshold = hot_threshold
         self.log_horizon = log_horizon
-        self.rpc_latency_s = rpc_latency_s
-        self._commit_lock = threading.Lock()
+        # simulated backend-side durable-apply time (e.g. log fsync),
+        # paid once per commit-lock acquisition — what group commit
+        # amortizes. 0 in tests.
+        self.commit_service_s = commit_service_s
+        self.commit_lock = threading.Lock()
         self._ts = 0  # sequencer
         self._log: List[CommitRecord] = []
         self._fetch_counts: Dict[BlockKey, int] = defaultdict(int)
         self.stats = BackendStats()
+        # invoked under commit_lock after a commit fully applies; the
+        # sharded coordinator hooks this to advance its sync vector
+        self.on_commit_applied: Optional[Callable[[Timestamp], None]] = None
+        self._group = (
+            _GroupCommitter(self, group_commit_window_s)
+            if group_commit_window_s > 0
+            else None
+        )
 
-    def _rpc(self) -> None:
-        """Simulated network round trip (benchmarks model the paper's EC2
-        setting where begin/commit/fetch each cost one RPC; 0 in tests)."""
-        if self.rpc_latency_s:
-            import time
+    @property
+    def block_size(self) -> int:
+        return self.store.block_size
 
-            time.sleep(self.rpc_latency_s)
+    def _service(self) -> None:
+        if self.commit_service_s:
+            time.sleep(self.commit_service_s)
 
     # ------------------------------------------------------------------ #
     # sequencer
@@ -125,7 +252,7 @@ class BackendService:
     def latest_ts(self) -> Timestamp:
         return self._ts
 
-    def _next_ts(self) -> Timestamp:
+    def next_ts_locked(self) -> Timestamp:
         self._ts += 1
         return self._ts
 
@@ -140,8 +267,7 @@ class BackendService:
     ) -> BeginReply:
         policy = policy or self.policy
         self.stats.begins += 1
-        self._rpc()
-        with self._commit_lock:
+        with self.commit_lock:
             read_ts = self._ts
             changed: Dict[BlockKey, bool] = {}
             changed_files: Set[FileId] = set()
@@ -184,7 +310,6 @@ class BackendService:
         self, fid: FileId, known_versions: Dict[BlockKey, Timestamp]
     ) -> Dict[BlockKey, Tuple[Timestamp, bytes]]:
         """Lazy policy: bring one file's cached blocks current."""
-        self._rpc()
         out: Dict[BlockKey, Tuple[Timestamp, bytes]] = {}
         for key in self.store.blocks_of(fid):
             cur = self.store.block_version(key)
@@ -203,87 +328,133 @@ class BackendService:
     ) -> Tuple[Timestamp, bytes]:
         self.stats.block_fetches += 1
         self._fetch_counts[key] += 1
-        self._rpc()
         return self.store.block(key, at_ts)
 
     def fetch_meta(self, fid: FileId, at_ts: Optional[Timestamp] = None):
         return self.store.meta(fid, at_ts)
 
-    def lookup(self, path: str, at_ts: Optional[Timestamp] = None):
-        return self.store.lookup(path, at_ts)
+    def lookup(
+        self, path: str, at_ts: Optional[Timestamp] = None
+    ) -> Tuple[Timestamp, Optional[FileId]]:
+        return self.store.lookup_versioned(path, at_ts)
+
+    def listdir(
+        self, prefix: str, at_ts: Optional[Timestamp] = None
+    ) -> List[Tuple[str, Timestamp, Optional[FileId]]]:
+        return self.store.dir_entries(prefix, at_ts)
 
     # ------------------------------------------------------------------ #
     # commit: OCC validation + atomic apply
     # ------------------------------------------------------------------ #
-    def commit(self, payload: TxnPayload) -> Timestamp:
+    def commit(self, payload: TxnPayload) -> CommitReply:
         """Validate and apply. Raises Conflict on validation failure."""
-        self._rpc()
-        if payload.read_only and not (
-            payload.writes or payload.meta_updates or payload.name_updates
-        ):
+        if payload.read_only and not payload.has_effects():
             # snapshot-read transaction: serializes at its T_R; no validation
             self.stats.commits += 1
-            return payload.read_ts
+            return CommitReply(payload.read_ts)
+        if self._group is not None:
+            return self._group.submit(payload)
+        with self.commit_lock:
+            return self._commit_locked(payload)
 
-        with self._commit_lock:
-            bad: List = []
-            # 1. block read validation (observed version still current)
-            for r in payload.reads:
-                self.stats.validation_checks += 1
-                if self.store.block_version(r.key) != r.version:
-                    bad.append(("block", r.key))
-            # 2. name resolution validation
-            for path, ver in payload.name_reads.items():
-                if self.store.name_version(path) != ver:
-                    bad.append(("name", path))
-            # 3. metadata (length) version validation
-            for fid, ver in payload.meta_reads.items():
-                try:
-                    cur_ver, _ = self.store.meta(fid)
-                except Exception:
-                    cur_ver = -1
-                if cur_ver != ver:
-                    bad.append(("meta", fid))
-            # 4. length predicates (paper §4.2: reads assert file length)
-            for pred in payload.predicates:
-                try:
-                    _, meta = self.store.meta(pred.file_id)
-                    length = meta.length if meta.exists else -1
-                except Exception:
-                    length = -1
-                if not pred.holds(length):
-                    bad.append(("predicate", pred))
-            if bad:
+    def _commit_locked(
+        self, payload: TxnPayload, service: bool = True
+    ) -> CommitReply:
+        """Full commit under an already-held commit lock."""
+        self.validate_locked(payload)
+        if service:
+            self._service()
+        ts = self.next_ts_locked()
+        touched = self.apply_locked(payload, ts)
+        self.log_commit_locked(ts, touched)
+        self.stats.commits += 1
+        if self.on_commit_applied is not None:
+            self.on_commit_applied(ts)
+        return CommitReply(ts, {k: ts for k in touched[0]})
+
+    def validate_locked(
+        self, payload: TxnPayload, record_abort: bool = True
+    ) -> None:
+        """OCC backward validation; caller holds the commit lock.
+        Raises Conflict (counting the abort unless the caller — e.g. the
+        2PC coordinator, which counts one abort per transaction, not per
+        failing shard — opts out)."""
+        bad: List = []
+        # 1. block read validation (observed version still current)
+        for r in payload.reads:
+            self.stats.validation_checks += 1
+            if self.store.block_version(r.key) != r.version:
+                bad.append(("block", r.key))
+        # 2. name resolution validation
+        for path, ver in payload.name_reads.items():
+            if self.store.name_version(path) != ver:
+                bad.append(("name", path))
+        # 3. metadata (length) version validation
+        for fid, ver in payload.meta_reads.items():
+            try:
+                cur_ver, _ = self.store.meta(fid)
+            except Exception:
+                cur_ver = -1
+            if cur_ver != ver:
+                bad.append(("meta", fid))
+        # 4. length predicates (paper §4.2: reads assert file length)
+        for pred in payload.predicates:
+            try:
+                _, meta = self.store.meta(pred.file_id)
+                length = meta.length if meta.exists else -1
+            except Exception:
+                length = -1
+            if not pred.holds(length):
+                bad.append(("predicate", pred))
+        if bad:
+            if record_abort:
                 self.stats.aborts += 1
-                raise Conflict(f"validation failed on {len(bad)} item(s)", bad)
+            raise Conflict(f"validation failed on {len(bad)} item(s)", bad)
 
-            # 5. apply atomically at the next commit timestamp
-            ts = self._next_ts()
-            touched_blocks: List[BlockKey] = []
+    def apply_locked(self, payload: TxnPayload, ts: Timestamp) -> Touched:
+        """Apply the write set at ``ts``; caller holds the commit lock.
+        All-or-nothing: an exception mid-apply rolls back this shard's
+        partial work before propagating, so a 2PC coordinator only ever
+        has to undo *fully applied* participants."""
+        touched_blocks: List[BlockKey] = []
+        touched_files: List[FileId] = []
+        touched_names: List[str] = []
+        try:
             for w in payload.writes:
                 _, base = self.store.block(w.key)
                 self.store.put_block(
                     w.key, w.apply_to(base, self.store.block_size), ts
                 )
                 touched_blocks.append(w.key)
-            touched_files: List[FileId] = []
             for fid, new_len in payload.meta_updates.items():
                 if new_len is None:
                     self.store.put_meta(fid, FileMeta(0, exists=False), ts)
                 else:
                     self.store.put_meta(fid, FileMeta(new_len, exists=True), ts)
                 touched_files.append(fid)
-            touched_names: List[str] = []
             for path, fid in payload.name_updates.items():
                 self.store.bind_name(path, fid, ts)
                 touched_names.append(path)
-            self._log.append(
-                CommitRecord(ts, touched_blocks, touched_files, touched_names)
-            )
-            if len(self._log) > self.log_horizon:
-                del self._log[: len(self._log) - self.log_horizon]
-            self.stats.commits += 1
-            return ts
+        except BaseException:
+            self.undo_locked((touched_blocks, touched_files, touched_names), ts)
+            raise
+        return touched_blocks, touched_files, touched_names
+
+    def undo_locked(self, touched: Touched, ts: Timestamp) -> None:
+        """Roll back an apply_locked(ts) (2PC abort after partial apply)."""
+        blocks, files, names = touched
+        for k in blocks:
+            self.store.pop_block(k, ts)
+        for fid in files:
+            self.store.pop_meta(fid, ts)
+        for path in names:
+            self.store.pop_name(path, ts)
+
+    def log_commit_locked(self, ts: Timestamp, touched: Touched) -> None:
+        blocks, files, names = touched
+        self._log.append(CommitRecord(ts, blocks, files, names))
+        if len(self._log) > self.log_horizon:
+            del self._log[: len(self._log) - self.log_horizon]
 
     # convenience for tests / benchmarks
     def alloc_file_id(self) -> FileId:

@@ -56,6 +56,16 @@ class Versioned:
             del self.versions[: len(self.versions) - keep]
             self.truncated = True
 
+    def pop(self, ts: Timestamp) -> None:
+        """Undo: drop the newest entry iff it carries ``ts`` (2PC rollback).
+
+        Entries GC'd by ``put`` are not restored; the chain stays marked
+        truncated, so affected snapshots raise SnapshotTooOld rather than
+        serving wrong data.
+        """
+        if self.versions and self.versions[-1][0] == ts:
+            self.versions.pop()
+
 
 @dataclass
 class FileMeta:
@@ -105,6 +115,46 @@ class BlockStore:
         with self._lock:
             v = self._names.get(path)
             return v.current()[0] if v and v.versions else 0
+
+    def lookup_versioned(
+        self, path: str, ts: Optional[Timestamp] = None
+    ) -> Tuple[Timestamp, Optional[FileId]]:
+        """(name_version, file_id) read atomically under one lock hold, so
+        OCC name validation can't race a concurrent bind between the fid
+        read and the version read."""
+        with self._lock:
+            v = self._names.get(path)
+            if v is None or not v.versions:
+                return 0, None
+            if ts is not None:
+                ent = v.at(ts)
+                return (0, None) if ent is None else (ent[0], ent[1])  # type: ignore
+            cts, fid = v.current()
+            return cts, fid  # type: ignore[return-value]
+
+    def dir_entries(
+        self, prefix: str, ts: Optional[Timestamp] = None
+    ) -> List[Tuple[str, Timestamp, Optional[FileId]]]:
+        """Direct children of ``prefix`` as (full_path, name_version, fid).
+
+        Unbound entries (fid None — unlink tombstones) are included so a
+        transaction can record their observed versions: a later re-bind of
+        an observed-absent name then fails validation.
+        """
+        if not prefix.endswith("/"):
+            prefix += "/"
+        with self._lock:
+            out: List[Tuple[str, Timestamp, Optional[FileId]]] = []
+            for path, v in self._names.items():
+                if not path.startswith(prefix) or not v.versions:
+                    continue
+                rest = path[len(prefix):]
+                if not rest or "/" in rest:
+                    continue
+                ent = v.at(ts) if ts is not None else v.current()
+                if ent is not None:
+                    out.append((path, ent[0], ent[1]))  # type: ignore[arg-type]
+            return sorted(out)
 
     def listdir(self, prefix: str, ts: Optional[Timestamp] = None) -> List[str]:
         if not prefix.endswith("/"):
@@ -168,3 +218,24 @@ class BlockStore:
     def blocks_of(self, fid: FileId) -> Iterable[BlockKey]:
         with self._lock:
             return [k for k in self._blocks if k[0] == fid]
+
+    # ------------------------------------------------------------------ #
+    # undo (2PC rollback of a partially applied cross-shard commit)
+    # ------------------------------------------------------------------ #
+    def pop_block(self, key: BlockKey, ts: Timestamp) -> None:
+        with self._lock:
+            v = self._blocks.get(key)
+            if v is not None:
+                v.pop(ts)
+
+    def pop_meta(self, fid: FileId, ts: Timestamp) -> None:
+        with self._lock:
+            v = self._meta.get(fid)
+            if v is not None:
+                v.pop(ts)
+
+    def pop_name(self, path: str, ts: Timestamp) -> None:
+        with self._lock:
+            v = self._names.get(path)
+            if v is not None:
+                v.pop(ts)

@@ -3,21 +3,30 @@
 One ``LocalServer`` lives inside each cloud-function instance (for us: each
 training/serving worker). It holds the block cache across invocations (the
 paper's key performance lever: instances are reused, caches survive between
-requests) and speaks to the ``BackendService``.
+requests) and speaks to *any* backend through the abstract ``BackendAPI``
+(in-process monolithic, sharded, latency-injected, or — eventually — a
+networked transport).
 
 A ``Transaction`` is implicitly created per function invocation: all lock
 and read operations succeed locally and speculatively; reads record the
 observed block versions in **R**, writes buffer (offset, bytes) patches in
 **W**, and POSIX length semantics are captured as predicates — all shipped
 to the backend at commit for OCC validation.
+
+Sync timestamps (``last_sync_ts``, ``read_ts``) are opaque here: scalar
+for the monolithic backend, a per-shard vector for the sharded one. All
+comparisons go through the backend's timestamp algebra (``ts_geq`` /
+``snapshot_cache_ok``), so this layer is shard-agnostic.
 """
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from collections import OrderedDict
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
-from repro.core.backend import BackendService, BeginReply, TxnPayload
+from repro.core.api import BackendAPI
+from repro.core.backend import TxnPayload
 from repro.core.types import (
     BlockKey,
     CachePolicy,
@@ -27,6 +36,7 @@ from repro.core.types import (
     NotFound,
     PredicateKind,
     ReadRecord,
+    SyncTimestamp,
     Timestamp,
     TxnStateError,
     WriteRecord,
@@ -40,29 +50,36 @@ class CacheEntry:
 
 
 class LocalServer:
-    """Per-worker block cache + backend connection (survives invocations)."""
+    """Per-worker block cache + backend connection (survives invocations).
+
+    The cache is a true LRU: hits move entries to the MRU end, inserts
+    evict from the LRU end once ``max_blocks`` is reached."""
 
     def __init__(
         self,
-        backend: BackendService,
+        backend: BackendAPI,
         policy: Optional[CachePolicy] = None,
         max_blocks: int = 65536,
     ):
         self.backend = backend
         self.policy = policy or backend.policy
         self.max_blocks = max_blocks
-        self.cache: Dict[BlockKey, CacheEntry] = {}
-        self.synced_files: Dict[FileId, Timestamp] = {}
-        self.last_sync_ts: Timestamp = 0
+        self.cache: "OrderedDict[BlockKey, CacheEntry]" = OrderedDict()
+        self.synced_files: Dict[FileId, SyncTimestamp] = {}
+        self.last_sync_ts: SyncTimestamp = backend.zero_ts
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     # ------------------------------------------------------------------ #
     def begin(self, read_only: bool = False) -> "Transaction":
-        reply = self.backend.begin(
-            self.last_sync_ts, set(self.cache), self.policy
-        )
+        with self._lock:
+            # snapshot under the lock: concurrent cache hits reorder the
+            # LRU (move_to_end), which would break a bare iteration
+            cached_keys = set(self.cache)
+            last_sync = self.last_sync_ts
+        reply = self.backend.begin(last_sync, cached_keys, self.policy)
         with self._lock:
             for key, (ver, data) in reply.updates.items():
                 self._put(key, ver, data)
@@ -77,13 +94,27 @@ class LocalServer:
         return Transaction(self, reply.read_ts, read_only=read_only)
 
     def _put(self, key: BlockKey, version: Timestamp, data: bytes) -> None:
+        if key in self.cache:
+            self.cache.move_to_end(key)
+            self.cache[key] = CacheEntry(version, data)
+            return
         if len(self.cache) >= self.max_blocks:
-            # simple clock-ish eviction: drop an arbitrary cold entry
-            self.cache.pop(next(iter(self.cache)))
+            self.cache.popitem(last=False)  # evict least-recently-used
+            self.evictions += 1
         self.cache[key] = CacheEntry(version, data)
 
+    def cache_stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "size": len(self.cache),
+                "capacity": self.max_blocks,
+            }
+
     def cached_read(
-        self, key: BlockKey, at_ts: Optional[Timestamp] = None
+        self, key: BlockKey, at_ts: Optional[SyncTimestamp] = None
     ) -> Tuple[Timestamp, bytes]:
         with self._lock:
             ent = self.cache.get(key)
@@ -91,11 +122,15 @@ class LocalServer:
                 if at_ts is None:
                     # optimistic path: staleness is caught at commit validation
                     self.hits += 1
+                    self.cache.move_to_end(key)
                     return ent.version, ent.data
-                if ent.version <= at_ts and self.last_sync_ts >= at_ts:
+                if self.backend.snapshot_cache_ok(
+                    key, ent.version, at_ts, self.last_sync_ts
+                ):
                     # snapshot path: the entry is provably the latest version
                     # <= at_ts only if the cache has been synced past at_ts
                     self.hits += 1
+                    self.cache.move_to_end(key)
                     return ent.version, ent.data
         self.misses += 1
         ver, data = self.backend.fetch_block(key, at_ts)
@@ -108,7 +143,10 @@ class LocalServer:
         if self.policy != CachePolicy.LAZY:
             return
         with self._lock:
-            if self.synced_files.get(fid, -1) >= self.last_sync_ts:
+            synced = self.synced_files.get(fid)
+            if synced is not None and self.backend.ts_geq(
+                synced, self.last_sync_ts
+            ):
                 return
             known = {
                 k: e.version for k, e in self.cache.items() if k[0] == fid
@@ -132,12 +170,17 @@ class _TxnFile:
 class Transaction:
     """One function invocation's implicit transaction."""
 
-    def __init__(self, local: LocalServer, read_ts: Timestamp, read_only: bool = False):
+    def __init__(
+        self,
+        local: LocalServer,
+        read_ts: SyncTimestamp,
+        read_only: bool = False,
+    ):
         self.local = local
         self.backend = local.backend
         self.read_ts = read_ts
         self.read_only = read_only
-        self.block_size = self.backend.store.block_size
+        self.block_size = self.backend.block_size
         self.reads: Dict[BlockKey, Timestamp] = {}
         self.writes: Dict[BlockKey, WriteRecord] = {}
         self.predicates: List[LengthPredicate] = []
@@ -156,10 +199,39 @@ class Transaction:
         at = self.read_ts if self.read_only else None
         if path in self.name_updates:
             return self.name_updates[path]
-        fid = self.backend.lookup(path, at)
+        ver, fid = self.backend.lookup(path, at)
         if not self.read_only:
-            self.name_reads[path] = self.backend.store.name_version(path)
+            self.name_reads.setdefault(path, ver)
         return fid
+
+    def readdir(self, prefix: str) -> List[str]:
+        """Direct children bound under ``prefix`` — a transactional read.
+
+        Every observed entry (including unlink tombstones) is recorded as
+        a name read, so commit validation catches a concurrent rename /
+        unlink / re-create of anything this listing depended on.
+        Txn-local name updates are overlaid, so a file created earlier in
+        the same transaction is visible.
+
+        Known limitation: a concurrent create of a *never-before-bound*
+        name leaves no version to validate against, so such phantoms are
+        not detected (full phantom protection needs per-directory version
+        objects — a cross-shard cost we haven't taken; cf. the paper,
+        which does not validate directory listings at all)."""
+        if not prefix.endswith("/"):
+            prefix += "/"
+        at = self.read_ts if self.read_only else None
+        children: Dict[str, Optional[FileId]] = {}
+        for path, ver, fid in self.backend.listdir(prefix, at):
+            if not self.read_only:
+                self.name_reads.setdefault(path, ver)
+            children[path] = fid
+        for path, fid in self.name_updates.items():
+            if path.startswith(prefix) and "/" not in path[len(prefix):]:
+                children[path] = fid
+        return sorted(
+            p[len(prefix):] for p, fid in children.items() if fid is not None
+        )
 
     def create(self, path: str, exist_ok: bool = False) -> FileId:
         self._check_open()
@@ -334,12 +406,12 @@ class Transaction:
             read_only=self.read_only,
         )
 
-    def commit(self) -> Timestamp:
+    def commit(self) -> SyncTimestamp:
         self._check_open()
         self.done = True
         payload = self.payload()
         try:
-            ts = self.backend.commit(payload)
+            reply = self.backend.commit(payload)
         except Conflict:
             # drop local cache entries for conflicting keys so the retry
             # re-fetches fresh state
@@ -352,12 +424,17 @@ class Transaction:
         # txn READ the block, our cached base is the validated base the
         # backend patched, so patch-apply is exact. Blind writes (base never
         # observed) are invalidated instead — the backend may have patched a
-        # different base.
+        # different base. The per-block committed version comes from the
+        # CommitReply (shard-local under the sharded backend).
         with self.local._lock:
             for w in payload.writes:
+                wts = reply.block_versions.get(w.key)
+                if wts is None:
+                    self.local.cache.pop(w.key, None)
+                    continue
                 ent = self.local.cache.get(w.key)
                 if w.key in self.reads and ent is not None and ent.version == self.reads[w.key]:
-                    self.local._put(w.key, ts, w.apply_to(ent.data, self.block_size))
+                    self.local._put(w.key, wts, w.apply_to(ent.data, self.block_size))
                 else:
                     fully_covered = w.apply_to(b"", self.block_size)
                     covered = bytearray(self.block_size)
@@ -368,13 +445,13 @@ class Transaction:
                                 covered[i] = 1
                                 n += 1
                     if n == self.block_size:
-                        self.local._put(w.key, ts, fully_covered)
+                        self.local._put(w.key, wts, fully_covered)
                     else:
                         self.local.cache.pop(w.key, None)
             # NOTE: last_sync_ts must NOT advance here — other clients may
             # have committed between our begin and our commit, and we have
             # not seen their cache updates (snapshot reads rely on this).
-        return ts
+        return reply.ts
 
     def abort(self) -> None:
         self.done = True

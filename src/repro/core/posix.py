@@ -17,6 +17,7 @@ import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.core.blockstore import SnapshotTooOld
 from repro.core.client import Transaction
 from repro.core.types import Exists, NotFound, WriteRecord
 
@@ -146,15 +147,19 @@ class FaaSFS:
         self.txn.create(p + "/.dir", exist_ok=True)
 
     def readdir(self, path: str) -> List[str]:
-        p = self._norm(path)
-        at = self.txn.read_ts if self.txn.read_only else None
-        names = self.txn.backend.store.listdir(p, at)
+        # a transactional read: the txn records every observed entry so
+        # commit validation catches concurrent namespace changes, and
+        # txn-local creates/unlinks are overlaid (see Transaction.readdir)
+        names = self.txn.readdir(self._norm(path))
         return [n for n in names if n != ".dir"]
 
     def exists(self, path: str) -> bool:
         try:
             return self.txn.lookup(self._norm(path)) is not None
-        except ValueError:
+        except (ValueError, SnapshotTooOld):
+            # SnapshotTooOld must surface: a GC'd undo entry means "cannot
+            # answer at this snapshot", not "file absent" — swallowing it
+            # would report a phantom deletion to snapshot readers
             raise
         except Exception:
             return False

@@ -1,0 +1,380 @@
+"""Horizontally sharded transactional backend (λFS/Cloudburst-style).
+
+``ShardedBackend`` hash-partitions state across N independent
+``BackendService`` shards, each with its own sequencer, commit lock,
+transaction log and undo chains:
+
+  * **blocks + file metadata** partition by file id (a file's blocks are
+    colocated with its metadata so file-local operations — sync_file,
+    length predicates, RMW on one file — stay single-shard). File ids are
+    allocated round-robin by the coordinator, so files spread uniformly.
+  * **namespace entries** partition by a hash of the path.
+
+**Global ordering** is tracked by a *sync vector* — one commit timestamp
+per shard. Clients exchange vectors through the ``BackendAPI`` timestamp
+algebra and never interpret them; block versions stay shard-local scalars
+(a block lives entirely on one shard, and OCC validation only ever
+compares a block's observed version for equality on its home shard).
+
+**Snapshot consistency.** ``begin`` hands out the last *registered*
+vector — updated only after a commit has fully applied, and, for a
+cross-shard commit, updated for all participants atomically while the
+coordinator still holds every participant's commit lock. Hence any
+vector a client ever observes is a consistent cut: it either includes a
+cross-shard transaction on all shards or on none. The vector is read
+*before* the per-shard cache-update scans, so each component is ≤ the
+point the client's cache is synced through — the invariant snapshot
+cache hits rely on.
+
+**Cross-shard commits** run two-phase commit. The coordinator splits the
+payload per shard, acquires participant commit locks in shard order (no
+deadlocks), validates every shard's part (in parallel for >1
+participant), assigns each shard's next local timestamp plus a
+coordinator-assigned global timestamp, applies on every shard, registers
+the sync vector, then releases the locks. A Conflict on any shard aborts
+the whole transaction before anything applies; an unexpected apply
+failure rolls already-applied shards back through their undo chains.
+Single-shard transactions — the common case by construction — take the
+existing monolithic fast path untouched, including that shard's
+group-commit batching.
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.api import BackendAPI, CommitReply
+from repro.core.backend import (
+    BackendService,
+    BackendStats,
+    BeginReply,
+    Touched,
+    TxnPayload,
+)
+from repro.core.types import (
+    BLOCK_SIZE_DEFAULT,
+    BlockKey,
+    CachePolicy,
+    Conflict,
+    FileId,
+    Timestamp,
+)
+
+SyncVector = Tuple[Timestamp, ...]
+
+
+@dataclass
+class CoordinatorStats:
+    fast_commits: int = 0        # single-shard fast-path commits
+    cross_commits: int = 0       # 2PC commits
+    cross_aborts: int = 0        # 2PC validation aborts
+    snapshot_commits: int = 0    # read-only commits
+
+
+class ShardedBackend(BackendAPI):
+    def __init__(
+        self,
+        n_shards: int = 4,
+        block_size: int = BLOCK_SIZE_DEFAULT,
+        versions_kept: int = 16,
+        policy: CachePolicy = CachePolicy.INVALIDATE,
+        hot_threshold: int = 3,
+        log_horizon: int = 4096,
+        group_commit_window_s: float = 0.0,
+        commit_service_s: float = 0.0,
+    ):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.n_shards = n_shards
+        self.policy = policy
+        self.shards = [
+            BackendService(
+                block_size=block_size,
+                versions_kept=versions_kept,
+                policy=policy,
+                hot_threshold=hot_threshold,
+                log_horizon=log_horizon,
+                group_commit_window_s=group_commit_window_s,
+                commit_service_s=commit_service_s,
+            )
+            for _ in range(n_shards)
+        ]
+        for i, sh in enumerate(self.shards):
+            sh.on_commit_applied = self._make_register(i)
+        self._vec_lock = threading.Lock()
+        self._applied: List[Timestamp] = [0] * n_shards
+        self._gts = 0  # coordinator-assigned global commit timestamp
+        self._fid_lock = threading.Lock()
+        self._next_fid = 1
+        self.coord_stats = CoordinatorStats()
+
+    # ------------------------------------------------------------------ #
+    # partitioning
+    # ------------------------------------------------------------------ #
+    def shard_of_fid(self, fid: FileId) -> int:
+        return fid % self.n_shards
+
+    def shard_of_block(self, key: BlockKey) -> int:
+        return self.shard_of_fid(key[0])
+
+    def shard_of_name(self, path: str) -> int:
+        return zlib.crc32(path.encode()) % self.n_shards
+
+    # ------------------------------------------------------------------ #
+    # sync-vector registration (the consistent-cut machinery)
+    # ------------------------------------------------------------------ #
+    def _make_register(self, shard_idx: int):
+        def register(ts: Timestamp) -> None:
+            # called by the shard under ITS commit lock, after full apply
+            with self._vec_lock:
+                self._gts += 1
+                if ts > self._applied[shard_idx]:
+                    self._applied[shard_idx] = ts
+        return register
+
+    def _registered_vector(self) -> SyncVector:
+        with self._vec_lock:
+            return tuple(self._applied)
+
+    # ------------------------------------------------------------------ #
+    # BackendAPI: properties + timestamp algebra
+    # ------------------------------------------------------------------ #
+    @property
+    def block_size(self) -> int:
+        return self.shards[0].block_size
+
+    @property
+    def zero_ts(self) -> SyncVector:
+        return (0,) * self.n_shards
+
+    @property
+    def latest_ts(self) -> SyncVector:
+        return self._registered_vector()
+
+    @property
+    def stats(self) -> BackendStats:
+        """Aggregate of per-shard stats plus the coordinator's 2PC
+        commits/aborts (2PC validation failures are NOT also counted on
+        the failing shards, so one logical abort counts once). Note
+        ``begins`` counts per-shard log scans — n_shards per client
+        begin, since begin fans out to every shard."""
+        agg = BackendStats()
+        for sh in self.shards:
+            s = sh.stats
+            agg.commits += s.commits
+            agg.aborts += s.aborts
+            agg.begins += s.begins
+            agg.blocks_pushed += s.blocks_pushed
+            agg.blocks_invalidated += s.blocks_invalidated
+            agg.block_fetches += s.block_fetches
+            agg.bytes_pushed += s.bytes_pushed
+            agg.validation_checks += s.validation_checks
+            agg.group_batches += s.group_batches
+            agg.group_committed += s.group_committed
+        agg.commits += self.coord_stats.cross_commits
+        agg.aborts += self.coord_stats.cross_aborts
+        return agg
+
+    def ts_geq(self, a, b) -> bool:
+        return all(x >= y for x, y in zip(a, b))
+
+    def snapshot_cache_ok(self, key, version, at_ts, last_sync_ts) -> bool:
+        s = self.shard_of_block(key)
+        return version <= at_ts[s] and last_sync_ts[s] >= at_ts[s]
+
+    def _local_at(self, at_ts, shard_idx: int) -> Optional[Timestamp]:
+        if at_ts is None:
+            return None
+        return at_ts[shard_idx]
+
+    # ------------------------------------------------------------------ #
+    # BackendAPI: RPCs
+    # ------------------------------------------------------------------ #
+    def begin(
+        self,
+        last_sync_ts,
+        cached_keys: Optional[Set[BlockKey]] = None,
+        policy: Optional[CachePolicy] = None,
+    ) -> BeginReply:
+        # Take the snapshot vector BEFORE the per-shard scans: every
+        # component is then ≤ the log point each shard's reply covers,
+        # so advancing the client's last_sync_ts to this vector never
+        # claims sync coverage the cache doesn't have.
+        read_vec = self._registered_vector()
+        last = self._as_vector(last_sync_ts)
+        keys_by_shard: List[Optional[Set[BlockKey]]]
+        if cached_keys is None:
+            keys_by_shard = [None] * self.n_shards
+        else:
+            keys_by_shard = [set() for _ in range(self.n_shards)]
+            for k in cached_keys:
+                keys_by_shard[self.shard_of_block(k)].add(k)  # type: ignore
+
+        updates: Dict[BlockKey, Tuple[Timestamp, bytes]] = {}
+        invals: List[BlockKey] = []
+        file_invals: List[FileId] = []
+        for i, sh in enumerate(self.shards):
+            r = sh.begin(last[i], keys_by_shard[i], policy)
+            updates.update(r.updates)
+            invals.extend(r.invalidations)
+            file_invals.extend(r.file_invalidations)
+        return BeginReply(read_vec, updates, invals, file_invals)
+
+    def _as_vector(self, ts) -> SyncVector:
+        if isinstance(ts, int):
+            return (ts,) * self.n_shards
+        return tuple(ts)
+
+    def sync_file(self, fid, known_versions):
+        return self.shards[self.shard_of_fid(fid)].sync_file(
+            fid, known_versions
+        )
+
+    def fetch_block(self, key, at_ts=None):
+        s = self.shard_of_block(key)
+        return self.shards[s].fetch_block(key, self._local_at(at_ts, s))
+
+    def fetch_meta(self, fid, at_ts=None):
+        s = self.shard_of_fid(fid)
+        return self.shards[s].fetch_meta(fid, self._local_at(at_ts, s))
+
+    def lookup(self, path, at_ts=None):
+        s = self.shard_of_name(path)
+        return self.shards[s].lookup(path, self._local_at(at_ts, s))
+
+    def listdir(self, prefix, at_ts=None):
+        out: List[Tuple[str, Timestamp, Optional[FileId]]] = []
+        for i, sh in enumerate(self.shards):
+            out.extend(sh.listdir(prefix, self._local_at(at_ts, i)))
+        return sorted(out)
+
+    def alloc_file_id(self) -> FileId:
+        with self._fid_lock:
+            fid = self._next_fid
+            self._next_fid += 1
+            return fid
+
+    # ------------------------------------------------------------------ #
+    # commit: single-shard fast path or cross-shard 2PC
+    # ------------------------------------------------------------------ #
+    def commit(self, payload: TxnPayload) -> CommitReply:
+        """Commit. The reply's ``ts`` is always a coordinator-global
+        scalar (never a shard-local clock or a vector), so consumers that
+        store or order commit timestamps see one uniform kind across the
+        fast path, 2PC, and read-only commits; per-block shard-local
+        versions travel in ``block_versions``."""
+        if payload.read_only and not payload.has_effects():
+            self.coord_stats.snapshot_commits += 1
+            return CommitReply(self._current_gts())
+        parts = self._split(payload)
+        if len(parts) == 1:
+            ((s, part),) = parts.items()
+            reply = self.shards[s].commit(part)
+            self.coord_stats.fast_commits += 1
+            # the shard registered this commit (bumping _gts) before its
+            # commit returned, so the gts read here is >= the one this
+            # commit was assigned — a valid monotone commit token
+            return CommitReply(self._current_gts(), reply.block_versions)
+        return self._commit_2pc(parts)
+
+    def _current_gts(self) -> Timestamp:
+        with self._vec_lock:
+            return self._gts
+
+    def _split(self, payload: TxnPayload) -> Dict[int, TxnPayload]:
+        parts: Dict[int, TxnPayload] = {}
+
+        def part(s: int) -> TxnPayload:
+            p = parts.get(s)
+            if p is None:
+                local_read = (
+                    payload.read_ts[s]
+                    if isinstance(payload.read_ts, tuple)
+                    else payload.read_ts
+                )
+                p = TxnPayload(read_ts=local_read, read_only=payload.read_only)
+                parts[s] = p
+            return p
+
+        for r in payload.reads:
+            part(self.shard_of_block(r.key)).reads.append(r)
+        for w in payload.writes:
+            part(self.shard_of_block(w.key)).writes.append(w)
+        for pred in payload.predicates:
+            part(self.shard_of_fid(pred.file_id)).predicates.append(pred)
+        for fid, new_len in payload.meta_updates.items():
+            part(self.shard_of_fid(fid)).meta_updates[fid] = new_len
+        for fid, ver in payload.meta_reads.items():
+            part(self.shard_of_fid(fid)).meta_reads[fid] = ver
+        for path, fid in payload.name_updates.items():
+            part(self.shard_of_name(path)).name_updates[path] = fid
+        for path, ver in payload.name_reads.items():
+            part(self.shard_of_name(path)).name_reads[path] = ver
+        if not parts:  # effect-free non-read-only txn: pure validation
+            parts[0] = TxnPayload(
+                read_ts=payload.read_ts[0]
+                if isinstance(payload.read_ts, tuple)
+                else payload.read_ts,
+                read_only=payload.read_only,
+            )
+        return parts
+
+    def _commit_2pc(self, parts: Dict[int, TxnPayload]) -> CommitReply:
+        order = sorted(parts)
+        for s in order:
+            self.shards[s].commit_lock.acquire()
+        try:
+            # ---- phase 1: per-shard OCC validation (prepare). In-process
+            # validation is pure-Python work the GIL serializes anyway, so
+            # shards validate in a plain loop; a networked transport would
+            # fan the prepare RPCs out concurrently instead.
+            errors: Dict[int, Conflict] = {}
+            for s in order:
+                try:
+                    self.shards[s].validate_locked(parts[s], record_abort=False)
+                except Conflict as e:
+                    errors[s] = e
+            if errors:
+                self.coord_stats.cross_aborts += 1
+                keys: List = []
+                for e in errors.values():
+                    keys.extend(e.keys)
+                raise Conflict(
+                    f"2pc validation failed on {len(errors)} shard(s)", keys
+                )
+
+            # ---- phase 2: apply everywhere, undo on unexpected failure ----
+            ts_map = {s: self.shards[s].next_ts_locked() for s in order}
+            applied: List[Tuple[int, Touched]] = []
+            try:
+                for s in order:
+                    self.shards[s]._service()
+                    touched = self.shards[s].apply_locked(parts[s], ts_map[s])
+                    applied.append((s, touched))
+            except BaseException:
+                for s, touched in reversed(applied):
+                    self.shards[s].undo_locked(touched, ts_map[s])
+                raise
+            for s, touched in applied:
+                self.shards[s].log_commit_locked(ts_map[s], touched)
+
+            # ---- register: atomic for all participants (consistent cut) ----
+            with self._vec_lock:
+                self._gts += 1
+                gts = self._gts
+                for s in order:
+                    if ts_map[s] > self._applied[s]:
+                        self._applied[s] = ts_map[s]
+            self.coord_stats.cross_commits += 1
+
+            block_versions = {
+                w.key: ts_map[s]
+                for s in order
+                for w in parts[s].writes
+            }
+            return CommitReply(gts, block_versions)
+        finally:
+            for s in reversed(order):
+                self.shards[s].commit_lock.release()

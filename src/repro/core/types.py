@@ -8,9 +8,16 @@ from typing import Dict, List, Optional, Tuple
 BLOCK_SIZE_DEFAULT = 4096           # POSIX byte-file layer
 TENSOR_BLOCK_BYTES = 4 * 2**20      # tensor-state layer (4 MiB slabs)
 
-Timestamp = int
+Timestamp = int                     # shard-local commit timestamp
 FileId = int
 BlockKey = Tuple[int, int]          # (file_id, block_index)
+
+# A client's global sync position. The monolithic backend uses a plain
+# Timestamp; the sharded backend uses a vector of per-shard timestamps
+# (one component per shard, compared componentwise). Client code never
+# inspects it directly — it round-trips through the BackendAPI, which
+# supplies ``zero_ts`` / ``ts_geq`` / ``snapshot_cache_ok`` helpers.
+SyncTimestamp = object  # Timestamp | Tuple[Timestamp, ...]
 
 
 class Conflict(Exception):

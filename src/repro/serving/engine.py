@@ -68,7 +68,7 @@ class SnapshotServer:
         self.version = holder["ts"]
         self.stats.refreshes += 1
         self.stats.refresh_bytes += (
-            (self.local.misses - before) * self.local.backend.store.block_size
+            (self.local.misses - before) * self.local.backend.block_size
         )
         return self.version
 

@@ -1,0 +1,23 @@
+"""Shared fixtures: run backend-agnostic suites against both the
+monolithic ``BackendService`` and the ``ShardedBackend`` (2 and 4 shards),
+so every OCC / POSIX / snapshot / checkpoint invariant is exercised over
+single-shard fast-path commits AND cross-shard 2PC commits."""
+import pytest
+
+from repro.core.backend import BackendService
+from repro.core.sharded import ShardedBackend
+
+BACKEND_KINDS = ("mono", "sharded2", "sharded4")
+
+
+@pytest.fixture(params=BACKEND_KINDS)
+def backend_factory(request):
+    kind = request.param
+
+    def make(**kwargs):
+        if kind == "mono":
+            return BackendService(**kwargs)
+        return ShardedBackend(n_shards=int(kind[len("sharded"):]), **kwargs)
+
+    make.kind = kind
+    return make

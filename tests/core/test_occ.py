@@ -6,9 +6,14 @@ from repro.core.client import LocalServer
 from repro.core.types import CachePolicy, Conflict
 
 
-def make(policy=CachePolicy.EAGER, block_size=16):
-    be = BackendService(block_size=block_size, policy=policy)
-    return be
+@pytest.fixture
+def make(backend_factory):
+    """Backend constructor parametrized over monolithic/sharded kinds."""
+
+    def _make(policy=CachePolicy.EAGER, block_size=16):
+        return backend_factory(block_size=block_size, policy=policy)
+
+    return _make
 
 
 def new_file(local, path="/f", size=0):
@@ -20,7 +25,7 @@ def new_file(local, path="/f", size=0):
     return fid
 
 
-def test_write_write_conflict_aborts():
+def test_write_write_conflict_aborts(make):
     be = make()
     a, b = LocalServer(be), LocalServer(be)
     fid = new_file(a, size=16)
@@ -36,7 +41,7 @@ def test_write_write_conflict_aborts():
         tb.commit()
 
 
-def test_disjoint_block_writes_both_commit():
+def test_disjoint_block_writes_both_commit(make):
     be = make()
     a, b = LocalServer(be), LocalServer(be)
     fid = new_file(a, size=64)  # 4 blocks of 16
@@ -56,7 +61,7 @@ def test_disjoint_block_writes_both_commit():
     tc.commit()
 
 
-def test_blind_write_does_not_conflict():
+def test_blind_write_does_not_conflict(make):
     """Writes without reads validate nothing (paper: only R is validated)."""
     be = make()
     a, b = LocalServer(be), LocalServer(be)
@@ -72,7 +77,7 @@ def test_blind_write_does_not_conflict():
     tc.commit()
 
 
-def test_stale_policy_aborts_on_stale_read():
+def test_stale_policy_aborts_on_stale_read(make):
     """'Do nothing at begin' policy: commit validation catches staleness."""
     be = make(policy=CachePolicy.STALE)
     a, b = LocalServer(be), LocalServer(be)
@@ -101,7 +106,7 @@ def test_stale_policy_aborts_on_stale_read():
     assert tb.read(fid, 0, 4) == b"AAAA" or tb.read(fid, 0, 4) == b"\0\0\0\0"
 
 
-def test_read_only_snapshot_never_aborts():
+def test_read_only_snapshot_never_aborts(make):
     be = make()
     a, b = LocalServer(be), LocalServer(be)
     fid = new_file(a, size=16)
@@ -121,7 +126,7 @@ def test_read_only_snapshot_never_aborts():
     tb.commit()
 
 
-def test_length_predicate_append_conflict():
+def test_length_predicate_append_conflict(make):
     """Reads near EOF assert the length; a concurrent append invalidates."""
     be = make()
     a, b = LocalServer(be), LocalServer(be)
@@ -140,7 +145,7 @@ def test_length_predicate_append_conflict():
         tb.commit()
 
 
-def test_read_beyond_eof_le_predicate():
+def test_read_beyond_eof_le_predicate(make):
     be = make()
     a, b = LocalServer(be), LocalServer(be)
     fid = new_file(a, size=8)
@@ -156,7 +161,7 @@ def test_read_beyond_eof_le_predicate():
         tb.commit()
 
 
-def test_rename_atomicity():
+def test_rename_atomicity(make):
     be = make()
     a = LocalServer(be)
     new_file(a, "/src", size=4)
@@ -169,7 +174,7 @@ def test_rename_atomicity():
     t2.commit()
 
 
-def test_name_conflict_on_concurrent_rename():
+def test_name_conflict_on_concurrent_rename(make):
     be = make()
     a, b = LocalServer(be), LocalServer(be)
     new_file(a, "/f", size=4)

@@ -9,8 +9,8 @@ from repro.core.types import Conflict, Exists, NotFound
 
 
 @pytest.fixture
-def local():
-    return LocalServer(BackendService(block_size=16))
+def local(backend_factory):
+    return LocalServer(backend_factory(block_size=16))
 
 
 def test_open_create_write_read(local):
@@ -140,6 +140,62 @@ def test_readdir(local):
     run_function(local, check, read_only=True)
 
 
+def test_readdir_sees_txn_local_creates(local):
+    def fn(fs):
+        fs.mkdir("/mnt/tsfs/w")
+        fs.open("/mnt/tsfs/w/pre", O_CREAT)
+        # created in THIS txn, not yet committed — must still be listed
+        assert fs.readdir("/mnt/tsfs/w") == ["pre"]
+        fs.open("/mnt/tsfs/w/also", O_CREAT)
+        assert fs.readdir("/mnt/tsfs/w") == ["also", "pre"]
+
+    run_function(local, fn)
+
+
+def test_readdir_unlink_in_txn_hides_entry(local):
+    def setup(fs):
+        fs.mkdir("/mnt/tsfs/u")
+        for n in ("a", "b"):
+            fs.open(f"/mnt/tsfs/u/{n}", O_CREAT)
+
+    run_function(local, setup)
+
+    def fn(fs):
+        fs.unlink("/mnt/tsfs/u/a")
+        assert fs.readdir("/mnt/tsfs/u") == ["b"]
+
+    run_function(local, fn)
+
+
+def test_readdir_is_validated_against_concurrent_unlink(backend_factory):
+    """readdir records the observed entries; a concurrent unlink of a
+    listed name must abort the lister (the old implementation reached
+    into backend.store and validated nothing)."""
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    def setup(fs):
+        fs.mkdir("/mnt/tsfs/d")
+        for n in ("x", "y"):
+            fs.open(f"/mnt/tsfs/d/{n}", O_CREAT)
+
+    run_function(a, setup)
+
+    ta = a.begin()
+    fa = FaaSFS(ta)
+    assert fa.readdir("/mnt/tsfs/d") == ["x", "y"]
+    fd = fa.open("/mnt/tsfs/d/manifest", O_CREAT)
+    fa.write(fd, b"x,y")            # decision derived from the listing
+
+    def remove(fs):
+        fs.unlink("/mnt/tsfs/d/x")
+
+    run_function(b, remove)
+
+    with pytest.raises(Conflict):
+        ta.commit()
+
+
 def test_path_routing_outside_mount(local):
     def fn(fs):
         with pytest.raises(ValueError):
@@ -148,8 +204,8 @@ def test_path_routing_outside_mount(local):
     run_function(local, fn)
 
 
-def test_flock_elision_conflicts():
-    be = BackendService(block_size=16)
+def test_flock_elision_conflicts(backend_factory):
+    be = backend_factory(block_size=16)
     a, b = LocalServer(be), LocalServer(be)
 
     def setup(fs):

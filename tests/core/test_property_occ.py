@@ -10,6 +10,8 @@ Invariants checked against randomized workloads:
 import threading
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency (see requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

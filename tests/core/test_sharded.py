@@ -1,0 +1,345 @@
+"""Cross-shard semantics of ShardedBackend: 2PC atomicity, consistent
+snapshots across shards, group-commit batching, and partitioning sanity."""
+import threading
+
+import pytest
+
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.posix import FaaSFS, O_CREAT
+from repro.core.retry import run_function
+from repro.core.sharded import ShardedBackend
+from repro.core.types import CachePolicy, Conflict
+
+
+def path_on_shard(be: ShardedBackend, shard: int, stem: str) -> str:
+    """Deterministic FULL path (mount prefix included — that's what gets
+    hashed) whose namespace entry lives on ``shard``."""
+    for i in range(10_000):
+        p = f"/mnt/tsfs/{stem}{i}"
+        if be.shard_of_name(p) == shard:
+            return p
+    raise AssertionError("no path found")  # pragma: no cover
+
+
+def new_file(local, path, size=0):
+    txn = local.begin()
+    fid = txn.create(path)
+    if size:
+        txn.write(fid, 0, b"\0" * size)
+    txn.commit()
+    return fid
+
+
+def test_state_spreads_across_shards():
+    be = ShardedBackend(n_shards=4, block_size=16)
+    a = LocalServer(be)
+    fids = [new_file(a, f"/f{i}", size=16) for i in range(8)]
+    assert {be.shard_of_fid(f) for f in fids} == {0, 1, 2, 3}
+    holding_blocks = [sh for sh in be.shards if list(sh.store._blocks)]
+    holding_names = [sh for sh in be.shards if sh.store._names]
+    assert len(holding_blocks) == 4      # round-robin fids spread block state
+    assert len(holding_names) >= 2       # path hash spreads the namespace
+
+
+def test_cross_shard_ww_conflict_aborts_exactly_one():
+    be = ShardedBackend(n_shards=2, block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+    f1 = new_file(a, "/x", size=16)
+    f2 = new_file(a, "/y", size=16)
+    assert be.shard_of_fid(f1) != be.shard_of_fid(f2)  # genuinely cross-shard
+
+    ta, tb = a.begin(), b.begin()
+    for t in (ta, tb):
+        t.read(f1, 0, 4)
+        t.read(f2, 0, 4)
+        t.write(f1, 0, b"AAAA")
+        t.write(f2, 0, b"BBBB")
+    ta.commit()                    # first racer commits via 2PC
+    with pytest.raises(Conflict):
+        tb.commit()                # second aborts on both shards' reads
+
+    tc = a.begin()
+    assert tc.read(f1, 0, 4) == b"AAAA"
+    assert tc.read(f2, 0, 4) == b"BBBB"
+    tc.commit()
+
+
+def test_2pc_abort_leaves_no_partial_state():
+    """A conflicted cross-shard commit must not leave writes on ANY shard."""
+    be = ShardedBackend(n_shards=2, block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+    f1 = new_file(a, "/x", size=16)
+    f2 = new_file(a, "/y", size=16)
+    s2 = be.shards[be.shard_of_fid(f2)]
+    v2_before = s2.store.block_version((f2, 0))
+
+    ta = a.begin()
+    ta.read(f1, 0, 4)
+    ta.write(f1, 0, b"TTTT")
+    ta.write(f2, 0, b"TTTT")       # second shard participant
+
+    tb = b.begin()                 # invalidate ta's read on f1's shard
+    tb.read(f1, 0, 4)
+    tb.write(f1, 0, b"ZZZZ")
+    tb.commit()
+
+    with pytest.raises(Conflict):
+        ta.commit()
+    # the non-conflicting shard saw no partial apply
+    assert s2.store.block_version((f2, 0)) == v2_before
+    tc = a.begin()
+    assert tc.read(f2, 0, 4) == b"\0\0\0\0"
+    assert tc.read(f1, 0, 4) == b"ZZZZ"
+    tc.commit()
+
+
+def test_cross_shard_rename_atomic_snapshots():
+    """A rename spanning two name shards is never observed under both
+    names or neither name by any snapshot reader."""
+    # versions_kept > number of flips: the name chains must retain every
+    # version a concurrently pinned snapshot might need (otherwise GC
+    # legitimately raises SnapshotTooOld, which is not what we test here)
+    be = ShardedBackend(
+        n_shards=2, block_size=16, policy=CachePolicy.STALE, versions_kept=128
+    )
+    w = LocalServer(be)
+    src = path_on_shard(be, 0, "src")
+    dst = path_on_shard(be, 1, "dst")
+    assert be.shard_of_name(src) != be.shard_of_name(dst)
+
+    def create(fs):
+        fd = fs.open(src, O_CREAT)
+        fs.write(fd, b"payload")
+
+    run_function(w, create)
+
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        from repro.core.blockstore import SnapshotTooOld
+
+        r = LocalServer(be)
+        while not stop.is_set():
+            txn = r.begin(read_only=True)
+            fs = FaaSFS(txn)
+            try:
+                visible = [p for p in (src, dst) if fs.exists(p)]
+            except SnapshotTooOld:
+                txn.abort()
+                continue
+            txn.commit()
+            if len(visible) != 1:
+                errors.append(visible)
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    cur, other = src, dst
+    for _ in range(50):            # ping-pong the name between shards
+        def flip(fs, cur=cur, other=other):
+            fs.rename(cur, other)
+
+        run_function(w, flip)
+        cur, other = other, cur
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, f"torn rename snapshots observed: {errors[:3]}"
+
+
+def test_snapshot_sum_invariant_across_shards():
+    """Writers move value between two files on different shards; snapshot
+    readers must always see the conserved total."""
+    from repro.core.blockstore import SnapshotTooOld
+
+    be = ShardedBackend(n_shards=2, block_size=16, versions_kept=64)
+    w = LocalServer(be)
+    f1 = new_file(w, "/acct_a", size=8)
+    f2 = new_file(w, "/acct_b", size=8)
+    assert be.shard_of_fid(f1) != be.shard_of_fid(f2)
+
+    t = w.begin()
+    t.write(f1, 0, (100).to_bytes(8, "little"))
+    t.commit()
+
+    stop = threading.Event()
+    errors = []
+
+    def transfer():
+        local = LocalServer(be)
+        for i in range(40):
+            while True:
+                txn = local.begin()
+                a = int.from_bytes(txn.read(f1, 0, 8), "little")
+                b = int.from_bytes(txn.read(f2, 0, 8), "little")
+                amt = (i % 5) + 1
+                if a >= amt:
+                    txn.write(f1, 0, (a - amt).to_bytes(8, "little"))
+                    txn.write(f2, 0, (b + amt).to_bytes(8, "little"))
+                else:
+                    txn.write(f1, 0, (a + b).to_bytes(8, "little"))
+                    txn.write(f2, 0, (0).to_bytes(8, "little"))
+                try:
+                    txn.commit()
+                    break
+                except Conflict:
+                    continue
+
+    def audit():
+        local = LocalServer(be)
+        while not stop.is_set():
+            txn = local.begin(read_only=True)
+            try:
+                a = int.from_bytes(txn.read(f1, 0, 8), "little")
+                b = int.from_bytes(txn.read(f2, 0, 8), "little")
+            except SnapshotTooOld:
+                # hot-block churn outran the undo log for this snapshot —
+                # the system refused (rather than misread); retry fresh
+                txn.abort()
+                continue
+            txn.commit()
+            if a + b != 100:
+                errors.append((a, b))
+                return
+
+    writers = [threading.Thread(target=transfer) for _ in range(2)]
+    auditors = [threading.Thread(target=audit) for _ in range(2)]
+    for t in auditors + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in auditors:
+        t.join()
+    assert not errors, f"inconsistent cross-shard snapshots: {errors[:3]}"
+
+
+def test_single_shard_fast_path_is_used():
+    be = ShardedBackend(n_shards=4, block_size=16)
+    a = LocalServer(be)
+    f1 = new_file(a, "/solo", size=16)
+    f2 = new_file(a, "/other", size=16)
+
+    fast_before, cross_before = (
+        be.coord_stats.fast_commits, be.coord_stats.cross_commits,
+    )
+    txn = a.begin()                    # single-file RMW: one shard
+    txn.read(f1, 0, 4)
+    txn.write(f1, 0, b"QQQQ")
+    txn.commit()
+    assert be.coord_stats.fast_commits == fast_before + 1
+    assert be.coord_stats.cross_commits == cross_before
+
+    txn = a.begin()                    # two files on two shards: 2PC
+    txn.write(f1, 0, b"RRRR")
+    txn.write(f2, 0, b"RRRR")
+    txn.commit()
+    assert be.coord_stats.cross_commits == cross_before + 1
+
+
+def test_group_commit_batches_amortize_lock_acquisitions():
+    be = BackendService(block_size=16, group_commit_window_s=0.02)
+    setup = LocalServer(be)
+    fids = [new_file(setup, f"/g{i}", size=16) for i in range(4)]
+
+    committed_before = be.stats.group_committed
+    batches_before = be.stats.group_batches
+    barrier = threading.Barrier(4)
+
+    def worker(i):
+        local = LocalServer(be)
+        barrier.wait()
+        for _ in range(3):
+            txn = local.begin()
+            cur = int.from_bytes(txn.read(fids[i], 0, 8), "little")
+            txn.write(fids[i], 0, (cur + 1).to_bytes(8, "little"))
+            txn.commit()
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    committed = be.stats.group_committed - committed_before
+    batches = be.stats.group_batches - batches_before
+    assert committed == 12                         # all write txns batched
+    assert 0 < batches < 12                        # fewer lock acquisitions
+    check = setup.begin()
+    for i in range(4):
+        assert int.from_bytes(check.read(fids[i], 0, 8), "little") == 3
+    check.commit()
+
+
+def test_group_commit_validates_against_batch_members():
+    """Two conflicting increments landing in one batch: exactly one wins."""
+    be = BackendService(block_size=16, group_commit_window_s=0.02)
+    setup = LocalServer(be)
+    fid = new_file(setup, "/ctr", size=16)
+
+    barrier = threading.Barrier(2)
+    results = []
+
+    def worker():
+        local = LocalServer(be)
+        txn = local.begin()
+        cur = int.from_bytes(txn.read(fid, 0, 8), "little")
+        txn.write(fid, 0, (cur + 1).to_bytes(8, "little"))
+        barrier.wait()
+        try:
+            txn.commit()
+            results.append("commit")
+        except Conflict:
+            results.append("abort")
+
+    threads = [threading.Thread(target=worker) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(results) == ["abort", "commit"]
+
+
+def test_exists_surfaces_snapshot_too_old_instead_of_false():
+    """A pinned snapshot whose name-chain undo entries were GC'd must get
+    SnapshotTooOld from exists(), not a silent 'file absent'."""
+    from repro.core.blockstore import SnapshotTooOld
+
+    be = BackendService(block_size=16, versions_kept=4)
+    w = LocalServer(be)
+
+    def create(fs):
+        fs.open("/mnt/tsfs/hot", O_CREAT)
+
+    run_function(w, create)
+    r = LocalServer(be)
+    txn = r.begin(read_only=True)      # pin the snapshot
+    fs = FaaSFS(txn)
+    cur, other = "/mnt/tsfs/hot", "/mnt/tsfs/cold"
+    for _ in range(10):                # churn the name past versions_kept
+        def flip(fs2, cur=cur, other=other):
+            fs2.rename(cur, other)
+
+        run_function(w, flip)
+        cur, other = other, cur
+    with pytest.raises(SnapshotTooOld):
+        fs.exists("/mnt/tsfs/hot")
+
+
+def test_lru_cache_evicts_oldest_and_counts():
+    be = BackendService(block_size=16)
+    local = LocalServer(be, max_blocks=3)
+    for i in range(3):
+        local._put((1, i), 1, b"x" * 16)
+    local.cached_read((1, 0))             # hit: (1,0) becomes MRU
+    local._put((1, 3), 1, b"y" * 16)      # evicts LRU -> (1,1)
+    assert (1, 0) in local.cache
+    assert (1, 1) not in local.cache
+    assert (1, 2) in local.cache and (1, 3) in local.cache
+    stats = local.cache_stats()
+    assert stats["evictions"] == 1
+    assert stats["size"] == 3 and stats["capacity"] == 3
+    assert stats["hits"] == 1

@@ -44,10 +44,10 @@ def _read(local) -> int:
 
 
 @pytest.mark.parametrize("policy", list(CachePolicy))
-def test_snapshot_read_sees_latest_commit(policy):
+def test_snapshot_read_sees_latest_commit(policy, backend_factory):
     """A fresh read-only txn must observe every previously committed value,
     regardless of what stale blocks sit in the local cache."""
-    be = BackendService(block_size=16, policy=policy)
+    be = backend_factory(block_size=16, policy=policy)
     a, b = LocalServer(be), LocalServer(be)
     _setup_counter(a)
     assert _read(a) == 0
@@ -57,8 +57,8 @@ def test_snapshot_read_sees_latest_commit(policy):
         assert _read(b) == i, policy
 
 
-def test_stale_cache_never_poisons_snapshot():
-    be = BackendService(block_size=16, policy=CachePolicy.STALE)
+def test_stale_cache_never_poisons_snapshot(backend_factory):
+    be = backend_factory(block_size=16, policy=CachePolicy.STALE)
     a, b = LocalServer(be), LocalServer(be)
     _setup_counter(a)
     _incr(a)          # a caches version 1

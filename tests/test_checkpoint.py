@@ -8,8 +8,8 @@ from repro.state.checkpoint import CheckpointManager
 
 
 @pytest.fixture
-def local():
-    return LocalServer(BackendService(block_size=512))
+def local(backend_factory):
+    return LocalServer(backend_factory(block_size=512))
 
 
 def state(v=0.0):
