@@ -1,0 +1,179 @@
+"""Networked transport cost: real localhost sockets vs in-process vs the
+simulated ``LatencyInjector``, and the WAL group-commit throughput curve.
+
+Three questions, mirroring the paper's EC2 deployment concerns:
+
+  1. **Per-op cost of the real wire.** Sequential read-modify-write
+     transactions over (a) the in-process backend, (b) the backend behind
+     ``LatencyInjector`` (the simulation the repo used before this
+     subsystem), (c) a real ``RemoteBackend`` -> ``BackendServer`` socket
+     pair on localhost, (d) the same socket with a durable WAL (fsync per
+     commit). (b) vs (c) calibrates the simulation against reality.
+
+  2. **Concurrent throughput over sockets.** 8 client threads (each its
+     own pooled connection) driving uncontended RMW transactions.
+
+  3. **WAL group commit.** With real fsyncs, throughput as the group
+     window widens: one fsync per batch instead of per commit is the
+     whole durability story under load (fsyncs/commit is reported).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+from typing import List, Tuple
+
+from repro.core.api import LatencyInjector
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.remote import RemoteBackend
+from repro.core.server import BackendServer
+from repro.core.types import CachePolicy, Conflict
+
+BLOCK = 1024
+FILE_BYTES = 8 * BLOCK
+N_CLIENTS = 8
+DURATION_S = 0.6
+SEQ_TXNS = 400
+RPC_LATENCY_S = 100e-6          # the simulation's RTT estimate
+GROUP_WINDOWS_MS = (0.0, 0.5, 2.0)
+
+
+def _mk_backend() -> BackendService:
+    return BackendService(block_size=BLOCK, policy=CachePolicy.INVALIDATE)
+
+
+def _mk_files(backend, n: int) -> List[int]:
+    setup = LocalServer(backend)
+    fids = []
+    for i in range(n):
+        txn = setup.begin()
+        fid = txn.create(f"/bench/f{i}")
+        txn.write(fid, 0, b"\0" * FILE_BYTES)
+        txn.commit()
+        fids.append(fid)
+    return fids
+
+
+def _rmw(local: LocalServer, fid: int, blk: int) -> None:
+    while True:
+        txn = local.begin()
+        try:
+            cur = int.from_bytes(txn.read(fid, blk * BLOCK, 8), "little")
+            txn.write(fid, blk * BLOCK, (cur + 1).to_bytes(8, "little"))
+            txn.commit()
+            return
+        except Conflict:
+            continue
+
+
+def seq_latency_us(backend) -> float:
+    (fid,) = _mk_files(backend, 1)
+    local = LocalServer(backend)
+    _rmw(local, fid, 0)  # warm the cache/connection
+    t0 = time.perf_counter()
+    for i in range(SEQ_TXNS):
+        _rmw(local, fid, i % (FILE_BYTES // BLOCK))
+    return (time.perf_counter() - t0) / SEQ_TXNS * 1e6
+
+
+def throughput(backend) -> Tuple[float, int]:
+    fids = _mk_files(backend, N_CLIENTS)
+    committed = [0] * N_CLIENTS
+    gate = threading.Barrier(N_CLIENTS)
+    stop_at = [0.0]
+
+    def worker(ci: int) -> None:
+        local = LocalServer(backend)
+        gate.wait()
+        if ci == 0:
+            stop_at[0] = time.perf_counter() + DURATION_S
+        while stop_at[0] == 0.0:
+            time.sleep(1e-5)
+        while time.perf_counter() < stop_at[0]:
+            _rmw(local, fids[ci], committed[ci] % (FILE_BYTES // BLOCK))
+            committed[ci] += 1
+
+    threads = [
+        threading.Thread(target=worker, args=(i,)) for i in range(N_CLIENTS)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return sum(committed) / wall, sum(committed)
+
+
+class _Served:
+    """BackendServer + RemoteBackend pair with teardown."""
+
+    def __init__(self, inner, wal_dir=None, sync_mode="fsync",
+                 tag="wal"):
+        wal_path = (
+            os.path.join(wal_dir, f"{tag}.log") if wal_dir is not None else None
+        )
+        self.server = BackendServer(
+            inner, wal_path=wal_path, sync_mode=sync_mode
+        ).start()
+        self.client = RemoteBackend("127.0.0.1", self.server.port)
+
+    def close(self) -> None:
+        self.client.close()
+        self.server.shutdown()
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+
+    # ---- 1. sequential per-txn latency across transports ---- #
+    rows.append(f"remote_seq_inproc,{seq_latency_us(_mk_backend()):.1f},us/txn")
+    sim = LatencyInjector(_mk_backend(), rpc_latency_s=RPC_LATENCY_S)
+    rows.append(
+        f"remote_seq_simulated,{seq_latency_us(sim):.1f},"
+        f"us/txn rtt={RPC_LATENCY_S*1e6:.0f}us"
+    )
+    served = _Served(_mk_backend())
+    rows.append(f"remote_seq_socket,{seq_latency_us(served.client):.1f},us/txn")
+    served.close()
+    with tempfile.TemporaryDirectory() as wd:
+        served = _Served(_mk_backend(), wal_dir=wd, tag="seq")
+        rows.append(
+            f"remote_seq_socket_wal,{seq_latency_us(served.client):.1f},"
+            "us/txn fsync-per-commit"
+        )
+        served.close()
+
+    # ---- 2. concurrent throughput over sockets ---- #
+    served = _Served(_mk_backend())
+    tps, _ = throughput(served.client)
+    rows.append(f"remote_tps_socket,{tps:.0f},txn/s clients={N_CLIENTS}")
+    served.close()
+
+    # ---- 3. WAL group-commit curve (real fsyncs) ---- #
+    with tempfile.TemporaryDirectory() as wd:
+        for w_ms in GROUP_WINDOWS_MS:
+            inner = BackendService(
+                block_size=BLOCK,
+                policy=CachePolicy.INVALIDATE,
+                group_commit_window_s=w_ms * 1e-3,
+            )
+            served = _Served(inner, wal_dir=wd, tag=f"w{w_ms}")
+            wal = served.server.wal
+            f0 = wal.fsyncs
+            tps, committed = throughput(served.client)
+            per_commit = (wal.fsyncs - f0) / max(committed, 1)
+            rows.append(
+                f"remote_walcurve_w{w_ms}ms,{tps:.0f},"
+                f"txn/s fsync/commit={per_commit:.2f}"
+            )
+            served.close()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

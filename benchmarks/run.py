@@ -7,6 +7,8 @@
   bench_delta_ckpt -> ours (block-granular delta checkpoint + int8 kernel)
   bench_roofline   -> ours (dry-run derived roofline terms per arch x shape)
   bench_sharded    -> ours (shard-count scaling + group-commit batching)
+  bench_remote     -> ours (localhost socket vs in-process vs simulated
+                      latency; WAL group-commit fsync curve)
 
 Prints ``name,value,unit/derived`` CSV lines, and writes one
 ``BENCH_<suite>.json`` artifact per suite (records
@@ -63,6 +65,7 @@ def main() -> None:
         bench_filebench,
         bench_fullstack,
         bench_latency,
+        bench_remote,
         bench_roofline,
         bench_sharded,
         bench_tpcc,
@@ -73,6 +76,7 @@ def main() -> None:
         ("filebench", bench_filebench),
         ("tpcc", bench_tpcc),
         ("sharded", bench_sharded),
+        ("remote", bench_remote),
         ("fullstack", bench_fullstack),
         ("delta_ckpt", bench_delta_ckpt),
         ("roofline", bench_roofline),

@@ -16,9 +16,12 @@ backend a per-shard vector, and client code works unchanged over both.
 Transport concerns live in wrappers, not in the backend:
 ``LatencyInjector`` charges one simulated network round trip per
 client-visible call (replacing the old ad-hoc ``rpc_latency_s`` sleeps
-inside ``BackendService``). A real networked transport would be another
-``BackendAPI`` implementation that serializes these calls over a socket;
-see ROADMAP "Open items" for what that needs.
+inside ``BackendService``). The real networked transport is
+``repro.core.remote.RemoteBackend`` — the same calls serialized over a
+socket to ``repro.core.server.BackendServer`` (wire format in
+``repro.core.wire``, durable commit log in ``repro.core.wal``; see
+docs/transport.md). ``bench_remote`` calibrates the injector's simulated
+RTT against the real thing.
 """
 from __future__ import annotations
 

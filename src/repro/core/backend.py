@@ -15,8 +15,13 @@ horizontally sharded backend. It provides:
   * multiversion snapshot block fetches at a historical T_R,
   * optional group-commit batching: commits arriving within a short
     window are validated and applied under ONE commit-lock acquisition
-    (and one simulated durable-log write), amortizing the per-commit
-    critical section.
+    (and one durable-log write), amortizing the per-commit critical
+    section,
+  * optional real durability: attach a ``repro.core.wal.WriteAheadLog``
+    (``self.wal``) and every commit's effects are appended and fsync'd
+    before the commit is acknowledged — ``commit_service_s`` then stays 0
+    and the *simulated* log cost is replaced by the real one. Group
+    commit amortizes the fsync exactly as it amortized the simulation.
 
 The commit path is decomposed into ``validate_locked`` / ``next_ts_locked``
 / ``apply_locked`` / ``undo_locked`` / ``log_commit_locked`` so a
@@ -189,13 +194,19 @@ class _GroupCommitter:
         try:
             with be.commit_lock:
                 be.stats.group_batches += 1
-                be._service()  # one durable-log write for the whole batch
+                committed: List[_Pending] = []
                 for p in batch:
                     try:
-                        p.reply = be._commit_locked(p.payload, service=False)
+                        p.reply = be._commit_locked(p.payload, durable=False)
                         be.stats.group_committed += 1
+                        committed.append(p)
                     except Conflict as e:
                         p.error = e
+                        p.done.set()  # aborts need no durability barrier
+                # ONE durable-log write (real WAL fsync or simulated cost)
+                # for the whole batch, then acknowledge every commit in it
+                be._durable_barrier()
+                for p in committed:
                     p.done.set()
         finally:
             for p in batch:  # a non-Conflict failure must not strand waiters
@@ -214,6 +225,7 @@ class BackendService(BackendAPI):
         log_horizon: int = 4096,
         group_commit_window_s: float = 0.0,
         commit_service_s: float = 0.0,
+        wal=None,
     ):
         self.store = BlockStore(block_size, versions_kept)
         self.policy = policy
@@ -221,8 +233,12 @@ class BackendService(BackendAPI):
         self.log_horizon = log_horizon
         # simulated backend-side durable-apply time (e.g. log fsync),
         # paid once per commit-lock acquisition — what group commit
-        # amortizes. 0 in tests.
+        # amortizes. 0 in tests. Superseded by a real WAL when attached.
         self.commit_service_s = commit_service_s
+        # optional repro.core.wal.WriteAheadLog; when set, commits append
+        # their effects and fsync before acking (see _durable_barrier)
+        self.wal = wal
+        self.shard_id = 0  # position within a ShardedBackend (WAL records)
         self.commit_lock = threading.Lock()
         self._ts = 0  # sequencer
         self._log: List[CommitRecord] = []
@@ -244,6 +260,25 @@ class BackendService(BackendAPI):
     def _service(self) -> None:
         if self.commit_service_s:
             time.sleep(self.commit_service_s)
+
+    def _wal_append(self, payload: TxnPayload, ts: Timestamp):
+        """Buffered append of this commit's effects; returns the LSN for
+        the durability barrier (None when no WAL is attached)."""
+        if self.wal is None:
+            return None
+        from repro.core import wal as _wal
+
+        return self.wal.append(
+            ("c", self.shard_id, ts, _wal.effects_from_payload(payload))
+        )
+
+    def _durable_barrier(self, lsn=None) -> None:
+        """Make everything appended so far durable before acking: real
+        WAL fsync when attached, else the simulated service time."""
+        if self.wal is not None:
+            self.wal.sync(lsn)
+        else:
+            self._service()
 
     # ------------------------------------------------------------------ #
     # sequencer
@@ -358,15 +393,19 @@ class BackendService(BackendAPI):
             return self._commit_locked(payload)
 
     def _commit_locked(
-        self, payload: TxnPayload, service: bool = True
+        self, payload: TxnPayload, durable: bool = True
     ) -> CommitReply:
-        """Full commit under an already-held commit lock."""
+        """Full commit under an already-held commit lock.
+
+        ``durable=False`` defers the durability barrier to the caller
+        (the group committer / 2PC coordinator pays it once per batch)."""
         self.validate_locked(payload)
-        if service:
-            self._service()
         ts = self.next_ts_locked()
         touched = self.apply_locked(payload, ts)
         self.log_commit_locked(ts, touched)
+        lsn = self._wal_append(payload, ts)
+        if durable:
+            self._durable_barrier(lsn)
         self.stats.commits += 1
         if self.on_commit_applied is not None:
             self.on_commit_applied(ts)
@@ -459,3 +498,42 @@ class BackendService(BackendAPI):
     # convenience for tests / benchmarks
     def alloc_file_id(self) -> FileId:
         return self.store.alloc_file_id()
+
+    def bump_fid_floor(self, floor: FileId) -> None:
+        """Never allocate a file id below ``floor`` (crash recovery: ids
+        covered by durably-logged leases must not be re-issued)."""
+        self.store.ensure_fid_floor(floor)
+
+    def set_wal(self, wal) -> None:
+        """Attach a durable log; subsequent commits fsync before acking."""
+        self.wal = wal
+
+    # ------------------------------------------------------------------ #
+    # WAL crash recovery
+    # ------------------------------------------------------------------ #
+    def replay_commit(
+        self, ts: Timestamp, effects, notify: bool = True
+    ) -> None:
+        """Re-apply one logged commit at its original timestamp. Rebuilds
+        the exact version chains and resumes the sequencer; ``notify``
+        suppresses ``on_commit_applied`` when a sharded coordinator
+        registers the replay itself (2PC records)."""
+        from repro.core import wal as _wal
+
+        payload = _wal.payload_from_effects(effects)
+        with self.commit_lock:
+            touched = self.apply_locked(payload, ts)
+            self.log_commit_locked(ts, touched)
+            if ts > self._ts:
+                self._ts = ts
+            if notify and self.on_commit_applied is not None:
+                self.on_commit_applied(ts)
+
+    def replay_record(self, rec) -> None:
+        kind = rec[0]
+        if kind != "c":
+            raise ValueError(
+                f"monolithic backend cannot replay record kind {kind!r}"
+            )
+        _, _, ts, effects = rec
+        self.replay_commit(ts, effects)

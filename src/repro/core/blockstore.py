@@ -98,6 +98,13 @@ class BlockStore:
             self._next_file_id += 1
             return fid
 
+    def ensure_fid_floor(self, floor: FileId) -> None:
+        """Raise the allocator so no id below ``floor`` is ever issued
+        (crash recovery replays may have materialized such ids)."""
+        with self._lock:
+            if floor > self._next_file_id:
+                self._next_file_id = floor
+
     def bind_name(self, path: str, fid: Optional[FileId], ts: Timestamp) -> None:
         with self._lock:
             v = self._names.setdefault(path, Versioned())

@@ -1,0 +1,266 @@
+"""``RemoteBackend`` — the networked transport as just another
+``BackendAPI``.
+
+The client side of `repro.core.server`: every abstract RPC becomes one
+frame exchange on a pooled TCP connection, so ``LocalServer`` / the
+POSIX facade / the OCC and snapshot test suites run unchanged over a
+real socket. What the paper's prototype simulated with
+``LatencyInjector`` sleeps, this pays for real.
+
+Design points:
+
+  * **Connection pool.** Connections are synchronous (one outstanding
+    request); concurrency comes from checking out separate connections.
+    The pool grows on demand and a connection that errors is discarded,
+    never reused.
+  * **Hello handshake.** The server's first frame pins the wire version
+    and carries ``block_size`` / ``policy`` / ``n_shards`` / ``epoch``,
+    so one client class speaks to monolithic (scalar timestamps) and
+    sharded (sync-vector) backends alike. Sync timestamps stay opaque
+    values the client only moves through the timestamp algebra; for the
+    vector algebra the client mirrors the fid-hash partition function
+    ``shard = fid % n_shards`` — the partition map is part of the wire
+    contract, exactly like a client-side shard map in λFS-style systems.
+  * **Leased file ids.** ``alloc_file_id`` draws from an
+    ``(epoch, start, count)`` range lease granted (and durably logged)
+    by the server, refreshed when drained — one RPC per *lease*, not per
+    id. A server restart bumps the epoch; a stale lease refresh gets
+    ``StaleEpoch`` and transparently re-leases from scratch.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from contextlib import contextmanager
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core import wire
+from repro.core.api import BackendAPI, CommitReply
+from repro.core.blockstore import FileMeta
+from repro.core.types import BlockKey, CachePolicy, FileId, Timestamp
+
+DEFAULT_LEASE = 64
+
+
+class RemoteBackend(BackendAPI):
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        lease_size: int = DEFAULT_LEASE,
+        connect_timeout_s: float = 10.0,
+    ):
+        self.host = host
+        self.port = port
+        self.lease_size = lease_size
+        self.connect_timeout_s = connect_timeout_s
+        self._pool: List[socket.socket] = []
+        self._pool_mu = threading.Lock()
+        self._hello: Optional[Dict] = None
+        self._alloc_mu = threading.Lock()
+        self._lease_epoch = 0
+        self._lease_next = 0
+        self._lease_end = 0
+        self.rpcs = 0
+        self.reconnects = 0
+        self._closed = False
+        # eager dial: surfaces connection/handshake errors at construction
+        with self._pool_mu:
+            self._pool.append(self._dial())
+
+    # ------------------------------------------------------------------ #
+    # connection management
+    # ------------------------------------------------------------------ #
+    def _dial(self) -> socket.socket:
+        sock = socket.create_connection(
+            (self.host, self.port), timeout=self.connect_timeout_s
+        )
+        sock.settimeout(None)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            msg_type, hello = wire.recv_frame(sock)
+        except BaseException:
+            sock.close()
+            raise
+        if msg_type != wire.T_HELLO:
+            sock.close()
+            raise wire.WireError(f"expected hello, got 0x{msg_type:02x}")
+        if self._hello is None:
+            self._hello = hello
+        elif hello["n_shards"] != self._hello["n_shards"]:
+            sock.close()
+            raise wire.WireError(
+                "server changed shard count mid-session "
+                f"({self._hello['n_shards']} -> {hello['n_shards']})"
+            )
+        else:
+            self._hello = hello  # pick up epoch bumps on reconnect
+        self.reconnects += 1
+        return sock
+
+    @contextmanager
+    def _conn(self):
+        with self._pool_mu:
+            sock = self._pool.pop() if self._pool else None
+        if sock is None:
+            sock = self._dial()
+        try:
+            yield sock
+        except BaseException:
+            try:
+                sock.close()
+            except OSError:
+                pass
+            raise
+        else:
+            with self._pool_mu:
+                if self._closed:
+                    sock.close()
+                else:
+                    self._pool.append(sock)
+
+    def _call(self, msg_type: int, obj):
+        self.rpcs += 1
+        with self._conn() as sock:
+            wire.send_frame(sock, msg_type, obj)
+            reply_type, reply = wire.recv_frame(sock)
+        if reply_type == wire.T_OK:
+            return reply
+        if reply_type == wire.T_ERR:
+            raise wire.exception_from_obj(reply)
+        raise wire.WireError(f"unexpected reply type 0x{reply_type:02x}")
+
+    def close(self) -> None:
+        with self._pool_mu:
+            self._closed = True
+            conns, self._pool = self._pool, []
+        for sock in conns:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------------ #
+    # handshake-derived properties
+    # ------------------------------------------------------------------ #
+    @property
+    def block_size(self) -> int:
+        return self._hello["block_size"]
+
+    @property
+    def policy(self) -> CachePolicy:
+        return CachePolicy(self._hello["policy"])
+
+    @property
+    def n_shards(self) -> int:
+        """0 = scalar-timestamp (monolithic) server."""
+        return self._hello["n_shards"]
+
+    @property
+    def server_epoch(self) -> int:
+        return self._hello["epoch"]
+
+    # ------------------------------------------------------------------ #
+    # timestamp algebra (local: mirrors the server's backend kind)
+    # ------------------------------------------------------------------ #
+    @property
+    def zero_ts(self):
+        n = self.n_shards
+        return 0 if n == 0 else (0,) * n
+
+    def ts_geq(self, a, b) -> bool:
+        if self.n_shards == 0:
+            return a >= b
+        return all(x >= y for x, y in zip(a, b))
+
+    def snapshot_cache_ok(self, key, version, at_ts, last_sync_ts) -> bool:
+        if self.n_shards == 0:
+            return version <= at_ts and last_sync_ts >= at_ts
+        s = key[0] % self.n_shards  # fid-hash partition: wire contract
+        return version <= at_ts[s] and last_sync_ts[s] >= at_ts[s]
+
+    # ------------------------------------------------------------------ #
+    # RPCs
+    # ------------------------------------------------------------------ #
+    def begin(
+        self,
+        last_sync_ts,
+        cached_keys: Optional[Set[BlockKey]] = None,
+        policy: Optional[CachePolicy] = None,
+    ):
+        # ONE frame regardless of shard count: the per-shard fan-out and
+        # reply merge run server-side behind ShardedBackend.begin
+        reply = self._call(
+            wire.T_BEGIN,
+            {
+                "t": last_sync_ts,
+                "k": None if cached_keys is None else sorted(cached_keys),
+                "p": None if policy is None else policy.value,
+            },
+        )
+        return wire.begin_reply_from_obj(reply)
+
+    def sync_file(
+        self, fid: FileId, known_versions: Dict[BlockKey, Timestamp]
+    ) -> Dict[BlockKey, Tuple[Timestamp, bytes]]:
+        out = self._call(wire.T_SYNC_FILE, (fid, dict(known_versions)))
+        return {tuple(k): (ts, data) for k, (ts, data) in out.items()}
+
+    def fetch_block(self, key: BlockKey, at_ts=None):
+        ver, data = self._call(wire.T_FETCH_BLOCK, (tuple(key), at_ts))
+        return ver, data
+
+    def fetch_meta(self, fid: FileId, at_ts=None):
+        ver, length, exists = self._call(wire.T_FETCH_META, (fid, at_ts))
+        return ver, FileMeta(length, exists)
+
+    def lookup(self, path: str, at_ts=None):
+        ver, fid = self._call(wire.T_LOOKUP, (path, at_ts))
+        return ver, fid
+
+    def listdir(self, prefix: str, at_ts=None):
+        return [
+            (path, ver, fid)
+            for path, ver, fid in self._call(wire.T_LISTDIR, (prefix, at_ts))
+        ]
+
+    def commit(self, payload) -> CommitReply:
+        reply = self._call(wire.T_COMMIT, wire.payload_to_obj(payload))
+        return wire.commit_reply_from_obj(reply)
+
+    def alloc_file_id(self) -> FileId:
+        with self._alloc_mu:
+            if self._lease_next >= self._lease_end:
+                self._refill_lease()
+            fid = self._lease_next
+            self._lease_next += 1
+            return fid
+
+    def _refill_lease(self) -> None:
+        try:
+            epoch, start, count = self._call(
+                wire.T_ALLOC_RANGE, (self._lease_epoch, self.lease_size)
+            )
+        except wire.StaleEpoch:
+            # server restarted since our lease: drop it and re-lease fresh
+            self._lease_epoch = 0
+            epoch, start, count = self._call(
+                wire.T_ALLOC_RANGE, (0, self.lease_size)
+            )
+        self._lease_epoch = epoch
+        self._lease_next = start
+        self._lease_end = start + count
+
+    # ------------------------------------------------------------------ #
+    # observability passthrough (tests/benchmarks read these)
+    # ------------------------------------------------------------------ #
+    @property
+    def stats(self):
+        return wire.stats_from_obj(self._call(wire.T_STATS, None))
+
+    @property
+    def latest_ts(self):
+        return self._call(wire.T_LATEST_TS, None)
+
+    def ping(self) -> None:
+        self._call(wire.T_PING, None)

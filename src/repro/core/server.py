@@ -1,0 +1,295 @@
+"""Networked RPC server hosting a transactional backend (paper §4.1's
+Backend Service, finally behind a real socket).
+
+``BackendServer`` wraps any in-process ``BackendAPI`` implementation —
+monolithic ``BackendService`` or ``ShardedBackend`` — and serves it to
+concurrent ``RemoteBackend`` clients over TCP:
+
+  * **thread per connection**, synchronous frames (`repro.core.wire`);
+    the client multiplexes with a connection pool, so server-side
+    concurrency (group commit batching across connections, parallel 2PC
+    apply) is fully exercised.
+  * **one client RPC per logical operation**: ``begin`` against a
+    ``ShardedBackend`` is a single frame — the per-shard fan-out and the
+    reply merge happen server-side behind ``ShardedBackend.begin``, so
+    the client pays one round trip, not one per shard.
+  * **durability**: pass ``wal_path`` and the server attaches a
+    ``WriteAheadLog`` to the backend — commit acks then imply fsync'd
+    log records. On start, an existing log is crash-recovered first:
+    scan, truncate the torn tail, replay every intact commit record into
+    the fresh backend, resume the sequencers, and bump the epoch.
+  * **fenced file-id allocation**: instead of proxying the coordinator
+    counter one id at a time, the server grants *range leases*
+    ``(epoch, start, count)``. Each grant is WAL-logged durably before
+    it is sent, so a restarted server never re-grants overlapping ids;
+    the epoch (bumped on every restart) fences stale clients — a lease
+    refresh carrying an old epoch gets ``StaleEpoch`` and must re-lease.
+
+Run standalone (the crash-recovery tests SIGKILL this process)::
+
+    python -m repro.core.server --wal /tmp/faasfs.wal --shards 2
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import threading
+from typing import Any, Dict, Optional, Set, Tuple
+
+from repro.core import wal as walmod
+from repro.core import wire
+from repro.core.api import BackendAPI
+from repro.core.backend import BackendService
+from repro.core.sharded import ShardedBackend
+from repro.core.types import CachePolicy
+
+#: cap on a single lease grant (a greedy client cannot drain the id space)
+MAX_LEASE = 1 << 16
+
+
+class FileIdAllocator:
+    """Epoch-fenced file-id range leases, durably logged before grant."""
+
+    def __init__(self, wal: Optional[walmod.WriteAheadLog], epoch: int,
+                 next_fid: int = 1):
+        self.wal = wal
+        self.epoch = epoch
+        self._next = next_fid
+        self._mu = threading.Lock()
+        self.grants = 0
+
+    def grant(self, client_epoch: int, count: int) -> Tuple[int, int, int]:
+        """Returns ``(epoch, start, count)``. ``client_epoch`` 0 means
+        "no lease yet"; a non-zero epoch from a previous server
+        incarnation is fenced off."""
+        if client_epoch and client_epoch != self.epoch:
+            raise wire.StaleEpoch(
+                f"lease epoch {client_epoch} fenced (server epoch "
+                f"{self.epoch})"
+            )
+        count = max(1, min(int(count), MAX_LEASE))
+        with self._mu:
+            start = self._next
+            self._next += count
+            if self.wal is not None:
+                # durable BEFORE the grant leaves the server
+                lsn = self.wal.append(("lease", self.epoch, start, count))
+                self.wal.sync(lsn)
+            self.grants += 1
+        return self.epoch, start, count
+
+
+class BackendServer:
+    def __init__(
+        self,
+        backend: BackendAPI,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        wal_path: Optional[str] = None,
+        sync_mode: str = "fsync",
+    ):
+        self.backend = backend
+        self.wal: Optional[walmod.WriteAheadLog] = None
+        self.recovery: Optional[Dict[str, int]] = None
+        epoch, next_fid = 1, 1
+        if wal_path is not None:
+            if os.path.exists(wal_path) and os.path.getsize(wal_path) > 0:
+                self.recovery = walmod.recover(backend, wal_path)
+                epoch = self.recovery["epoch"] + 1
+                next_fid = self.recovery["fid_floor"]
+            self.wal = walmod.WriteAheadLog(wal_path, sync_mode=sync_mode)
+            self.wal.append(("epoch", epoch))
+            self.wal.sync()
+            backend.set_wal(self.wal)  # type: ignore[attr-defined]
+        self.epoch = epoch
+        self.allocator = FileIdAllocator(self.wal, epoch, next_fid)
+
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind((host, port))
+        self._lsock.listen(128)
+        self.host, self.port = self._lsock.getsockname()
+        self._stop = threading.Event()
+        self._conns: Set[socket.socket] = set()
+        self._conns_mu = threading.Lock()
+        self._accept_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    def start(self) -> "BackendServer":
+        t = threading.Thread(
+            target=self._accept_loop, name="faasfs-accept", daemon=True
+        )
+        t.start()
+        self._accept_thread = t
+        return self
+
+    def serve_forever(self) -> None:
+        self.start()
+        self._stop.wait()
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        with self._conns_mu:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        if self.wal is not None:
+            self.wal.close()
+
+    # ------------------------------------------------------------------ #
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sock, _ = self._lsock.accept()
+            except OSError:
+                break
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_mu:
+                self._conns.add(sock)
+            threading.Thread(
+                target=self._serve_conn, args=(sock,),
+                name="faasfs-conn", daemon=True,
+            ).start()
+
+    def _hello(self) -> Dict[str, Any]:
+        return {
+            "server": "faasfs",
+            "version": wire.VERSION,
+            "block_size": self.backend.block_size,
+            "policy": self.backend.policy.value,
+            # 0 = scalar timestamps (monolithic); N = sync vectors over N
+            # fid-hash shards (the partition function is wire contract)
+            "n_shards": getattr(self.backend, "n_shards", 0),
+            "epoch": self.epoch,
+        }
+
+    def _serve_conn(self, sock: socket.socket) -> None:
+        try:
+            wire.send_frame(sock, wire.T_HELLO, self._hello())
+            while not self._stop.is_set():
+                msg_type, obj = wire.recv_frame(sock)
+                try:
+                    reply = self._dispatch(msg_type, obj)
+                except Exception as e:  # backend errors travel as frames
+                    wire.send_frame(sock, wire.T_ERR, wire.exception_to_obj(e))
+                    continue
+                wire.send_frame(sock, wire.T_OK, reply)
+        except (wire.WireError, OSError):
+            pass  # peer went away / malformed peer: drop the connection
+        finally:
+            with self._conns_mu:
+                self._conns.discard(sock)
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------------ #
+    def _dispatch(self, msg_type: int, obj: Any) -> Any:
+        be = self.backend
+        if msg_type == wire.T_BEGIN:
+            cached = obj["k"]
+            reply = be.begin(
+                obj["t"],
+                None if cached is None else {tuple(k) for k in cached},
+                CachePolicy(obj["p"]) if obj["p"] is not None else None,
+            )
+            return wire.begin_reply_to_obj(reply)
+        if msg_type == wire.T_COMMIT:
+            return wire.commit_reply_to_obj(
+                be.commit(wire.payload_from_obj(obj))
+            )
+        if msg_type == wire.T_FETCH_BLOCK:
+            key, at_ts = obj
+            return tuple(be.fetch_block(tuple(key), at_ts))
+        if msg_type == wire.T_FETCH_META:
+            fid, at_ts = obj
+            ver, meta = be.fetch_meta(fid, at_ts)
+            return (ver, meta.length, meta.exists)
+        if msg_type == wire.T_LOOKUP:
+            path, at_ts = obj
+            return tuple(be.lookup(path, at_ts))
+        if msg_type == wire.T_LISTDIR:
+            prefix, at_ts = obj
+            return [tuple(e) for e in be.listdir(prefix, at_ts)]
+        if msg_type == wire.T_SYNC_FILE:
+            fid, known = obj
+            out = be.sync_file(fid, {tuple(k): v for k, v in known.items()})
+            return {k: tuple(v) for k, v in out.items()}
+        if msg_type == wire.T_ALLOC_RANGE:
+            client_epoch, count = obj
+            return tuple(self.allocator.grant(client_epoch, count))
+        if msg_type == wire.T_STATS:
+            return wire.stats_to_obj(be.stats)
+        if msg_type == wire.T_LATEST_TS:
+            return be.latest_ts
+        if msg_type == wire.T_PING:
+            return None
+        raise wire.WireError(f"unknown request type 0x{msg_type:02x}")
+
+
+# --------------------------------------------------------------------------- #
+# standalone entry point (crash-recovery tests SIGKILL this process)
+# --------------------------------------------------------------------------- #
+def make_backend(
+    n_shards: int,
+    block_size: int,
+    policy: str,
+    versions_kept: int = 16,
+    group_commit_window_s: float = 0.0,
+) -> BackendAPI:
+    kwargs = dict(
+        block_size=block_size,
+        policy=CachePolicy(policy),
+        versions_kept=versions_kept,
+        group_commit_window_s=group_commit_window_s,
+    )
+    if n_shards <= 0:
+        return BackendService(**kwargs)
+    return ShardedBackend(n_shards=n_shards, **kwargs)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description="FaaSFS backend server")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0)
+    p.add_argument("--wal", default=None, help="durable log path")
+    p.add_argument("--sync-mode", default="fsync", choices=walmod.SYNC_MODES)
+    p.add_argument("--shards", type=int, default=0,
+                   help="0 = monolithic backend, N = sharded")
+    p.add_argument("--block-size", type=int, default=4096)
+    p.add_argument("--policy", default="invalidate")
+    p.add_argument("--versions-kept", type=int, default=16)
+    p.add_argument("--group-window", type=float, default=0.0)
+    args = p.parse_args(argv)
+
+    backend = make_backend(
+        args.shards, args.block_size, args.policy,
+        versions_kept=args.versions_kept,
+        group_commit_window_s=args.group_window,
+    )
+    server = BackendServer(
+        backend, host=args.host, port=args.port,
+        wal_path=args.wal, sync_mode=args.sync_mode,
+    )
+    recovered = (server.recovery or {}).get("commits", 0)
+    print(f"LISTENING {server.port} epoch={server.epoch} "
+          f"recovered={recovered}", flush=True)
+    server.serve_forever()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

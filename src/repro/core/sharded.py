@@ -28,15 +28,33 @@ cache hits rely on.
 
 **Cross-shard commits** run two-phase commit. The coordinator splits the
 payload per shard, acquires participant commit locks in shard order (no
-deadlocks), validates every shard's part (in parallel for >1
-participant), assigns each shard's next local timestamp plus a
-coordinator-assigned global timestamp, applies on every shard, registers
-the sync vector, then releases the locks. A Conflict on any shard aborts
-the whole transaction before anything applies; an unexpected apply
-failure rolls already-applied shards back through their undo chains.
+deadlocks), and validates every shard's part. A transaction with no
+effects anywhere (a multi-shard read transaction not marked read-only:
+pure validation) finishes right there — it serializes at the validation
+point, burns no timestamps, and releases immediately. Effectful
+transactions get each effectful shard's next local timestamp and apply
+**in parallel** (one thread per shard — overlapping the per-shard
+durable-apply cost), the commit is logged as ONE atomic WAL record when
+a log is attached, the sync vector registers all participants
+atomically, and every lock releases. A Conflict on any shard aborts the
+whole transaction before anything applies; an unexpected apply failure
+rolls already-applied shards back through their undo chains.
 Single-shard transactions — the common case by construction — take the
 existing monolithic fast path untouched, including that shard's
 group-commit batching.
+
+**Why read-only participants do NOT release their locks early.** It is
+tempting (λFS-style) to release a pure-reader shard's commit lock right
+after its part validates. That is sound for write visibility (nothing
+will be applied there) but UNSOUND for the consistent-cut guarantee:
+with T1 = {read f1 on shard A, write f2 on shard B}, releasing A before
+T1 registers lets T2 = {write f1 on A} validate, commit, and register
+while T1 is still applying on B. A snapshot reader that begins in that
+window gets a vector containing T2 but not T1 — yet T1's validated read
+of f1 pins T1 *before* T2 in the serial order, so the cut observes a
+later transaction while missing an earlier one. Anti-dependencies flow
+through read shards; the read lock held through registration is exactly
+what keeps every registered vector a prefix of the serial order.
 """
 from __future__ import annotations
 
@@ -84,11 +102,13 @@ class ShardedBackend(BackendAPI):
         log_horizon: int = 4096,
         group_commit_window_s: float = 0.0,
         commit_service_s: float = 0.0,
+        wal=None,
     ):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.n_shards = n_shards
         self.policy = policy
+        self.wal = wal
         self.shards = [
             BackendService(
                 block_size=block_size,
@@ -103,6 +123,8 @@ class ShardedBackend(BackendAPI):
         ]
         for i, sh in enumerate(self.shards):
             sh.on_commit_applied = self._make_register(i)
+            sh.shard_id = i
+            sh.wal = wal  # shards share ONE server-level log
         self._vec_lock = threading.Lock()
         self._applied: List[Timestamp] = [0] * n_shards
         self._gts = 0  # coordinator-assigned global commit timestamp
@@ -256,6 +278,41 @@ class ShardedBackend(BackendAPI):
             self._next_fid += 1
             return fid
 
+    def bump_fid_floor(self, floor: FileId) -> None:
+        with self._fid_lock:
+            if floor > self._next_fid:
+                self._next_fid = floor
+        for sh in self.shards:
+            sh.bump_fid_floor(floor)
+
+    def set_wal(self, wal) -> None:
+        """Attach one server-level durable log to the coordinator and all
+        shards (fast-path commits log per shard, 2PC logs one atomic
+        record)."""
+        self.wal = wal
+        for sh in self.shards:
+            sh.wal = wal
+
+    # ------------------------------------------------------------------ #
+    # WAL crash recovery
+    # ------------------------------------------------------------------ #
+    def replay_record(self, rec) -> None:
+        """Re-apply one WAL record: single-shard commits replay through
+        the shard (whose register hook rebuilds the sync vector); 2PC
+        records replay all participants and register ONE consistent cut."""
+        if rec[0] == "c":
+            _, s, ts, effects = rec
+            self.shards[s].replay_commit(ts, effects)
+            return
+        _, participants = rec
+        for s, ts, effects in participants:
+            self.shards[s].replay_commit(ts, effects, notify=False)
+        with self._vec_lock:
+            self._gts += 1
+            for s, ts, _ in participants:
+                if ts > self._applied[s]:
+                    self._applied[s] = ts
+
     # ------------------------------------------------------------------ #
     # commit: single-shard fast path or cross-shard 2PC
     # ------------------------------------------------------------------ #
@@ -345,33 +402,79 @@ class ShardedBackend(BackendAPI):
                     f"2pc validation failed on {len(errors)} shard(s)", keys
                 )
 
-            # ---- phase 2: apply everywhere, undo on unexpected failure ----
-            ts_map = {s: self.shards[s].next_ts_locked() for s in order}
-            applied: List[Tuple[int, Touched]] = []
-            try:
-                for s in order:
+            eff = [s for s in order if parts[s].has_effects()]
+            if not eff:
+                # pure validation (multi-shard read txn not marked
+                # read-only): serializes at the validation point; no state
+                # changes, no timestamps burned, locks release in finally
+                self.coord_stats.cross_commits += 1
+                return CommitReply(self._current_gts())
+            # NOTE: read-only participants' locks stay held until the sync
+            # vector registers — releasing them here would let a later
+            # conflicting writer register first and hand snapshot readers
+            # a non-serializable cut (see the module docstring).
+
+            # ---- phase 2: apply effectful shards in parallel (one thread
+            # per shard overlaps their durable-apply service time), undo on
+            # unexpected failure ----
+            ts_map = {s: self.shards[s].next_ts_locked() for s in eff}
+            applied: Dict[int, Touched] = {}
+            failures: List[BaseException] = []
+
+            def apply_on(s: int) -> None:
+                try:
                     self.shards[s]._service()
-                    touched = self.shards[s].apply_locked(parts[s], ts_map[s])
-                    applied.append((s, touched))
-            except BaseException:
-                for s, touched in reversed(applied):
-                    self.shards[s].undo_locked(touched, ts_map[s])
-                raise
-            for s, touched in applied:
-                self.shards[s].log_commit_locked(ts_map[s], touched)
+                    applied[s] = self.shards[s].apply_locked(
+                        parts[s], ts_map[s]
+                    )
+                except BaseException as e:  # apply_locked rolled itself back
+                    failures.append(e)
+
+            if len(eff) == 1:
+                apply_on(eff[0])
+            else:
+                workers = [
+                    threading.Thread(target=apply_on, args=(s,)) for s in eff
+                ]
+                for w in workers:
+                    w.start()
+                for w in workers:
+                    w.join()
+            if failures:
+                for s in sorted(applied, reverse=True):
+                    self.shards[s].undo_locked(applied[s], ts_map[s])
+                raise failures[0]
+            for s in eff:
+                self.shards[s].log_commit_locked(ts_map[s], applied[s])
+
+            # ---- durability: ONE atomic record for all participants,
+            # fsync'd before the commit becomes visible or acked ----
+            if self.wal is not None:
+                from repro.core import wal as _wal
+
+                lsn = self.wal.append(
+                    (
+                        "x",
+                        [
+                            (s, ts_map[s], _wal.effects_from_payload(parts[s]))
+                            for s in eff
+                        ],
+                    )
+                )
+                self.wal.sync(lsn)
 
             # ---- register: atomic for all participants (consistent cut) ----
             with self._vec_lock:
                 self._gts += 1
                 gts = self._gts
-                for s in order:
+                for s in eff:
                     if ts_map[s] > self._applied[s]:
                         self._applied[s] = ts_map[s]
             self.coord_stats.cross_commits += 1
 
             block_versions = {
                 w.key: ts_map[s]
-                for s in order
+                for s in eff
                 for w in parts[s].writes
             }
             return CommitReply(gts, block_versions)

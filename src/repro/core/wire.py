@@ -1,0 +1,535 @@
+"""Wire protocol for the networked FaaSFS transport.
+
+Two layers, both self-contained (no third-party dependency):
+
+**Codec** — a msgpack-shaped binary encoding (`pack` / `unpack`) for the
+value trees the RPCs exchange: None, bool, signed 64-bit ints, float64,
+bytes, str, list, dict, and tuple. The format follows the real msgpack
+tag layout (fixint / fixstr / fixarray / fixmap, bin8/16/32, str8/16/32,
+array16/32, map16/32, int/uint families, ext) so the bytes are readable
+by any msgpack decoder that understands ext type 1 = tuple. Tuples need
+their own ext tag because the protocol round-trips dict keys like
+``BlockKey = (file_id, block_index)`` — decoding arrays as lists would
+make them unhashable.
+
+**Frames** — every message on the socket is ``header || body``:
+
+    header = MAGIC(1) | VERSION(1) | MSG_TYPE(1) | pad(1) | BODY_LEN(4, BE)
+
+A peer that sees a wrong magic or an unsupported version drops the
+connection instead of guessing. The message-type byte selects the RPC
+(requests) or the outcome (``T_OK`` / ``T_ERR`` responses); bodies are
+codec-packed value trees. Each connection is synchronous — one
+outstanding request at a time — so no correlation ids are needed; the
+client multiplexes with a connection pool instead.
+
+This module also pins down the *object conversions* between the typed
+dataclasses (``TxnPayload`` / ``BeginReply`` / ``CommitReply`` /
+``BackendStats``) and plain value trees, and the exception mapping that
+lets ``Conflict`` (with its keys, including ``LengthPredicate``),
+``NotFound``, ``SnapshotTooOld`` etc. propagate across the socket.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import asdict
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.types import (
+    Conflict,
+    Exists,
+    LengthPredicate,
+    NotFound,
+    PredicateKind,
+    ReadRecord,
+    TxnStateError,
+    WriteRecord,
+)
+
+# --------------------------------------------------------------------------- #
+# protocol constants
+# --------------------------------------------------------------------------- #
+MAGIC = 0xF5
+VERSION = 1
+_HEADER = struct.Struct(">BBBxI")
+HEADER_LEN = _HEADER.size
+
+# responses
+T_HELLO = 0x01
+T_OK = 0x02
+T_ERR = 0x03
+# requests
+T_BEGIN = 0x10
+T_SYNC_FILE = 0x11
+T_FETCH_BLOCK = 0x12
+T_FETCH_META = 0x13
+T_LOOKUP = 0x14
+T_LISTDIR = 0x15
+T_COMMIT = 0x16
+T_ALLOC_RANGE = 0x17
+T_STATS = 0x18
+T_LATEST_TS = 0x19
+T_PING = 0x1A
+
+#: max body we will accept from a peer (a frame claiming more is corrupt)
+MAX_BODY = 256 * 1024 * 1024
+
+_EXT_TUPLE = 1
+
+
+class WireError(Exception):
+    """Malformed frame / codec bytes, or a protocol violation."""
+
+
+class ConnectionClosed(WireError):
+    """Peer closed the socket mid-conversation."""
+
+
+class StaleEpoch(Exception):
+    """A fenced request carried an epoch older than the server's current
+    one (the server restarted since the client's lease was granted)."""
+
+
+class RemoteError(Exception):
+    """Server-side exception of a type the client does not know."""
+
+
+# --------------------------------------------------------------------------- #
+# codec: pack
+# --------------------------------------------------------------------------- #
+def _pack_into(obj: Any, out: bytearray) -> None:
+    if obj is None:
+        out.append(0xC0)
+    elif obj is True:
+        out.append(0xC3)
+    elif obj is False:
+        out.append(0xC2)
+    elif isinstance(obj, int):
+        _pack_int(obj, out)
+    elif isinstance(obj, float):
+        out.append(0xCB)
+        out += struct.pack(">d", obj)
+    elif isinstance(obj, str):
+        b = obj.encode("utf-8")
+        n = len(b)
+        if n <= 31:
+            out.append(0xA0 | n)
+        elif n <= 0xFF:
+            out += bytes((0xD9, n))
+        elif n <= 0xFFFF:
+            out.append(0xDA)
+            out += struct.pack(">H", n)
+        else:
+            out.append(0xDB)
+            out += struct.pack(">I", n)
+        out += b
+    elif isinstance(obj, (bytes, bytearray, memoryview)):
+        b = bytes(obj)
+        n = len(b)
+        if n <= 0xFF:
+            out += bytes((0xC4, n))
+        elif n <= 0xFFFF:
+            out.append(0xC5)
+            out += struct.pack(">H", n)
+        else:
+            out.append(0xC6)
+            out += struct.pack(">I", n)
+        out += b
+    elif isinstance(obj, tuple):
+        # ext type 1: payload is the packed element array
+        inner = bytearray()
+        _pack_array(obj, inner)
+        n = len(inner)
+        if n <= 0xFF:
+            out += bytes((0xC7, n, _EXT_TUPLE))
+        elif n <= 0xFFFF:
+            out.append(0xC8)
+            out += struct.pack(">H", n)
+            out.append(_EXT_TUPLE)
+        else:
+            out.append(0xC9)
+            out += struct.pack(">I", n)
+            out.append(_EXT_TUPLE)
+        out += inner
+    elif isinstance(obj, list):
+        _pack_array(obj, out)
+    elif isinstance(obj, dict):
+        n = len(obj)
+        if n <= 15:
+            out.append(0x80 | n)
+        elif n <= 0xFFFF:
+            out.append(0xDE)
+            out += struct.pack(">H", n)
+        else:
+            out.append(0xDF)
+            out += struct.pack(">I", n)
+        for k, v in obj.items():
+            _pack_into(k, out)
+            _pack_into(v, out)
+    else:
+        raise WireError(f"unpackable type {type(obj).__name__}")
+
+
+def _pack_int(v: int, out: bytearray) -> None:
+    if 0 <= v <= 0x7F:
+        out.append(v)
+    elif -32 <= v < 0:
+        out.append(v & 0xFF)
+    elif 0 < v:
+        if v <= 0xFF:
+            out += bytes((0xCC, v))
+        elif v <= 0xFFFF:
+            out.append(0xCD)
+            out += struct.pack(">H", v)
+        elif v <= 0xFFFFFFFF:
+            out.append(0xCE)
+            out += struct.pack(">I", v)
+        elif v <= 0xFFFFFFFFFFFFFFFF:
+            out.append(0xCF)
+            out += struct.pack(">Q", v)
+        else:
+            raise WireError(f"int too large for wire: {v}")
+    else:
+        if v >= -0x80:
+            out.append(0xD0)
+            out += struct.pack(">b", v)
+        elif v >= -0x8000:
+            out.append(0xD1)
+            out += struct.pack(">h", v)
+        elif v >= -0x80000000:
+            out.append(0xD2)
+            out += struct.pack(">i", v)
+        elif v >= -0x8000000000000000:
+            out.append(0xD3)
+            out += struct.pack(">q", v)
+        else:
+            raise WireError(f"int too small for wire: {v}")
+
+
+def _pack_array(seq, out: bytearray) -> None:
+    n = len(seq)
+    if n <= 15:
+        out.append(0x90 | n)
+    elif n <= 0xFFFF:
+        out.append(0xDC)
+        out += struct.pack(">H", n)
+    else:
+        out.append(0xDD)
+        out += struct.pack(">I", n)
+    for item in seq:
+        _pack_into(item, out)
+
+
+def pack(obj: Any) -> bytes:
+    out = bytearray()
+    _pack_into(obj, out)
+    return bytes(out)
+
+
+# --------------------------------------------------------------------------- #
+# codec: unpack
+# --------------------------------------------------------------------------- #
+def _need(buf, off: int, n: int) -> None:
+    if off + n > len(buf):
+        raise WireError("truncated codec bytes")
+
+
+def _unpack_from(buf, off: int) -> Tuple[Any, int]:
+    _need(buf, off, 1)
+    tag = buf[off]
+    off += 1
+    if tag <= 0x7F:                      # positive fixint
+        return tag, off
+    if tag >= 0xE0:                      # negative fixint
+        return tag - 0x100, off
+    if 0x80 <= tag <= 0x8F:              # fixmap
+        return _unpack_map(buf, off, tag & 0x0F)
+    if 0x90 <= tag <= 0x9F:              # fixarray
+        return _unpack_list(buf, off, tag & 0x0F)
+    if 0xA0 <= tag <= 0xBF:              # fixstr
+        n = tag & 0x1F
+        _need(buf, off, n)
+        return bytes(buf[off : off + n]).decode("utf-8"), off + n
+    if tag == 0xC0:
+        return None, off
+    if tag == 0xC2:
+        return False, off
+    if tag == 0xC3:
+        return True, off
+    if tag in (0xC4, 0xC5, 0xC6):        # bin
+        n, off = _unpack_len(buf, off, tag - 0xC4)
+        _need(buf, off, n)
+        return bytes(buf[off : off + n]), off + n
+    if tag in (0xC7, 0xC8, 0xC9):        # ext
+        n, off = _unpack_len(buf, off, tag - 0xC7)
+        _need(buf, off, 1)
+        ext_type = buf[off]
+        off += 1
+        _need(buf, off, n)
+        if ext_type != _EXT_TUPLE:
+            raise WireError(f"unknown ext type {ext_type}")
+        inner, ioff = _unpack_from(buf, off)
+        if ioff != off + n or not isinstance(inner, list):
+            raise WireError("malformed tuple ext payload")
+        return tuple(inner), off + n
+    if tag == 0xCB:
+        _need(buf, off, 8)
+        return struct.unpack_from(">d", buf, off)[0], off + 8
+    if tag == 0xCC:
+        _need(buf, off, 1)
+        return buf[off], off + 1
+    if tag == 0xCD:
+        _need(buf, off, 2)
+        return struct.unpack_from(">H", buf, off)[0], off + 2
+    if tag == 0xCE:
+        _need(buf, off, 4)
+        return struct.unpack_from(">I", buf, off)[0], off + 4
+    if tag == 0xCF:
+        _need(buf, off, 8)
+        return struct.unpack_from(">Q", buf, off)[0], off + 8
+    if tag == 0xD0:
+        _need(buf, off, 1)
+        return struct.unpack_from(">b", buf, off)[0], off + 1
+    if tag == 0xD1:
+        _need(buf, off, 2)
+        return struct.unpack_from(">h", buf, off)[0], off + 2
+    if tag == 0xD2:
+        _need(buf, off, 4)
+        return struct.unpack_from(">i", buf, off)[0], off + 4
+    if tag == 0xD3:
+        _need(buf, off, 8)
+        return struct.unpack_from(">q", buf, off)[0], off + 8
+    if tag in (0xD9, 0xDA, 0xDB):        # str8/16/32
+        n, off = _unpack_len(buf, off, tag - 0xD9)
+        _need(buf, off, n)
+        return bytes(buf[off : off + n]).decode("utf-8"), off + n
+    if tag == 0xDC:
+        _need(buf, off, 2)
+        n = struct.unpack_from(">H", buf, off)[0]
+        return _unpack_list(buf, off + 2, n)
+    if tag == 0xDD:
+        _need(buf, off, 4)
+        n = struct.unpack_from(">I", buf, off)[0]
+        return _unpack_list(buf, off + 4, n)
+    if tag == 0xDE:
+        _need(buf, off, 2)
+        n = struct.unpack_from(">H", buf, off)[0]
+        return _unpack_map(buf, off + 2, n)
+    if tag == 0xDF:
+        _need(buf, off, 4)
+        n = struct.unpack_from(">I", buf, off)[0]
+        return _unpack_map(buf, off + 4, n)
+    raise WireError(f"unknown codec tag 0x{tag:02x}")
+
+
+def _unpack_len(buf, off: int, width_idx: int) -> Tuple[int, int]:
+    if width_idx == 0:
+        _need(buf, off, 1)
+        return buf[off], off + 1
+    if width_idx == 1:
+        _need(buf, off, 2)
+        return struct.unpack_from(">H", buf, off)[0], off + 2
+    _need(buf, off, 4)
+    return struct.unpack_from(">I", buf, off)[0], off + 4
+
+
+def _unpack_list(buf, off: int, n: int) -> Tuple[List[Any], int]:
+    out = []
+    for _ in range(n):
+        v, off = _unpack_from(buf, off)
+        out.append(v)
+    return out, off
+
+
+def _unpack_map(buf, off: int, n: int) -> Tuple[Dict[Any, Any], int]:
+    out: Dict[Any, Any] = {}
+    for _ in range(n):
+        k, off = _unpack_from(buf, off)
+        v, off = _unpack_from(buf, off)
+        out[k] = v
+    return out, off
+
+
+def unpack(data: bytes) -> Any:
+    obj, off = _unpack_from(memoryview(data), 0)
+    if off != len(data):
+        raise WireError(f"{len(data) - off} trailing byte(s) after value")
+    return obj
+
+
+# --------------------------------------------------------------------------- #
+# frames
+# --------------------------------------------------------------------------- #
+def encode_frame(msg_type: int, obj: Any) -> bytes:
+    body = pack(obj)
+    return _HEADER.pack(MAGIC, VERSION, msg_type, len(body)) + body
+
+
+def decode_header(hdr: bytes) -> Tuple[int, int]:
+    """(msg_type, body_len); raises WireError on bad magic/version."""
+    magic, version, msg_type, body_len = _HEADER.unpack(hdr)
+    if magic != MAGIC:
+        raise WireError(f"bad magic 0x{magic:02x}")
+    if version != VERSION:
+        raise WireError(f"unsupported wire version {version}")
+    if body_len > MAX_BODY:
+        raise WireError(f"frame body too large ({body_len} bytes)")
+    return msg_type, body_len
+
+
+def _recv_exact(sock, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(min(n, 1 << 20))
+        if not chunk:
+            raise ConnectionClosed("socket closed")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def send_frame(sock, msg_type: int, obj: Any) -> None:
+    sock.sendall(encode_frame(msg_type, obj))
+
+
+def recv_frame(sock) -> Tuple[int, Any]:
+    msg_type, body_len = decode_header(_recv_exact(sock, HEADER_LEN))
+    body = _recv_exact(sock, body_len) if body_len else b""
+    return msg_type, unpack(body)
+
+
+# --------------------------------------------------------------------------- #
+# dataclass <-> value-tree conversions
+# --------------------------------------------------------------------------- #
+def payload_to_obj(p) -> Dict[str, Any]:
+    return {
+        "rt": p.read_ts,
+        "r": [(r.key, r.version) for r in p.reads],
+        "w": [(w.key, [tuple(pt) for pt in w.patches]) for w in p.writes],
+        "p": [(pr.file_id, pr.kind.value, pr.value) for pr in p.predicates],
+        "mu": dict(p.meta_updates),
+        "nu": dict(p.name_updates),
+        "nr": dict(p.name_reads),
+        "mr": dict(p.meta_reads),
+        "ro": p.read_only,
+    }
+
+
+def payload_from_obj(o: Dict[str, Any]):
+    from repro.core.backend import TxnPayload  # avoid import cycle at top
+
+    return TxnPayload(
+        read_ts=o["rt"],
+        reads=[ReadRecord(tuple(k), v) for k, v in o["r"]],
+        writes=[
+            WriteRecord(tuple(k), [tuple(pt) for pt in pts])
+            for k, pts in o["w"]
+        ],
+        predicates=[
+            LengthPredicate(fid, PredicateKind(kind), val)
+            for fid, kind, val in o["p"]
+        ],
+        meta_updates=dict(o["mu"]),
+        name_updates=dict(o["nu"]),
+        name_reads=dict(o["nr"]),
+        meta_reads=dict(o["mr"]),
+        read_only=o["ro"],
+    )
+
+
+def begin_reply_to_obj(r) -> Dict[str, Any]:
+    return {
+        "rt": r.read_ts,
+        "u": {k: (ts, data) for k, (ts, data) in r.updates.items()},
+        "i": list(r.invalidations),
+        "fi": list(r.file_invalidations),
+    }
+
+
+def begin_reply_from_obj(o: Dict[str, Any]):
+    from repro.core.backend import BeginReply
+
+    return BeginReply(
+        read_ts=o["rt"],
+        updates={tuple(k): (ts, data) for k, (ts, data) in o["u"].items()},
+        invalidations=[tuple(k) for k in o["i"]],
+        file_invalidations=list(o["fi"]),
+    )
+
+
+def commit_reply_to_obj(r) -> Dict[str, Any]:
+    return {"ts": r.ts, "bv": dict(r.block_versions)}
+
+
+def commit_reply_from_obj(o: Dict[str, Any]):
+    from repro.core.api import CommitReply
+
+    return CommitReply(
+        ts=o["ts"], block_versions={tuple(k): v for k, v in o["bv"].items()}
+    )
+
+
+def stats_to_obj(stats) -> Dict[str, Any]:
+    return asdict(stats)
+
+
+def stats_from_obj(o: Dict[str, Any]):
+    from repro.core.backend import BackendStats
+
+    return BackendStats(**o)
+
+
+# --------------------------------------------------------------------------- #
+# exceptions over the wire
+# --------------------------------------------------------------------------- #
+def _conflict_keys_to_obj(keys) -> List[Any]:
+    out: List[Any] = []
+    for item in keys:
+        try:
+            tag, detail = item
+        except (TypeError, ValueError):
+            out.append(("opaque", repr(item)))
+            continue
+        if isinstance(detail, LengthPredicate):
+            detail = (detail.file_id, detail.kind.value, detail.value)
+            tag = "predicate"
+        out.append((tag, detail))
+    return out
+
+
+def _conflict_keys_from_obj(obj) -> List[Any]:
+    out: List[Any] = []
+    for tag, detail in obj:
+        if tag == "predicate":
+            fid, kind, val = detail
+            detail = LengthPredicate(fid, PredicateKind(kind), val)
+        out.append((tag, detail))
+    return out
+
+
+def exception_to_obj(exc: BaseException) -> Dict[str, Any]:
+    extra = None
+    if isinstance(exc, Conflict):
+        extra = _conflict_keys_to_obj(exc.keys)
+    return {"t": type(exc).__name__, "m": str(exc), "x": extra}
+
+
+def exception_from_obj(o: Dict[str, Any]) -> BaseException:
+    from repro.core.blockstore import SnapshotTooOld
+
+    etype, msg, extra = o["t"], o["m"], o["x"]
+    if etype == "Conflict":
+        return Conflict(msg, _conflict_keys_from_obj(extra or []))
+    table = {
+        "NotFound": NotFound,
+        "Exists": Exists,
+        "TxnStateError": TxnStateError,
+        "SnapshotTooOld": SnapshotTooOld,
+        "StaleEpoch": StaleEpoch,
+        "ValueError": ValueError,
+        "KeyError": KeyError,
+    }
+    cls = table.get(etype)
+    if cls is not None:
+        return cls(msg)
+    return RemoteError(f"{etype}: {msg}")

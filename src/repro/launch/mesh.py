@@ -24,18 +24,24 @@ TPU_XLA_FLAGS = (
 )
 
 
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh across JAX generations: ``axis_types`` only exists
+    where ``jax.sharding.AxisType`` does (newer JAX); older releases take
+    only (shape, axes) and every axis is implicitly Auto."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips when ``multi_pod``."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """A 1x1 mesh over the real local device (smoke tests, examples)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((1, 1), ("data", "model"))

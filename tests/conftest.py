@@ -1,23 +1,52 @@
-"""Shared fixtures: run backend-agnostic suites against both the
-monolithic ``BackendService`` and the ``ShardedBackend`` (2 and 4 shards),
-so every OCC / POSIX / snapshot / checkpoint invariant is exercised over
-single-shard fast-path commits AND cross-shard 2PC commits."""
+"""Shared fixtures: run backend-agnostic suites against the monolithic
+``BackendService``, the ``ShardedBackend`` (2 and 4 shards), AND the
+networked transport (``RemoteBackend`` speaking the real wire protocol
+to a ``BackendServer`` over a localhost socket, mono and sharded, with a
+durable WAL attached so every commit exercises the fsync'd log path).
+Every OCC / POSIX / snapshot / checkpoint invariant is thus exercised
+over single-shard fast-path commits, cross-shard 2PC commits, and both
+again behind real socket round trips."""
 import pytest
 
 from repro.core.backend import BackendService
 from repro.core.sharded import ShardedBackend
 
-BACKEND_KINDS = ("mono", "sharded2", "sharded4")
+BACKEND_KINDS = (
+    "mono",
+    "sharded2",
+    "sharded4",
+    "remote-mono",
+    "remote-sharded2",
+)
 
 
 @pytest.fixture(params=BACKEND_KINDS)
-def backend_factory(request):
+def backend_factory(request, tmp_path):
     kind = request.param
+    live = []  # (server, client) pairs to tear down
 
     def make(**kwargs):
         if kind == "mono":
             return BackendService(**kwargs)
-        return ShardedBackend(n_shards=int(kind[len("sharded"):]), **kwargs)
+        if kind.startswith("sharded"):
+            return ShardedBackend(n_shards=int(kind[len("sharded"):]), **kwargs)
+        # networked kinds: in-process threaded server, real socket, real WAL
+        from repro.core.remote import RemoteBackend
+        from repro.core.server import BackendServer
+
+        if kind == "remote-mono":
+            inner = BackendService(**kwargs)
+        else:
+            n = int(kind[len("remote-sharded"):])
+            inner = ShardedBackend(n_shards=n, **kwargs)
+        wal_path = tmp_path / f"wal-{len(live)}.log"
+        server = BackendServer(inner, wal_path=str(wal_path)).start()
+        client = RemoteBackend("127.0.0.1", server.port)
+        live.append((server, client))
+        return client
 
     make.kind = kind
-    return make
+    yield make
+    for server, client in live:
+        client.close()
+        server.shutdown()

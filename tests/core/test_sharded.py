@@ -240,6 +240,136 @@ def test_single_shard_fast_path_is_used():
     assert be.coord_stats.cross_commits == cross_before + 1
 
 
+def test_2pc_read_participant_lock_pins_the_cut():
+    """Regression for a tempting-but-unsound optimization: releasing a
+    read-only 2PC participant's lock after validation. T1 reads f1 on
+    shard A and writes f2 on shard B; T1's validated read pins T1 < any
+    later writer of f1. While T1 is still applying on B, a racing
+    T2 = write(f1) must NOT be able to commit on A and register — a
+    snapshot reader beginning in that window would observe T2 without T1
+    (a non-serializable cut). With A's lock held through registration,
+    the reader sees a consistent prefix: T2 visible implies T1 visible."""
+    be = ShardedBackend(n_shards=2, block_size=16, versions_kept=64)
+    a, b, r = LocalServer(be), LocalServer(be), LocalServer(be)
+    f1 = new_file(a, "/x", size=16)
+    f2 = new_file(a, "/y", size=16)
+    s_w = be.shard_of_fid(f2)
+    assert be.shard_of_fid(f1) != s_w
+
+    t1 = a.begin()
+    assert t1.read(f1, 0, 4) == b"\0\0\0\0"   # read participant on A
+    t1.write(f2, 0, b"T1T1")                   # effect on B
+    # T2 begins BEFORE T1's commit window (begin scans every shard and
+    # would otherwise block on B's held lock); only its commit — a
+    # single-shard fast path needing just A's lock — races T1
+    t2 = b.begin()
+    t2.read(f1, 0, 4)
+    t2.write(f1, 0, b"T2T2")
+
+    entered, gate = threading.Event(), threading.Event()
+    orig_apply = be.shards[s_w].apply_locked
+
+    def slow_apply(payload, ts):
+        entered.set()
+        assert gate.wait(5)
+        return orig_apply(payload, ts)
+
+    be.shards[s_w].apply_locked = slow_apply
+    worker = threading.Thread(target=t1.commit)
+    worker.start()
+    observed = []
+
+    def t2_commit():
+        t2.commit()
+
+    def read_snapshot():
+        # begin() captures the registered vector BEFORE its per-shard
+        # scans, so the cut it reads at is whatever was registered in
+        # the race window — exactly what must stay consistent
+        snap = r.begin(read_only=True)
+        observed.append((snap.read(f1, 0, 4), snap.read(f2, 0, 4)))
+        snap.commit()
+
+    racer = threading.Thread(target=t2_commit)
+    reader = threading.Thread(target=read_snapshot)
+    try:
+        assert entered.wait(5)
+        racer.start()              # must block on shard A's commit lock
+        racer.join(timeout=0.3)
+        reader.start()             # pins its cut inside the race window
+        reader.join(timeout=0.3)
+    finally:
+        gate.set()
+        worker.join()
+        racer.join()
+        reader.join()
+    be.shards[s_w].apply_locked = orig_apply
+
+    (x, y), = observed
+    # T2-visible-but-not-T1 is the forbidden cut (T1 serializes first)
+    assert not (x == b"T2T2" and y != b"T1T1"), (x, y)
+
+
+def test_2pc_applies_shards_in_parallel():
+    """Per-shard durable apply overlaps across 2PC participants: both
+    effectful shards must be inside their service window simultaneously
+    (a serial apply would deadlock the barrier and fail the commit)."""
+    be = ShardedBackend(n_shards=2, block_size=16)
+    a = LocalServer(be)
+    f1 = new_file(a, "/x", size=16)
+    f2 = new_file(a, "/y", size=16)
+    assert be.shard_of_fid(f1) != be.shard_of_fid(f2)
+
+    rendezvous = threading.Barrier(2)
+
+    def overlapping_service():
+        # passes only if BOTH shard applies are in flight concurrently
+        rendezvous.wait(timeout=5)
+
+    for s in (be.shard_of_fid(f1), be.shard_of_fid(f2)):
+        be.shards[s]._service = overlapping_service
+
+    txn = a.begin()
+    txn.write(f1, 0, b"PPPP")
+    txn.write(f2, 0, b"QQQQ")
+    txn.commit()                      # BrokenBarrierError if serial
+
+    check = a.begin()
+    assert check.read(f1, 0, 4) == b"PPPP"
+    assert check.read(f2, 0, 4) == b"QQQQ"
+    check.commit()
+
+
+def test_2pc_pure_validation_txn_commits_without_burning_timestamps():
+    """A multi-shard transaction with reads but no effects validates
+    under every participant's lock and commits without assigning
+    timestamps or moving the sync vector."""
+    be = ShardedBackend(n_shards=2, block_size=16)
+    a = LocalServer(be)
+    f1 = new_file(a, "/x", size=16)
+    f2 = new_file(a, "/y", size=16)
+    assert be.shard_of_fid(f1) != be.shard_of_fid(f2)
+
+    vec_before = be.latest_ts
+    txn = a.begin()                    # NOT read_only: reads are validated
+    txn.read(f1, 0, 4)
+    txn.read(f2, 0, 4)
+    txn.commit()
+    assert be.latest_ts == vec_before
+
+    # and it still detects conflicts: stale read aborts
+    b = LocalServer(be)
+    ta = a.begin()
+    ta.read(f1, 0, 4)
+    ta.read(f2, 0, 4)
+    tb = b.begin()
+    tb.read(f1, 0, 4)
+    tb.write(f1, 0, b"ZZZZ")
+    tb.commit()
+    with pytest.raises(Conflict):
+        ta.commit()
+
+
 def test_group_commit_batches_amortize_lock_acquisitions():
     be = BackendService(block_size=16, group_commit_window_s=0.02)
     setup = LocalServer(be)

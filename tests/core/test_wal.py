@@ -1,0 +1,277 @@
+"""Durable commit log: torn-tail handling, replay fidelity, group-fsync
+amortization, and true SIGKILL crash recovery of the RPC server."""
+import os
+import signal
+import struct
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import wal as walmod
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.sharded import ShardedBackend
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+
+# --------------------------------------------------------------------------- #
+# log framing / torn tails
+# --------------------------------------------------------------------------- #
+def test_append_scan_roundtrip(tmp_path):
+    path = str(tmp_path / "w.log")
+    log = walmod.WriteAheadLog(path)
+    recs = [("epoch", 1), ("lease", 1, 1, 64), ("c", 0, 1, ([], {1: 8}, {"/a": 1}))]
+    for r in recs:
+        log.append(r)
+    log.sync()
+    log.close()
+    got, good_end = walmod.scan(path)
+    assert got == recs
+    assert good_end == os.path.getsize(path)
+
+
+@pytest.mark.parametrize("spoil", ["cut", "partial_header", "bad_crc", "garbage"])
+def test_torn_tail_dropped_but_prefix_survives(tmp_path, spoil):
+    path = str(tmp_path / "w.log")
+    log = walmod.WriteAheadLog(path)
+    log.append(("epoch", 1))
+    log.append(("c", 0, 1, ([], {1: 4}, {"/a": 1})))
+    log.sync()
+    log.close()
+    intact = os.path.getsize(path)
+
+    with open(path, "r+b") as f:
+        f.seek(0, os.SEEK_END)
+        if spoil == "cut":
+            # a real record, crashed mid-append: body missing bytes
+            body = b"\x92\x01\x02"
+            f.write(struct.pack(">II", 100, 0) + body)
+        elif spoil == "partial_header":
+            f.write(b"\x00\x00")
+        elif spoil == "bad_crc":
+            import zlib
+
+            from repro.core import wire
+
+            body = wire.pack(("c", 0, 2, ([], {}, {})))
+            f.write(struct.pack(">II", len(body), zlib.crc32(body) ^ 1) + body)
+        else:
+            f.write(os.urandom(23))
+
+    recs, good_end = walmod.scan(path)
+    assert len(recs) == 2           # the intact prefix
+    assert good_end == intact
+    walmod.truncate_to(path, good_end)
+    assert os.path.getsize(path) == intact
+    # post-recovery appends start clean on the truncated file
+    log = walmod.WriteAheadLog(path)
+    log.append(("c", 0, 2, ([], {}, {})))
+    log.sync()
+    log.close()
+    recs, _ = walmod.scan(path)
+    assert len(recs) == 3
+
+
+# --------------------------------------------------------------------------- #
+# replay fidelity (in-process)
+# --------------------------------------------------------------------------- #
+def _commit_some(backend, n=3):
+    local = LocalServer(backend)
+    fids = []
+    for i in range(n):
+        txn = local.begin()
+        fid = txn.create(f"/f{i}")
+        txn.write(fid, 0, f"data-{i}".encode() * 3)
+        txn.commit()
+        fids.append(fid)
+    return fids
+
+
+def test_mono_replay_rebuilds_state_and_sequencer(tmp_path):
+    path = str(tmp_path / "w.log")
+    be = BackendService(block_size=16, wal=walmod.WriteAheadLog(path))
+    fids = _commit_some(be, 3)
+    old_ts = be.latest_ts
+    be.wal.close()
+
+    be2 = BackendService(block_size=16)
+    summary = walmod.recover(be2, path)
+    assert summary["commits"] == 3
+    assert be2.latest_ts == old_ts          # sequencer resumed
+    local = LocalServer(be2)
+    txn = local.begin()
+    for i, fid in enumerate(fids):
+        assert txn.lookup(f"/f{i}") == fid
+        assert txn.read(fid, 0, 6) == f"data-{i}".encode()[:6]
+    txn.commit()
+    # version chains replayed at original timestamps: blocks validate
+    assert be2.store.block_version((fids[0], 0)) == be.store.block_version(
+        (fids[0], 0)
+    )
+
+
+def test_sharded_2pc_record_replays_atomically(tmp_path):
+    path = str(tmp_path / "w.log")
+    be = ShardedBackend(n_shards=2, block_size=16)
+    be.set_wal(walmod.WriteAheadLog(path))
+    local = LocalServer(be)
+    txn = local.begin()
+    f1, f2 = txn.create("/x"), txn.create("/y")
+    assert be.shard_of_fid(f1) != be.shard_of_fid(f2)
+    txn.write(f1, 0, b"XXXX")
+    txn.write(f2, 0, b"YYYY")
+    txn.commit()                             # cross-shard: ONE 2PC record
+    vec = be.latest_ts
+    be.wal.close()
+
+    be2 = ShardedBackend(n_shards=2, block_size=16)
+    summary = walmod.recover(be2, path)
+    assert summary["commits"] >= 1
+    assert be2.latest_ts == vec              # consistent cut restored
+    check = LocalServer(be2)
+    t = check.begin()
+    assert t.read(f1, 0, 4) == b"XXXX"
+    assert t.read(f2, 0, 4) == b"YYYY"
+    t.commit()
+
+
+def test_group_commit_amortizes_fsyncs(tmp_path):
+    import threading
+
+    path = str(tmp_path / "w.log")
+    log = walmod.WriteAheadLog(path)
+    be = BackendService(block_size=16, group_commit_window_s=0.02, wal=log)
+    setup = LocalServer(be)
+    fids = _commit_some(be, 4)
+    fsyncs_before = log.fsyncs
+    barrier = threading.Barrier(4)
+
+    def worker(i):
+        local = LocalServer(be)
+        barrier.wait()
+        for _ in range(3):
+            txn = local.begin()
+            cur = txn.read(fids[i], 0, 4)
+            txn.write(fids[i], 0, b"abcd")
+            txn.commit()
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    commits = 12
+    fsyncs = log.fsyncs - fsyncs_before
+    assert 0 < fsyncs < commits          # one barrier per batch, not per txn
+    log.close()
+    # everything acked is on disk
+    be2 = BackendService(block_size=16)
+    walmod.recover(be2, path)
+    check = LocalServer(be2)
+    t = check.begin()
+    for i in range(4):
+        assert t.read(fids[i], 0, 4) == b"abcd"
+    t.commit()
+
+
+# --------------------------------------------------------------------------- #
+# true crash: SIGKILL the server process, restart, verify durability
+# --------------------------------------------------------------------------- #
+def _spawn_server(wal_path, shards=0, block_size=16):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.core.server",
+            "--wal", str(wal_path),
+            "--shards", str(shards),
+            "--block-size", str(block_size),
+        ],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+        env=env,
+        cwd=str(REPO_ROOT),
+    )
+    line = proc.stdout.readline()
+    assert line.startswith("LISTENING"), (line, proc.stderr.read())
+    port = int(line.split()[1])
+    return proc, port
+
+
+@pytest.mark.parametrize("shards", [0, 2], ids=["mono", "sharded2"])
+def test_sigkill_acked_commits_survive_restart(tmp_path, shards):
+    from repro.core.remote import RemoteBackend
+
+    wal_path = tmp_path / "server.wal"
+    proc, port = _spawn_server(wal_path, shards=shards)
+    try:
+        rb = RemoteBackend("127.0.0.1", port)
+        local = LocalServer(rb)
+        acked = 0
+        txn = local.begin()
+        fid = txn.create("/counter")
+        txn.write(fid, 0, acked.to_bytes(8, "little"))
+        txn.commit()
+        for _ in range(10):
+            txn = local.begin()
+            cur = int.from_bytes(txn.read(fid, 0, 8), "little")
+            txn.write(fid, 0, (cur + 1).to_bytes(8, "little"))
+            last_token = txn.commit()     # returns only after WAL fsync
+            acked = cur + 1
+        # a transaction in flight at the crash: begun, written, NOT acked
+        pending = local.begin()
+        pending.write(fid, 8, b"junk!!!!")
+        rb.close()
+    finally:
+        proc.kill()                        # SIGKILL: no atexit, no flush
+        proc.wait()
+
+    # simulate the torn tail a mid-append crash leaves behind
+    with open(wal_path, "ab") as f:
+        f.write(struct.pack(">II", 4096, 0) + b"torn")
+
+    proc2, port2 = _spawn_server(wal_path, shards=shards)
+    try:
+        rb2 = RemoteBackend("127.0.0.1", port2)
+        assert rb2.server_epoch == 2       # restart fenced a new epoch
+        local2 = LocalServer(rb2)
+        txn = local2.begin()
+        # every acked commit is readable at the acked sync timestamp...
+        assert int.from_bytes(txn.read(fid, 0, 8), "little") == acked == 10
+        # ...and the unacked in-flight write rolled back with the crash
+        assert txn.read(fid, 8, 8) == b""  # length predicate: file is 8 bytes
+        txn.commit()
+        rb2.close()
+    finally:
+        proc2.kill()
+        proc2.wait()
+
+
+def test_restart_never_regrants_leased_fids(tmp_path):
+    from repro.core.remote import RemoteBackend
+
+    wal_path = tmp_path / "server.wal"
+    proc, port = _spawn_server(wal_path)
+    try:
+        rb = RemoteBackend("127.0.0.1", port, lease_size=8)
+        first = [rb.alloc_file_id() for _ in range(20)]  # spans 3 leases
+        rb.close()
+    finally:
+        proc.kill()
+        proc.wait()
+    proc2, port2 = _spawn_server(wal_path)
+    try:
+        rb2 = RemoteBackend("127.0.0.1", port2, lease_size=8)
+        second = [rb2.alloc_file_id() for _ in range(20)]
+        assert not (set(first) & set(second))
+        rb2.close()
+    finally:
+        proc2.kill()
+        proc2.wait()

@@ -1,0 +1,250 @@
+"""Wire codec + frame round trips (the networked transport's contract)."""
+import pytest
+
+from repro.core import wire
+from repro.core.api import CommitReply
+from repro.core.backend import BeginReply, TxnPayload
+from repro.core.types import (
+    Conflict,
+    LengthPredicate,
+    NotFound,
+    PredicateKind,
+    ReadRecord,
+    WriteRecord,
+)
+
+SAMPLES = [
+    None,
+    True,
+    False,
+    0,
+    1,
+    127,
+    128,          # uint8 boundary
+    255,
+    256,          # uint16
+    65535,
+    65536,        # uint32
+    2**32 - 1,
+    2**32,        # uint64
+    2**64 - 1,
+    -1,
+    -32,          # negative fixint boundary
+    -33,          # int8
+    -128,
+    -129,         # int16
+    -32769,       # int32
+    -2**31 - 1,   # int64
+    -2**63,
+    1.5,
+    -0.25,
+    "",
+    "hello",
+    "x" * 31,     # fixstr boundary
+    "x" * 32,     # str8
+    "x" * 300,    # str16
+    "ünïcødé ✓",
+    b"",
+    b"\x00\xff" * 10,
+    b"y" * 70000,  # bin32
+    [],
+    [1, "two", b"three", None],
+    list(range(20)),          # array16
+    (),
+    (1, 2),
+    ((1, 2), (3, 4)),
+    {},
+    {"a": 1, "b": [1, 2], "c": {"d": (5, 6)}},
+    {(1, 0): (7, b"data"), (2, 3): (9, b"x")},   # BlockKey-keyed map
+    {i: i * i for i in range(40)},               # map16
+]
+
+
+@pytest.mark.parametrize("obj", SAMPLES, ids=range(len(SAMPLES)))
+def test_roundtrip(obj):
+    out = wire.unpack(wire.pack(obj))
+    assert out == obj
+    assert type(out) is type(obj)
+
+
+def test_tuples_stay_tuples_and_lists_stay_lists():
+    out = wire.unpack(wire.pack([(1, 2), [3, 4]]))
+    assert isinstance(out[0], tuple) and isinstance(out[1], list)
+
+
+def test_int_out_of_64bit_range_rejected():
+    with pytest.raises(wire.WireError):
+        wire.pack(2**64)
+    with pytest.raises(wire.WireError):
+        wire.pack(-2**63 - 1)
+
+
+def test_trailing_garbage_rejected():
+    with pytest.raises(wire.WireError):
+        wire.unpack(wire.pack(1) + b"\x00")
+
+
+def test_truncated_rejected():
+    data = wire.pack({"k": [1, 2, 3], "v": b"xyz"})
+    for cut in range(1, len(data)):
+        with pytest.raises(wire.WireError):
+            wire.unpack(data[:cut])
+
+
+# --------------------------------------------------------------------------- #
+# frames
+# --------------------------------------------------------------------------- #
+def test_frame_header_roundtrip():
+    frame = wire.encode_frame(wire.T_COMMIT, {"x": 1})
+    msg_type, body_len = wire.decode_header(frame[: wire.HEADER_LEN])
+    assert msg_type == wire.T_COMMIT
+    assert body_len == len(frame) - wire.HEADER_LEN
+    assert wire.unpack(frame[wire.HEADER_LEN:]) == {"x": 1}
+
+
+def test_frame_bad_magic_and_version_rejected():
+    frame = bytearray(wire.encode_frame(wire.T_OK, None))
+    frame[0] ^= 0xFF
+    with pytest.raises(wire.WireError):
+        wire.decode_header(bytes(frame[: wire.HEADER_LEN]))
+    frame = bytearray(wire.encode_frame(wire.T_OK, None))
+    frame[1] = 99
+    with pytest.raises(wire.WireError):
+        wire.decode_header(bytes(frame[: wire.HEADER_LEN]))
+
+
+# --------------------------------------------------------------------------- #
+# typed conversions
+# --------------------------------------------------------------------------- #
+def _sample_payload(read_ts):
+    return TxnPayload(
+        read_ts=read_ts,
+        reads=[ReadRecord((1, 0), 3), ReadRecord((2, 5), 0)],
+        writes=[WriteRecord((1, 0), [(0, b"abc"), (10, b"\x00\xff")])],
+        predicates=[LengthPredicate(1, PredicateKind.GE, 12)],
+        meta_updates={1: 12, 2: None},
+        name_updates={"/a": 1, "/b": None},
+        name_reads={"/a": 7},
+        meta_reads={1: 2},
+        read_only=False,
+    )
+
+
+@pytest.mark.parametrize("read_ts", [5, (1, 2, 3)], ids=["scalar", "vector"])
+def test_payload_conversion_roundtrip(read_ts):
+    p = _sample_payload(read_ts)
+    q = wire.payload_from_obj(wire.unpack(wire.pack(wire.payload_to_obj(p))))
+    assert q.read_ts == p.read_ts
+    assert [(r.key, r.version) for r in q.reads] == [
+        (r.key, r.version) for r in p.reads
+    ]
+    assert [(w.key, w.patches) for w in q.writes] == [
+        (w.key, [tuple(pt) for pt in w.patches]) for w in p.writes
+    ]
+    assert q.predicates == p.predicates
+    assert q.meta_updates == p.meta_updates
+    assert q.name_updates == p.name_updates
+    assert q.name_reads == p.name_reads
+    assert q.meta_reads == p.meta_reads
+    assert q.read_only == p.read_only
+
+
+def test_begin_and_commit_reply_roundtrip():
+    br = BeginReply(
+        read_ts=(4, 7),
+        updates={(1, 0): (3, b"blockdata"), (9, 2): (1, b"")},
+        invalidations=[(1, 1), (2, 2)],
+        file_invalidations=[5],
+    )
+    out = wire.begin_reply_from_obj(
+        wire.unpack(wire.pack(wire.begin_reply_to_obj(br)))
+    )
+    assert out.read_ts == br.read_ts
+    assert out.updates == br.updates
+    assert out.invalidations == br.invalidations
+    assert out.file_invalidations == br.file_invalidations
+
+    cr = CommitReply(ts=11, block_versions={(1, 0): 11, (3, 4): 12})
+    out = wire.commit_reply_from_obj(
+        wire.unpack(wire.pack(wire.commit_reply_to_obj(cr)))
+    )
+    assert out.ts == cr.ts and out.block_versions == cr.block_versions
+
+
+def test_exception_mapping_conflict_keys_survive():
+    exc = Conflict(
+        "validation failed",
+        [
+            ("block", (1, 0)),
+            ("name", "/a"),
+            ("meta", 3),
+            ("predicate", LengthPredicate(1, PredicateKind.LE, 4)),
+        ],
+    )
+    back = wire.exception_from_obj(
+        wire.unpack(wire.pack(wire.exception_to_obj(exc)))
+    )
+    assert isinstance(back, Conflict)
+    assert back.keys[0] == ("block", (1, 0))
+    assert back.keys[1] == ("name", "/a")
+    assert back.keys[3] == ("predicate", LengthPredicate(1, PredicateKind.LE, 4))
+
+    nf = wire.exception_from_obj(
+        wire.unpack(wire.pack(wire.exception_to_obj(NotFound("file 9"))))
+    )
+    assert isinstance(nf, NotFound)
+
+    weird = wire.exception_from_obj(
+        wire.unpack(wire.pack(wire.exception_to_obj(ZeroDivisionError("x"))))
+    )
+    assert isinstance(weird, wire.RemoteError)
+
+
+def test_stale_epoch_maps():
+    back = wire.exception_from_obj(
+        wire.unpack(wire.pack(wire.exception_to_obj(wire.StaleEpoch("old"))))
+    )
+    assert isinstance(back, wire.StaleEpoch)
+
+
+# --------------------------------------------------------------------------- #
+# property-based round trips (hypothesis, optional dependency — guarded so
+# the handcrafted tests above still run without it)
+# --------------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    st = None
+
+if st is not None:
+    scalars = st.one_of(
+        st.none(),
+        st.booleans(),
+        st.integers(min_value=-2**63, max_value=2**64 - 1),
+        st.floats(allow_nan=False),
+        st.text(max_size=64),
+        st.binary(max_size=64),
+    )
+    trees = st.recursive(
+        scalars,
+        lambda children: st.one_of(
+            st.lists(children, max_size=8),
+            st.lists(children, max_size=8).map(tuple),
+            st.dictionaries(
+                st.one_of(
+                    st.integers(min_value=-2**31, max_value=2**31),
+                    st.text(max_size=16),
+                    st.tuples(st.integers(min_value=0, max_value=2**31),
+                              st.integers(min_value=0, max_value=2**31)),
+                ),
+                children,
+                max_size=8,
+            ),
+        ),
+        max_leaves=40,
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(trees)
+    def test_property_roundtrip(obj):
+        assert wire.unpack(wire.pack(obj)) == obj

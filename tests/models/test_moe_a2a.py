@@ -16,8 +16,17 @@ SCRIPT = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro.models.moe import moe_ffn, moe_ffn_a2a
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # mesh construction + activation across JAX generations: new JAX has
+    # make_mesh(axis_types=...) and jax.set_mesh; old JAX builds a Mesh
+    # directly and uses it as a context manager.
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        use_mesh = lambda: jax.set_mesh(mesh)
+    else:
+        mesh = jax.sharding.Mesh(
+            np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+        use_mesh = lambda: mesh
     key = jax.random.PRNGKey(0)
     B, S, D, E, F, k = 4, 8, 16, 4, 32, 2
     ks = jax.random.split(key, 5)
@@ -27,7 +36,7 @@ SCRIPT = textwrap.dedent("""
     wo = jax.random.normal(ks[3], (E, F, D)) * 0.1
     x = jax.random.normal(ks[4], (B, S, D))
 
-    with jax.set_mesh(mesh):
+    with use_mesh():
         y_ref, aux_ref = jax.jit(lambda *a: moe_ffn(
             *a, num_experts=E, top_k=k, capacity_factor=32.0, groups=1))(
             x, router, wi, wg, wo)
@@ -45,7 +54,7 @@ SCRIPT = textwrap.dedent("""
     g_ref = jax.grad(lambda w: loss(lambda *a: moe_ffn(
         *a, num_experts=E, top_k=k, capacity_factor=32.0, groups=1),
         x, router, w, wg, wo))(wi)
-    with jax.set_mesh(mesh):
+    with use_mesh():
         g_a2a = jax.grad(lambda w: loss(lambda *a: moe_ffn_a2a(
             *a, num_experts=E, top_k=k, capacity_factor=32.0,
             mesh=mesh, batch_axes=("data",), model_axis="model",
