@@ -1,7 +1,8 @@
 """Networked transport cost: real localhost sockets vs in-process vs the
-simulated ``LatencyInjector``, and the WAL group-commit throughput curve.
+simulated ``LatencyInjector``, pooled vs pipelined clients, and the WAL
+group-commit throughput curve.
 
-Three questions, mirroring the paper's EC2 deployment concerns:
+Five questions, mirroring the paper's EC2 deployment concerns:
 
   1. **Per-op cost of the real wire.** Sequential read-modify-write
      transactions over (a) the in-process backend, (b) the backend behind
@@ -10,16 +11,29 @@ Three questions, mirroring the paper's EC2 deployment concerns:
      pair on localhost, (d) the same socket with a durable WAL (fsync per
      commit). (b) vs (c) calibrates the simulation against reality.
 
-  2. **Concurrent throughput over sockets.** 8 client threads (each its
-     own pooled connection) driving uncontended RMW transactions.
+  2. **Concurrent throughput over sockets.** 8 client threads driving
+     uncontended RMW transactions over one multiplexed connection.
 
-  3. **WAL group commit.** With real fsyncs, throughput as the group
+  3. **Pooled vs pipelined on concurrent small reads.** The PR 2 design
+     (one synchronous request per pooled connection) against the wire v2
+     design (request-id multiplexing, a window of in-flight futures per
+     worker on ONE shared socket). Same server, same blocks.
+
+  4. **Batched block fetch.** Reading every block of an N-block file:
+     N scalar ``fetch_block`` round trips vs ONE ``fetch_blocks`` frame
+     (the RPC counter proves it is a single round trip).
+
+  5. **WAL group commit.** With real fsyncs, throughput as the group
      window widens: one fsync per batch instead of per commit is the
      whole durability story under load (fsyncs/commit is reported).
+
+``--smoke`` shrinks durations/iterations so CI can afford the run; the
+artifact still lands in ``BENCH_remote.json``.
 """
 from __future__ import annotations
 
 import os
+import sys
 import tempfile
 import threading
 import time
@@ -28,7 +42,7 @@ from typing import List, Tuple
 from repro.core.api import LatencyInjector
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
-from repro.core.remote import RemoteBackend
+from repro.core.remote import PooledRemoteBackend, RemoteBackend
 from repro.core.server import BackendServer
 from repro.core.types import CachePolicy, Conflict
 
@@ -39,19 +53,31 @@ DURATION_S = 0.6
 SEQ_TXNS = 400
 RPC_LATENCY_S = 100e-6          # the simulation's RTT estimate
 GROUP_WINDOWS_MS = (0.0, 0.5, 2.0)
+READ_CLIENTS = 4                # pooled-vs-pipelined comparison threads
+PIPELINE_WINDOW = 32            # in-flight futures per pipelined worker
+BATCH_FILE_BLOCKS = 16
+
+
+def _smoke() -> None:
+    """Shrink knobs so the suite finishes in a few seconds on CI."""
+    global DURATION_S, SEQ_TXNS, GROUP_WINDOWS_MS
+    DURATION_S = 0.15
+    SEQ_TXNS = 60
+    GROUP_WINDOWS_MS = (0.0, 2.0)
 
 
 def _mk_backend() -> BackendService:
     return BackendService(block_size=BLOCK, policy=CachePolicy.INVALIDATE)
 
 
-def _mk_files(backend, n: int) -> List[int]:
+def _mk_files(backend, n: int, file_bytes: int = FILE_BYTES,
+              prefix: str = "/bench/f") -> List[int]:
     setup = LocalServer(backend)
     fids = []
     for i in range(n):
         txn = setup.begin()
-        fid = txn.create(f"/bench/f{i}")
-        txn.write(fid, 0, b"\0" * FILE_BYTES)
+        fid = txn.create(f"{prefix}{i}")
+        txn.write(fid, 0, b"\0" * file_bytes)
         txn.commit()
         fids.append(fid)
     return fids
@@ -108,18 +134,85 @@ def throughput(backend) -> Tuple[float, int]:
     return sum(committed) / wall, sum(committed)
 
 
+def _timed_read_workers(worker_loop) -> float:
+    """Shared harness for the pooled-vs-pipelined comparison: barrier,
+    shared deadline, one thread per client, aggregate reads/s.
+    ``worker_loop(ci, deadline)`` returns that worker's completed count —
+    both contenders run under the exact same timing scheme."""
+    done = [0] * READ_CLIENTS
+    gate = threading.Barrier(READ_CLIENTS)
+    deadline = [0.0]
+
+    def worker(ci: int) -> None:
+        gate.wait()
+        if ci == 0:
+            deadline[0] = time.perf_counter() + DURATION_S
+        while deadline[0] == 0.0:
+            time.sleep(1e-5)
+        done[ci] = worker_loop(ci, deadline)
+
+    threads = [
+        threading.Thread(target=worker, args=(i,)) for i in range(READ_CLIENTS)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return sum(done) / (time.perf_counter() - t0)
+
+
+def read_throughput_pooled(client, keys) -> float:
+    """PR 2 model: each worker thread blocks on one scalar fetch at a
+    time; concurrency = one pooled connection per worker."""
+
+    def loop(ci: int, deadline) -> int:
+        i, n = ci, 0
+        while time.perf_counter() < deadline[0]:
+            client.fetch_block(keys[i % len(keys)])
+            n += 1
+            i += 1
+        return n
+
+    return _timed_read_workers(loop)
+
+
+def read_throughput_pipelined(client: RemoteBackend, keys) -> float:
+    """Wire v2 model: each worker keeps PIPELINE_WINDOW fetches in flight
+    on the ONE shared multiplexed connection and harvests futures as they
+    resolve out of order."""
+
+    def loop(ci: int, deadline) -> int:
+        i, n = ci, 0
+        inflight = []
+        while time.perf_counter() < deadline[0]:
+            while len(inflight) < PIPELINE_WINDOW:
+                inflight.append(
+                    client.submit("fetch_block", keys[i % len(keys)])
+                )
+                i += 1
+            inflight.pop(0).result()
+            n += 1
+        for f in inflight:
+            f.result()
+            n += 1
+        return n
+
+    return _timed_read_workers(loop)
+
+
 class _Served:
     """BackendServer + RemoteBackend pair with teardown."""
 
     def __init__(self, inner, wal_dir=None, sync_mode="fsync",
-                 tag="wal"):
+                 tag="wal", client_cls=RemoteBackend):
         wal_path = (
             os.path.join(wal_dir, f"{tag}.log") if wal_dir is not None else None
         )
         self.server = BackendServer(
             inner, wal_path=wal_path, sync_mode=sync_mode
         ).start()
-        self.client = RemoteBackend("127.0.0.1", self.server.port)
+        self.client = client_cls("127.0.0.1", self.server.port)
 
     def close(self) -> None:
         self.client.close()
@@ -153,7 +246,54 @@ def run() -> List[str]:
     rows.append(f"remote_tps_socket,{tps:.0f},txn/s clients={N_CLIENTS}")
     served.close()
 
-    # ---- 3. WAL group-commit curve (real fsyncs) ---- #
+    # ---- 3. pooled vs pipelined: concurrent small reads ---- #
+    inner = _mk_backend()
+    server = BackendServer(inner).start()
+    fids = _mk_files(inner, 1)
+    keys = [(fids[0], bi) for bi in range(FILE_BYTES // BLOCK)]
+    pooled = PooledRemoteBackend("127.0.0.1", server.port)
+    pooled_tps = read_throughput_pooled(pooled, keys)
+    pooled.close()
+    mux = RemoteBackend("127.0.0.1", server.port)
+    mux_tps = read_throughput_pipelined(mux, keys)
+    speedup = mux_tps / max(pooled_tps, 1e-9)
+    rows.append(
+        f"remote_reads_pooled,{pooled_tps:.0f},"
+        f"reads/s clients={READ_CLIENTS} (PR2 pool, 1 req/conn)"
+    )
+    rows.append(
+        f"remote_reads_pipelined,{mux_tps:.0f},"
+        f"reads/s clients={READ_CLIENTS} window={PIPELINE_WINDOW} 1 conn"
+    )
+    rows.append(f"remote_reads_pipeline_speedup,{speedup:.2f},x vs pool")
+
+    # ---- 4. batched block fetch: N blocks, one round trip ---- #
+    (big,) = _mk_files(
+        inner, 1, file_bytes=BATCH_FILE_BLOCKS * BLOCK, prefix="/bench/big"
+    )
+    bkeys = [(big, bi) for bi in range(BATCH_FILE_BLOCKS)]
+    t0 = time.perf_counter()
+    for k in bkeys:
+        mux.fetch_block(k)
+    scalar_us = (time.perf_counter() - t0) * 1e6
+    rpcs_before = mux.rpcs
+    t0 = time.perf_counter()
+    mux.fetch_blocks(bkeys)
+    batch_us = (time.perf_counter() - t0) * 1e6
+    batch_rpcs = mux.rpcs - rpcs_before
+    rows.append(
+        f"remote_fetch_scalar_{BATCH_FILE_BLOCKS}blk,{scalar_us:.0f},"
+        f"us ({BATCH_FILE_BLOCKS} round trips)"
+    )
+    rows.append(
+        f"remote_fetch_batched_{BATCH_FILE_BLOCKS}blk,{batch_us:.0f},"
+        f"us ({batch_rpcs} round trip)"
+    )
+    rows.append(f"remote_fetch_batch_rpcs,{batch_rpcs},must be 1")
+    mux.close()
+    server.shutdown()
+
+    # ---- 5. WAL group-commit curve (real fsyncs) ---- #
     with tempfile.TemporaryDirectory() as wd:
         for w_ms in GROUP_WINDOWS_MS:
             inner = BackendService(
@@ -174,6 +314,20 @@ def run() -> List[str]:
     return rows
 
 
-if __name__ == "__main__":
+def main(argv) -> None:
+    if "--smoke" in argv:
+        _smoke()
+    t0 = time.perf_counter()
+    rows = []
     for r in run():
-        print(r)
+        rows.append(r)
+        print(r, flush=True)
+    # land the artifact exactly like benchmarks/run.py does, so a CI
+    # `bench_remote --smoke` still updates BENCH_remote.json
+    from benchmarks.run import _write_artifact
+
+    _write_artifact("remote", rows, time.perf_counter() - t0, None)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -16,9 +16,11 @@ def main() -> None:
     # ---- the backend service (paper: monolithic in-memory prototype) ----
     backend = BackendService(block_size=4096, policy=CachePolicy.EAGER)
 
-    # ---- each worker gets a LocalServer (cache survives invocations) ----
-    worker_a = LocalServer(backend)
-    worker_b = LocalServer(backend)
+    # ---- each worker gets a LocalServer (cache survives invocations);
+    # readahead_blocks turns a sequential read's cache misses into ONE
+    # batched fetch_blocks round trip that also warms the next blocks ----
+    worker_a = LocalServer(backend, readahead_blocks=8)
+    worker_b = LocalServer(backend, readahead_blocks=8)
 
     # ---- 1. a cloud function is an implicit transaction -----------------
     def write_config(fs: FaaSFS) -> None:
@@ -95,6 +97,54 @@ def main() -> None:
     assert np.array_equal(pinned, pinned_again)
     txn.commit()
     print("5. snapshot reader saw a consistent version despite concurrent commits")
+
+    # ---- 6. batch-first API: plural ops and futures ----------------------
+    # Every backend (in-process, sharded, networked) implements ONE batch
+    # surface; scalar calls are shims. A batch is one logical round trip.
+    txn = worker_a.begin(read_only=True)
+    fid = txn.lookup("/mnt/tsfs/app/config.json")
+    keys = [(fid, 0)]
+    versions_and_blocks = backend.fetch_blocks(keys)       # one round trip
+    futs = [backend.submit("fetch_block", k) for k in keys]  # pipelined form
+    assert [f.result() for f in futs] == versions_and_blocks
+    txn.abort()
+    print(f"6. fetched {len(keys)} block(s) in one batched call; "
+          "futures resolve out of band on networked transports")
+
+    # ---- 7. the real thing: a networked server, pipelined client, and a
+    # clean SIGTERM teardown (drains in-flight requests, flushes the WAL —
+    # no torn log tail for the next start to truncate) ---------------------
+    import os
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    from repro.core.remote import RemoteBackend
+
+    with tempfile.TemporaryDirectory() as td:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.server",
+             "--wal", os.path.join(td, "faasfs.wal")],
+            stdout=subprocess.PIPE, text=True, env=env,
+        )
+        port = int(proc.stdout.readline().split()[1])
+        rb = RemoteBackend("127.0.0.1", port)
+        remote_worker = LocalServer(rb, readahead_blocks=8)
+
+        def remote_write(fs: FaaSFS) -> None:
+            fd = fs.open("/mnt/tsfs/remote/hello", O_CREAT)
+            fs.write(fd, b"over the wire, durably")
+
+        run_function(remote_worker, remote_write)
+        rb.close()
+        proc.send_signal(signal.SIGTERM)
+        proc.wait(timeout=15)
+        tail = proc.stdout.read().strip()
+        print(f"7. remote commit fsync'd; server exited {proc.returncode} "
+              f"({tail})")
 
 
 if __name__ == "__main__":

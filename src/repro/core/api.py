@@ -3,37 +3,57 @@
 The paper's prototype wires the Local Server directly to one in-process
 monolithic backend. To grow past that (sharded backends, networked
 transports), every client-visible operation is pinned down here as an
-abstract ``BackendAPI``:
+abstract ``BackendAPI``.
 
-  begin / sync_file / fetch_block / fetch_meta / lookup / listdir /
-  commit / alloc_file_id
+**Batch-first.** The abstract surface is *plural*: backends implement
 
-plus a small *timestamp algebra* (``zero_ts`` / ``ts_geq`` /
-``snapshot_cache_ok``) so clients never interpret sync timestamps
-themselves: the monolithic backend uses scalar timestamps, the sharded
-backend a per-shard vector, and client code works unchanged over both.
+  begin / sync_files / fetch_blocks / fetch_metas / lookup_many /
+  listdir / commit / alloc_file_id
+
+and the scalar forms the original API shipped with (``fetch_block``,
+``fetch_meta``, ``lookup``, ``sync_file``) are concrete shims over the
+batch core defined once, here. A backend therefore implements ONE
+surface; clients may call either form, and a batch is one logical round
+trip on every transport (`LatencyInjector` charges it as one, the wire
+ships it as one frame, `ShardedBackend` fans it out and merges
+server-side exactly like ``begin``).
+
+**Futures.** ``submit(op, *args) -> BackendFuture`` is the pipelining
+hook: callers get a completion handle instead of blocking the thread.
+The default implementation runs the call inline (correct for every
+in-process backend); ``RemoteBackend`` overrides it to put many requests
+in flight on one multiplexed connection, matching request ids to
+out-of-order replies (see docs/api.md and docs/transport.md).
+
+A small *timestamp algebra* (``zero_ts`` / ``ts_geq`` /
+``snapshot_cache_ok``) rides along so clients never interpret sync
+timestamps themselves: the monolithic backend uses scalar timestamps,
+the sharded backend a per-shard vector, and client code works unchanged
+over both.
 
 Transport concerns live in wrappers, not in the backend:
 ``LatencyInjector`` charges one simulated network round trip per
-client-visible call (replacing the old ad-hoc ``rpc_latency_s`` sleeps
-inside ``BackendService``). The real networked transport is
-``repro.core.remote.RemoteBackend`` — the same calls serialized over a
-socket to ``repro.core.server.BackendServer`` (wire format in
-``repro.core.wire``, durable commit log in ``repro.core.wal``; see
-docs/transport.md). ``bench_remote`` calibrates the injector's simulated
-RTT against the real thing.
+client-visible call — batch or scalar — replacing the old ad-hoc
+``rpc_latency_s`` sleeps inside ``BackendService``. The real networked
+transport is ``repro.core.remote.RemoteBackend`` — the same calls
+serialized over a socket to ``repro.core.server.BackendServer`` (wire
+format in ``repro.core.wire``, durable commit log in ``repro.core.wal``;
+see docs/transport.md). ``bench_remote`` calibrates the injector's
+simulated RTT against the real thing.
 """
 from __future__ import annotations
 
+import threading
 import time
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Dict, List, Optional, Set, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.types import (
     BlockKey,
     CachePolicy,
     FileId,
+    NotFound,
     SyncTimestamp,
     Timestamp,
 )
@@ -61,6 +81,74 @@ class CommitReply:
 
     ts: SyncTimestamp
     block_versions: Dict[BlockKey, Timestamp] = field(default_factory=dict)
+
+
+class BackendFuture:
+    """Completion handle for a pipelined backend call.
+
+    A minimal future: ``result()`` blocks until the value (or error)
+    arrives, ``done()`` polls. Produced completed by the default inline
+    ``BackendAPI.submit`` and resolved asynchronously by transports that
+    really pipeline (``RemoteBackend``'s reader thread).
+
+    ``_flush`` is the transport's lazy-send hook: a pipelining client may
+    buffer the request frame instead of paying a syscall (and a GIL
+    hand-off) per submit; the first consumer about to wait triggers one
+    coalesced flush of everything buffered behind it."""
+
+    __slots__ = ("_event", "_value", "_error", "_flush")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+        self._flush: Optional[Any] = None
+
+    def _ensure_sent(self) -> None:
+        flush, self._flush = self._flush, None
+        if flush is not None and not self._event.is_set():
+            flush()
+
+    # -- producer side ------------------------------------------------- #
+    def set_result(self, value: Any) -> None:
+        self._value = value
+        self._event.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._error = exc
+        self._event.set()
+
+    @classmethod
+    def completed(cls, value: Any) -> "BackendFuture":
+        f = cls()
+        f.set_result(value)
+        return f
+
+    @classmethod
+    def failed(cls, exc: BaseException) -> "BackendFuture":
+        f = cls()
+        f.set_exception(exc)
+        return f
+
+    # -- consumer side ------------------------------------------------- #
+    def done(self) -> bool:
+        if not self._event.is_set():
+            self._ensure_sent()
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        self._ensure_sent()
+        if not self._event.wait(timeout):
+            raise TimeoutError("backend call still in flight")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        self._ensure_sent()
+        if not self._event.wait(timeout):
+            raise TimeoutError("backend call still in flight")
+        return self._error
 
 
 class BackendAPI(ABC):
@@ -92,7 +180,7 @@ class BackendAPI(ABC):
         i.e. the cache has been synced past the snapshot point."""
         return version <= at_ts and last_sync_ts >= at_ts  # type: ignore
 
-    # ----------------------------- RPCs ------------------------------- #
+    # ----------------------- RPCs: batch core ------------------------- #
     @abstractmethod
     def begin(
         self,
@@ -102,23 +190,34 @@ class BackendAPI(ABC):
     ) -> "BeginReply": ...
 
     @abstractmethod
-    def sync_file(
-        self, fid: FileId, known_versions: Dict[BlockKey, Timestamp]
-    ) -> Dict[BlockKey, Tuple[Timestamp, bytes]]: ...
+    def fetch_blocks(
+        self, keys: List[BlockKey], at_ts: Optional[SyncTimestamp] = None
+    ) -> List[Tuple[Timestamp, bytes]]:
+        """Current (or snapshot) contents of ``keys``, one entry per key,
+        in input order. One logical round trip regardless of len(keys)."""
 
     @abstractmethod
-    def fetch_block(
-        self, key: BlockKey, at_ts: Optional[SyncTimestamp] = None
-    ) -> Tuple[Timestamp, bytes]: ...
+    def fetch_metas(
+        self, fids: List[FileId], at_ts: Optional[SyncTimestamp] = None
+    ) -> List[Optional[Tuple[Timestamp, Any]]]:
+        """Per-fid ``(version, FileMeta)`` in input order; ``None`` for a
+        file the backend has never seen (the scalar shim raises
+        ``NotFound`` for those)."""
 
     @abstractmethod
-    def fetch_meta(self, fid: FileId, at_ts: Optional[SyncTimestamp] = None): ...
+    def lookup_many(
+        self, paths: List[str], at_ts: Optional[SyncTimestamp] = None
+    ) -> List[Tuple[Timestamp, Optional[FileId]]]:
+        """(observed name version, bound file id or None) per path,
+        atomically per entry, in input order."""
 
     @abstractmethod
-    def lookup(
-        self, path: str, at_ts: Optional[SyncTimestamp] = None
-    ) -> Tuple[Timestamp, Optional[FileId]]:
-        """(observed name version, bound file id or None), atomically."""
+    def sync_files(
+        self, reqs: Dict[FileId, Dict[BlockKey, Timestamp]]
+    ) -> Dict[FileId, Dict[BlockKey, Tuple[Timestamp, bytes]]]:
+        """Bring several files' cached blocks current in one round trip:
+        ``{fid: {key: known_version}} -> {fid: {key: (version, data)}}``
+        (only entries newer than the known version are returned)."""
 
     @abstractmethod
     def listdir(
@@ -135,10 +234,54 @@ class BackendAPI(ABC):
     @abstractmethod
     def alloc_file_id(self) -> FileId: ...
 
+    # ------------------- scalar shims over the batch core ------------- #
+    def fetch_block(
+        self, key: BlockKey, at_ts: Optional[SyncTimestamp] = None
+    ) -> Tuple[Timestamp, bytes]:
+        return self.fetch_blocks([key], at_ts)[0]
+
+    def fetch_meta(self, fid: FileId, at_ts: Optional[SyncTimestamp] = None):
+        out = self.fetch_metas([fid], at_ts)[0]
+        if out is None:
+            raise NotFound(f"file {fid}")
+        return out
+
+    def lookup(
+        self, path: str, at_ts: Optional[SyncTimestamp] = None
+    ) -> Tuple[Timestamp, Optional[FileId]]:
+        return self.lookup_many([path], at_ts)[0]
+
+    def sync_file(
+        self, fid: FileId, known_versions: Dict[BlockKey, Timestamp]
+    ) -> Dict[BlockKey, Tuple[Timestamp, bytes]]:
+        return self.sync_files({fid: dict(known_versions)}).get(fid, {})
+
+    # --------------------------- pipelining --------------------------- #
+    def submit(self, op: str, *args, **kwargs) -> BackendFuture:
+        """Asynchronous form of any RPC: returns a ``BackendFuture``
+        instead of blocking. ``op`` names a method on this API
+        (``"fetch_blocks"``, ``"commit"``, ...). The default executes
+        inline — in-process backends have no round trip to hide;
+        ``RemoteBackend`` overrides this with true request-id pipelining."""
+        fut = BackendFuture()
+        try:
+            fut.set_result(getattr(self, op)(*args, **kwargs))
+        except Exception as e:
+            fut.set_exception(e)
+        return fut
+
 
 #: calls that cost one network round trip in the paper's EC2 deployment;
-#: lookup/fetch_meta/listdir piggyback on other messages there.
-DEFAULT_CHARGED_CALLS = ("begin", "sync_file", "fetch_block", "commit")
+#: lookup/fetch_meta/listdir piggyback on other messages there. A batch
+#: call is ONE round trip no matter how many items it carries.
+DEFAULT_CHARGED_CALLS = (
+    "begin",
+    "sync_file",
+    "sync_files",
+    "fetch_block",
+    "fetch_blocks",
+    "commit",
+)
 
 
 class LatencyInjector(BackendAPI):
@@ -148,6 +291,10 @@ class LatencyInjector(BackendAPI):
     deployment::
 
         be = LatencyInjector(BackendService(...), rpc_latency_s=100e-6)
+
+    Batch calls are charged as ONE round trip — the whole point of the
+    batch-first surface — so mono / sharded / remote backends stay
+    comparable under the simulation.
     """
 
     def __init__(
@@ -195,9 +342,21 @@ class LatencyInjector(BackendAPI):
         self._rpc("begin")
         return self.inner.begin(last_sync_ts, cached_keys, policy)
 
-    def sync_file(self, fid, known_versions):
-        self._rpc("sync_file")
-        return self.inner.sync_file(fid, known_versions)
+    def fetch_blocks(self, keys, at_ts=None):
+        self._rpc("fetch_blocks")
+        return self.inner.fetch_blocks(keys, at_ts)
+
+    def fetch_metas(self, fids, at_ts=None):
+        self._rpc("fetch_meta")
+        return self.inner.fetch_metas(fids, at_ts)
+
+    def lookup_many(self, paths, at_ts=None):
+        self._rpc("lookup")
+        return self.inner.lookup_many(paths, at_ts)
+
+    def sync_files(self, reqs):
+        self._rpc("sync_files")
+        return self.inner.sync_files(reqs)
 
     def fetch_block(self, key, at_ts=None):
         self._rpc("fetch_block")
@@ -210,6 +369,10 @@ class LatencyInjector(BackendAPI):
     def lookup(self, path, at_ts=None):
         self._rpc("lookup")
         return self.inner.lookup(path, at_ts)
+
+    def sync_file(self, fid, known_versions):
+        self._rpc("sync_file")
+        return self.inner.sync_file(fid, known_versions)
 
     def listdir(self, prefix, at_ts=None):
         self._rpc("listdir")

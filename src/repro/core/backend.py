@@ -55,6 +55,7 @@ from repro.core.types import (
     Conflict,
     FileId,
     LengthPredicate,
+    NotFound,
     ReadRecord,
     Timestamp,
     WriteRecord,
@@ -204,9 +205,16 @@ class _GroupCommitter:
                         p.error = e
                         p.done.set()  # aborts need no durability barrier
                 # ONE durable-log write (real WAL fsync or simulated cost)
-                # for the whole batch, then acknowledge every commit in it
+                # for the whole batch, then acknowledge every commit in it.
                 be._durable_barrier()
+                # Sync-vector registration (on_commit_applied) happens only
+                # AFTER the batch is durable: registering before the fsync
+                # would let a racing begin observe a commit a crash could
+                # still lose (the "group-commit visibility window" that
+                # docs/transport.md used to list as a known limitation).
                 for p in committed:
+                    if be.on_commit_applied is not None:
+                        be.on_commit_applied(p.reply.ts)
                     p.done.set()
         finally:
             for p in batch:  # a non-Conflict failure must not strand waiters
@@ -355,23 +363,39 @@ class BackendService(BackendAPI):
                 self.stats.bytes_pushed += len(data)
         return out
 
+    def sync_files(
+        self, reqs: Dict[FileId, Dict[BlockKey, Timestamp]]
+    ) -> Dict[FileId, Dict[BlockKey, Tuple[Timestamp, bytes]]]:
+        return {fid: self.sync_file(fid, known) for fid, known in reqs.items()}
+
     # ------------------------------------------------------------------ #
     # reads (cache miss path) — multiversion via the undo log
     # ------------------------------------------------------------------ #
-    def fetch_block(
-        self, key: BlockKey, at_ts: Optional[Timestamp] = None
-    ) -> Tuple[Timestamp, bytes]:
-        self.stats.block_fetches += 1
-        self._fetch_counts[key] += 1
-        return self.store.block(key, at_ts)
+    def fetch_blocks(
+        self, keys: List[BlockKey], at_ts: Optional[Timestamp] = None
+    ) -> List[Tuple[Timestamp, bytes]]:
+        out = []
+        for key in keys:
+            self.stats.block_fetches += 1
+            self._fetch_counts[key] += 1
+            out.append(self.store.block(key, at_ts))
+        return out
 
-    def fetch_meta(self, fid: FileId, at_ts: Optional[Timestamp] = None):
-        return self.store.meta(fid, at_ts)
+    def fetch_metas(
+        self, fids: List[FileId], at_ts: Optional[Timestamp] = None
+    ) -> List[Optional[Tuple[Timestamp, FileMeta]]]:
+        out: List[Optional[Tuple[Timestamp, FileMeta]]] = []
+        for fid in fids:
+            try:
+                out.append(self.store.meta(fid, at_ts))
+            except NotFound:
+                out.append(None)
+        return out
 
-    def lookup(
-        self, path: str, at_ts: Optional[Timestamp] = None
-    ) -> Tuple[Timestamp, Optional[FileId]]:
-        return self.store.lookup_versioned(path, at_ts)
+    def lookup_many(
+        self, paths: List[str], at_ts: Optional[Timestamp] = None
+    ) -> List[Tuple[Timestamp, Optional[FileId]]]:
+        return [self.store.lookup_versioned(p, at_ts) for p in paths]
 
     def listdir(
         self, prefix: str, at_ts: Optional[Timestamp] = None
@@ -407,7 +431,10 @@ class BackendService(BackendAPI):
         if durable:
             self._durable_barrier(lsn)
         self.stats.commits += 1
-        if self.on_commit_applied is not None:
+        # Registration is visibility: it must not precede durability. The
+        # non-durable path (group committer / 2PC coordinator) registers
+        # itself after ITS barrier, while still holding the commit lock.
+        if durable and self.on_commit_applied is not None:
             self.on_commit_applied(ts)
         return CommitReply(ts, {k: ts for k in touched[0]})
 

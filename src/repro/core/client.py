@@ -53,17 +53,27 @@ class LocalServer:
     """Per-worker block cache + backend connection (survives invocations).
 
     The cache is a true LRU: hits move entries to the MRU end, inserts
-    evict from the LRU end once ``max_blocks`` is reached."""
+    evict from the LRU end once ``max_blocks`` is reached.
+
+    ``readahead_blocks`` > 0 turns on contiguous-block read-ahead: a
+    multi-block read that misses extends its (single) batched
+    ``fetch_blocks`` round trip with up to that many following blocks of
+    the same file, warming the LRU for the sequential access patterns
+    checkpoint restore and model loading are made of. Speculative blocks
+    are never recorded as transactional reads and don't touch the
+    hit/miss counters until a transaction actually asks for them."""
 
     def __init__(
         self,
         backend: BackendAPI,
         policy: Optional[CachePolicy] = None,
         max_blocks: int = 65536,
+        readahead_blocks: int = 0,
     ):
         self.backend = backend
         self.policy = policy or backend.policy
         self.max_blocks = max_blocks
+        self.readahead_blocks = readahead_blocks
         self.cache: "OrderedDict[BlockKey, CacheEntry]" = OrderedDict()
         self.synced_files: Dict[FileId, SyncTimestamp] = {}
         self.last_sync_ts: SyncTimestamp = backend.zero_ts
@@ -71,6 +81,7 @@ class LocalServer:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.prefetched = 0
 
     # ------------------------------------------------------------------ #
     def begin(self, read_only: bool = False) -> "Transaction":
@@ -139,6 +150,54 @@ class LocalServer:
                 self._put(key, ver, data)
         return ver, data
 
+    def read_blocks(
+        self,
+        keys: List[BlockKey],
+        at_ts: Optional[SyncTimestamp] = None,
+        extra: Tuple[BlockKey, ...] = (),
+    ) -> Dict[BlockKey, Tuple[Timestamp, bytes]]:
+        """Read many blocks with ONE backend round trip for all misses.
+
+        ``keys`` are demanded (hit/miss accounted exactly like
+        ``cached_read``); ``extra`` are speculative read-ahead candidates
+        that ride along in the same ``fetch_blocks`` call, warm the LRU,
+        and are NOT returned or counted. Speculation is optimistic-path
+        only (``at_ts is None``) — snapshot reads never populate the
+        cache, so prefetching there would be a wasted fetch."""
+        out: Dict[BlockKey, Tuple[Timestamp, bytes]] = {}
+        to_fetch: List[BlockKey] = []
+        demanded = set(keys)
+        with self._lock:
+            for key in keys:
+                ent = self.cache.get(key)
+                ok = ent is not None and (
+                    at_ts is None
+                    or self.backend.snapshot_cache_ok(
+                        key, ent.version, at_ts, self.last_sync_ts
+                    )
+                )
+                if ok:
+                    self.hits += 1
+                    self.cache.move_to_end(key)
+                    out[key] = (ent.version, ent.data)
+                else:
+                    self.misses += 1
+                    to_fetch.append(key)
+            if at_ts is None:
+                for key in extra:
+                    if key not in self.cache and key not in demanded:
+                        to_fetch.append(key)
+                        self.prefetched += 1
+        if to_fetch:
+            results = self.backend.fetch_blocks(to_fetch, at_ts)
+            with self._lock:
+                for key, (ver, data) in zip(to_fetch, results):
+                    if at_ts is None:
+                        self._put(key, ver, data)
+                    if key in demanded:
+                        out[key] = (ver, data)
+        return out
+
     def lazy_sync_file(self, fid: FileId) -> None:
         if self.policy != CachePolicy.LAZY:
             return
@@ -148,14 +207,34 @@ class LocalServer:
                 synced, self.last_sync_ts
             ):
                 return
-            known = {
-                k: e.version for k, e in self.cache.items() if k[0] == fid
+            # Single batched warm-up fetch: every file this cache has
+            # synced before, whose sync point has fallen behind, and that
+            # still holds cached blocks rides along in the same
+            # sync_files round trip as ``fid`` — one RPC re-warms the
+            # whole cached working set instead of one per file on each
+            # subsequent open. (Files with nothing cached are left to
+            # their own next open: syncing them here would fetch whole
+            # cold files speculatively.)
+            reqs = {
+                fid: {
+                    k: e.version for k, e in self.cache.items() if k[0] == fid
+                }
             }
-        updates = self.backend.sync_file(fid, known)
+            for f, ts in self.synced_files.items():
+                if f == fid or self.backend.ts_geq(ts, self.last_sync_ts):
+                    continue
+                known_f = {
+                    k: e.version for k, e in self.cache.items() if k[0] == f
+                }
+                if known_f:
+                    reqs[f] = known_f
+        updates = self.backend.sync_files(reqs)
         with self._lock:
-            for key, (ver, data) in updates.items():
-                self._put(key, ver, data)
-            self.synced_files[fid] = self.last_sync_ts
+            for upd in updates.values():
+                for key, (ver, data) in upd.items():
+                    self._put(key, ver, data)
+            for f in reqs:
+                self.synced_files[f] = self.last_sync_ts
 
 
 @dataclass
@@ -311,6 +390,19 @@ class Transaction:
             data = w.apply_to(data, self.block_size)
         return data
 
+    def _readahead_keys(
+        self, tf: _TxnFile, b1: int
+    ) -> Tuple[BlockKey, ...]:
+        """Contiguous blocks after ``b1`` (within the file) to speculate
+        on in the same batched fetch."""
+        ra = self.local.readahead_blocks
+        if self.read_only or ra <= 0 or tf.length == 0:
+            return ()
+        last_blk = (tf.length - 1) // self.block_size
+        return tuple(
+            (tf.fid, bj) for bj in range(b1 + 1, min(b1 + ra, last_blk) + 1)
+        )
+
     def read(self, fid: FileId, offset: int, size: int) -> bytes:
         self._check_open()
         tf = self._file(fid)
@@ -337,8 +429,18 @@ class Transaction:
                 )
         out = bytearray()
         b0, b1 = offset // self.block_size, (end - 1) // self.block_size
+        # the whole span (misses AND read-ahead) is ONE fetch_blocks
+        # round trip; cache hits are served locally as before
+        at = self.read_ts if self.read_only else None
+        keys = [(fid, bi) for bi in range(b0, b1 + 1)]
+        blocks = self.local.read_blocks(keys, at, self._readahead_keys(tf, b1))
         for bi in range(b0, b1 + 1):
-            data = self._read_block((fid, bi))
+            ver, data = blocks[(fid, bi)]
+            if not self.read_only:
+                self.reads.setdefault((fid, bi), ver)
+            w = self.writes.get((fid, bi))
+            if w is not None:
+                data = w.apply_to(data, self.block_size)
             lo = offset - bi * self.block_size if bi == b0 else 0
             hi = end - bi * self.block_size if bi == b1 else self.block_size
             out += data[lo:hi]

@@ -1,18 +1,31 @@
 """``RemoteBackend`` — the networked transport as just another
 ``BackendAPI``.
 
-The client side of `repro.core.server`: every abstract RPC becomes one
-frame exchange on a pooled TCP connection, so ``LocalServer`` / the
-POSIX facade / the OCC and snapshot test suites run unchanged over a
-real socket. What the paper's prototype simulated with
-``LatencyInjector`` sleeps, this pays for real.
+The client side of `repro.core.server`: every RPC becomes one frame
+exchange, so ``LocalServer`` / the POSIX facade / the OCC and snapshot
+test suites run unchanged over a real socket.
 
 Design points:
 
-  * **Connection pool.** Connections are synchronous (one outstanding
-    request); concurrency comes from checking out separate connections.
-    The pool grows on demand and a connection that errors is discarded,
-    never reused.
+  * **One multiplexed connection** (wire v2). Every request frame
+    carries a request id; a dedicated reader thread routes each reply to
+    the ``BackendFuture`` registered under that id, so MANY requests are
+    in flight on one socket and replies may arrive out of order as
+    server handlers finish. ``submit(op, *args)`` exposes the pipeline
+    to callers; the blocking methods are just ``submit(...).result()``.
+    This replaces PR 2's pool-per-in-flight-request model
+    (``PooledRemoteBackend`` below survives only so ``bench_remote`` can
+    keep measuring the old design against the new one).
+  * **Batch ops are one frame.** ``fetch_blocks`` / ``fetch_metas`` /
+    ``lookup_many`` / ``sync_files`` ship the whole batch in a single
+    request; against a sharded server the fan-out and merge run
+    server-side, exactly like ``begin``.
+  * **Connection death fans out.** If the socket dies — peer closed,
+    frame corruption, or a local ``close()`` — every pending future
+    fails with a typed ``ConnectionClosed`` instead of hanging; the next
+    call transparently re-dials (picking up epoch bumps from the new
+    hello). Stray replies (unknown or already-answered request ids) are
+    counted and dropped, never mis-delivered.
   * **Hello handshake.** The server's first frame pins the wire version
     and carries ``block_size`` / ``policy`` / ``n_shards`` / ``epoch``,
     so one client class speaks to monolithic (scalar timestamps) and
@@ -32,30 +45,32 @@ from __future__ import annotations
 import socket
 import threading
 from contextlib import contextmanager
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core import wire
-from repro.core.api import BackendAPI, CommitReply
+from repro.core.api import BackendAPI, BackendFuture, CommitReply
 from repro.core.blockstore import FileMeta
 from repro.core.types import BlockKey, CachePolicy, FileId, Timestamp
 
 DEFAULT_LEASE = 64
 
+#: ops submit() can put on the wire without blocking; everything else
+#: (alloc_file_id with its lease state, stats, ...) falls back to inline
+_Decoder = Optional[Callable[[Any], Any]]
 
-class RemoteBackend(BackendAPI):
-    def __init__(
-        self,
-        host: str,
-        port: int,
-        lease_size: int = DEFAULT_LEASE,
-        connect_timeout_s: float = 10.0,
-    ):
+
+class _RemoteCore(BackendAPI):
+    """Handshake, timestamp algebra, lease-based id allocation, and the
+    RPC encode/decode surface — shared by the multiplexed client and the
+    legacy pooled client. Subclasses provide ``_call`` (one blocking
+    frame exchange)."""
+
+    def __init__(self, host: str, port: int, lease_size: int = DEFAULT_LEASE,
+                 connect_timeout_s: float = 10.0):
         self.host = host
         self.port = port
         self.lease_size = lease_size
         self.connect_timeout_s = connect_timeout_s
-        self._pool: List[socket.socket] = []
-        self._pool_mu = threading.Lock()
         self._hello: Optional[Dict] = None
         self._alloc_mu = threading.Lock()
         self._lease_epoch = 0
@@ -64,81 +79,44 @@ class RemoteBackend(BackendAPI):
         self.rpcs = 0
         self.reconnects = 0
         self._closed = False
-        # eager dial: surfaces connection/handshake errors at construction
-        with self._pool_mu:
-            self._pool.append(self._dial())
 
-    # ------------------------------------------------------------------ #
-    # connection management
-    # ------------------------------------------------------------------ #
-    def _dial(self) -> socket.socket:
-        sock = socket.create_connection(
-            (self.host, self.port), timeout=self.connect_timeout_s
-        )
-        sock.settimeout(None)
-        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    # -- transport hook ------------------------------------------------ #
+    def _call(self, msg_type: int, obj: Any, decode: _Decoder = None) -> Any:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    def _handshake(self, sock: socket.socket) -> None:
         try:
-            msg_type, hello = wire.recv_frame(sock)
+            msg_type, _, hello = wire.recv_frame(sock)
         except BaseException:
             sock.close()
             raise
         if msg_type != wire.T_HELLO:
             sock.close()
             raise wire.WireError(f"expected hello, got 0x{msg_type:02x}")
-        if self._hello is None:
-            self._hello = hello
-        elif hello["n_shards"] != self._hello["n_shards"]:
+        if self._hello is not None and hello["n_shards"] != self._hello["n_shards"]:
             sock.close()
             raise wire.WireError(
                 "server changed shard count mid-session "
                 f"({self._hello['n_shards']} -> {hello['n_shards']})"
             )
-        else:
-            self._hello = hello  # pick up epoch bumps on reconnect
+        self._hello = hello  # pick up epoch bumps on reconnect
         self.reconnects += 1
+
+    def _dial(self) -> socket.socket:
+        sock = socket.create_connection(
+            (self.host, self.port), timeout=self.connect_timeout_s
+        )
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # the connect timeout stays armed through the hello: a server
+        # that accepts but never greets must not wedge the dialer (the
+        # mux client dials under its state lock — an unbounded hello
+        # read would block every other caller, close() included)
+        self._handshake(sock)
+        sock.settimeout(None)
         return sock
-
-    @contextmanager
-    def _conn(self):
-        with self._pool_mu:
-            sock = self._pool.pop() if self._pool else None
-        if sock is None:
-            sock = self._dial()
-        try:
-            yield sock
-        except BaseException:
-            try:
-                sock.close()
-            except OSError:
-                pass
-            raise
-        else:
-            with self._pool_mu:
-                if self._closed:
-                    sock.close()
-                else:
-                    self._pool.append(sock)
-
-    def _call(self, msg_type: int, obj):
-        self.rpcs += 1
-        with self._conn() as sock:
-            wire.send_frame(sock, msg_type, obj)
-            reply_type, reply = wire.recv_frame(sock)
-        if reply_type == wire.T_OK:
-            return reply
-        if reply_type == wire.T_ERR:
-            raise wire.exception_from_obj(reply)
-        raise wire.WireError(f"unexpected reply type 0x{reply_type:02x}")
-
-    def close(self) -> None:
-        with self._pool_mu:
-            self._closed = True
-            conns, self._pool = self._pool, []
-        for sock in conns:
-            try:
-                sock.close()
-            except OSError:
-                pass
 
     # ------------------------------------------------------------------ #
     # handshake-derived properties
@@ -180,53 +158,122 @@ class RemoteBackend(BackendAPI):
         return version <= at_ts[s] and last_sync_ts[s] >= at_ts[s]
 
     # ------------------------------------------------------------------ #
-    # RPCs
+    # RPC encoders/decoders (shared by blocking calls and submit())
     # ------------------------------------------------------------------ #
-    def begin(
-        self,
-        last_sync_ts,
-        cached_keys: Optional[Set[BlockKey]] = None,
-        policy: Optional[CachePolicy] = None,
-    ):
-        # ONE frame regardless of shard count: the per-shard fan-out and
-        # reply merge run server-side behind ShardedBackend.begin
-        reply = self._call(
+    def _frame_for(self, op: str, *args, **kwargs):
+        """(msg_type, body, decode) for a pipelinable op, or None when the
+        op needs local state (alloc_file_id) / has no frame mapping."""
+        enc = getattr(self, f"_enc_{op}", None)
+        if enc is None:
+            return None
+        return enc(*args, **kwargs)
+
+    def _enc_begin(self, last_sync_ts, cached_keys=None, policy=None):
+        return (
             wire.T_BEGIN,
             {
                 "t": last_sync_ts,
                 "k": None if cached_keys is None else sorted(cached_keys),
                 "p": None if policy is None else policy.value,
             },
+            wire.begin_reply_from_obj,
         )
-        return wire.begin_reply_from_obj(reply)
 
-    def sync_file(
-        self, fid: FileId, known_versions: Dict[BlockKey, Timestamp]
-    ) -> Dict[BlockKey, Tuple[Timestamp, bytes]]:
-        out = self._call(wire.T_SYNC_FILE, (fid, dict(known_versions)))
-        return {tuple(k): (ts, data) for k, (ts, data) in out.items()}
+    def _enc_commit(self, payload):
+        return wire.T_COMMIT, wire.payload_to_obj(payload), wire.commit_reply_from_obj
 
-    def fetch_block(self, key: BlockKey, at_ts=None):
-        ver, data = self._call(wire.T_FETCH_BLOCK, (tuple(key), at_ts))
-        return ver, data
+    def _enc_fetch_block(self, key, at_ts=None):
+        return wire.T_FETCH_BLOCK, (tuple(key), at_ts), lambda r: (r[0], r[1])
 
-    def fetch_meta(self, fid: FileId, at_ts=None):
-        ver, length, exists = self._call(wire.T_FETCH_META, (fid, at_ts))
-        return ver, FileMeta(length, exists)
+    def _enc_fetch_blocks(self, keys, at_ts=None):
+        return (
+            wire.T_FETCH_BLOCKS,
+            ([tuple(k) for k in keys], at_ts),
+            lambda r: [(ver, data) for ver, data in r],
+        )
 
-    def lookup(self, path: str, at_ts=None):
-        ver, fid = self._call(wire.T_LOOKUP, (path, at_ts))
-        return ver, fid
+    def _enc_fetch_meta(self, fid, at_ts=None):
+        return (
+            wire.T_FETCH_META,
+            (fid, at_ts),
+            lambda r: (r[0], FileMeta(r[1], r[2])),
+        )
 
-    def listdir(self, prefix: str, at_ts=None):
-        return [
-            (path, ver, fid)
-            for path, ver, fid in self._call(wire.T_LISTDIR, (prefix, at_ts))
-        ]
+    def _enc_fetch_metas(self, fids, at_ts=None):
+        return wire.T_FETCH_METAS, (list(fids), at_ts), wire.metas_from_obj
+
+    def _enc_lookup(self, path, at_ts=None):
+        return wire.T_LOOKUP, (path, at_ts), lambda r: (r[0], r[1])
+
+    def _enc_lookup_many(self, paths, at_ts=None):
+        return (
+            wire.T_LOOKUP_MANY,
+            (list(paths), at_ts),
+            lambda r: [(ver, fid) for ver, fid in r],
+        )
+
+    def _enc_listdir(self, prefix, at_ts=None):
+        return (
+            wire.T_LISTDIR,
+            (prefix, at_ts),
+            lambda r: [(path, ver, fid) for path, ver, fid in r],
+        )
+
+    def _enc_sync_file(self, fid, known_versions):
+        return (
+            wire.T_SYNC_FILE,
+            (fid, dict(known_versions)),
+            lambda r: {tuple(k): (ts, data) for k, (ts, data) in r.items()},
+        )
+
+    def _enc_sync_files(self, reqs):
+        return (
+            wire.T_SYNC_FILES,
+            {fid: dict(known) for fid, known in reqs.items()},
+            lambda r: {
+                fid: {tuple(k): (ts, data) for k, (ts, data) in upd.items()}
+                for fid, upd in r.items()
+            },
+        )
+
+    # ------------------------------------------------------------------ #
+    # BackendAPI surface: every RPC is one (pipelinable) frame exchange
+    # ------------------------------------------------------------------ #
+    def begin(self, last_sync_ts, cached_keys: Optional[Set[BlockKey]] = None,
+              policy: Optional[CachePolicy] = None):
+        # ONE frame regardless of shard count: the per-shard fan-out and
+        # reply merge run server-side behind ShardedBackend.begin
+        return self._call(*self._enc_begin(last_sync_ts, cached_keys, policy))
 
     def commit(self, payload) -> CommitReply:
-        reply = self._call(wire.T_COMMIT, wire.payload_to_obj(payload))
-        return wire.commit_reply_from_obj(reply)
+        return self._call(*self._enc_commit(payload))
+
+    def fetch_block(self, key: BlockKey, at_ts=None):
+        return self._call(*self._enc_fetch_block(key, at_ts))
+
+    def fetch_blocks(self, keys: List[BlockKey], at_ts=None):
+        return self._call(*self._enc_fetch_blocks(keys, at_ts))
+
+    def fetch_meta(self, fid: FileId, at_ts=None):
+        return self._call(*self._enc_fetch_meta(fid, at_ts))
+
+    def fetch_metas(self, fids: List[FileId], at_ts=None):
+        return self._call(*self._enc_fetch_metas(fids, at_ts))
+
+    def lookup(self, path: str, at_ts=None):
+        return self._call(*self._enc_lookup(path, at_ts))
+
+    def lookup_many(self, paths: List[str], at_ts=None):
+        return self._call(*self._enc_lookup_many(paths, at_ts))
+
+    def listdir(self, prefix: str, at_ts=None):
+        return self._call(*self._enc_listdir(prefix, at_ts))
+
+    def sync_file(self, fid: FileId, known_versions: Dict[BlockKey, Timestamp]):
+        return self._call(*self._enc_sync_file(fid, known_versions))
+
+    def sync_files(self, reqs):
+        return self._call(*self._enc_sync_files(reqs))
 
     def alloc_file_id(self) -> FileId:
         with self._alloc_mu:
@@ -256,7 +303,7 @@ class RemoteBackend(BackendAPI):
     # ------------------------------------------------------------------ #
     @property
     def stats(self):
-        return wire.stats_from_obj(self._call(wire.T_STATS, None))
+        return self._call(wire.T_STATS, None, wire.stats_from_obj)
 
     @property
     def latest_ts(self):
@@ -264,3 +311,265 @@ class RemoteBackend(BackendAPI):
 
     def ping(self) -> None:
         self._call(wire.T_PING, None)
+
+
+class RemoteBackend(_RemoteCore):
+    """Multiplexed, pipelined transport (the default).
+
+    ``submit(op, *args)`` puts the request on the wire and returns a
+    ``BackendFuture`` immediately; the reader thread resolves it when the
+    (possibly out-of-order) reply lands. Blocking calls are futures the
+    caller waits on — one code path either way.
+    """
+
+    def __init__(self, host: str, port: int, lease_size: int = DEFAULT_LEASE,
+                 connect_timeout_s: float = 10.0):
+        super().__init__(host, port, lease_size, connect_timeout_s)
+        self._mu = threading.Lock()          # conn state + pending table
+        self._send_mu = threading.Lock()     # guards the send buffer
+        self._write_mu = threading.Lock()    # serializes socket writes
+        self._send_buf = bytearray()         # frames awaiting a flush
+        self._send_sock: Optional[socket.socket] = None
+        self._sock: Optional[socket.socket] = None
+        self._reader: Optional[threading.Thread] = None
+        self._next_id = 1
+        self._pending: Dict[int, Tuple[BackendFuture, _Decoder]] = {}
+        self.stray_replies = 0   # unknown/duplicate request ids observed
+        self.flushes = 0         # coalesced sends actually performed
+        # eager dial: surfaces connection/handshake errors at construction
+        with self._mu:
+            self._connect_locked()
+
+    # ------------------------------------------------------------------ #
+    # connection lifecycle
+    # ------------------------------------------------------------------ #
+    def _connect_locked(self) -> socket.socket:
+        sock = self._dial()
+        self._sock = sock
+        t = threading.Thread(
+            target=self._reader_loop, args=(sock,),
+            name="faasfs-mux-reader", daemon=True,
+        )
+        t.start()
+        self._reader = t
+        return sock
+
+    def _reader_loop(self, sock: socket.socket) -> None:
+        reader = wire.FrameReader(sock)  # one recv drains a reply burst
+        try:
+            while True:
+                msg_type, req_id, obj = reader.recv_frame()
+                with self._mu:
+                    entry = self._pending.pop(req_id, None)
+                if entry is None:
+                    # unknown or already-answered id: never mis-deliver —
+                    # count it and keep the stream (framing is intact)
+                    self.stray_replies += 1
+                    continue
+                fut, decode = entry
+                if msg_type == wire.T_ERR:
+                    fut.set_exception(wire.exception_from_obj(obj))
+                elif msg_type == wire.T_OK:
+                    try:
+                        fut.set_result(obj if decode is None else decode(obj))
+                    except Exception as e:  # decoder bug ≠ wedged caller
+                        fut.set_exception(e)
+                else:
+                    fut.set_exception(
+                        wire.WireError(f"unexpected reply type 0x{msg_type:02x}")
+                    )
+        except (wire.WireError, OSError) as e:
+            self._fail_conn(sock, e)
+
+    def _fail_conn(self, sock: socket.socket, cause: BaseException) -> None:
+        """Tear down ``sock`` and fail every future still waiting on it.
+        A stale socket (already replaced by a reconnect) only gets closed
+        — the pending table belongs to the current connection.
+
+        Ordering matters: futures are failed BEFORE the send buffer is
+        cleared. ``submit_frame`` buffers only while its future is still
+        unresolved (checked under ``_send_mu``), so a request racing this
+        teardown either sees its future already failed and never buffers,
+        or buffers first and has its bytes swept here — a frame whose
+        caller was told ConnectionClosed can never be flushed onto a
+        replacement connection later."""
+        with self._mu:
+            current = self._sock is sock
+            if current:
+                self._sock = None
+                pending, self._pending = self._pending, {}
+            else:
+                pending = {}
+        if pending:
+            exc = (
+                cause
+                if isinstance(cause, wire.ConnectionClosed)
+                else wire.ConnectionClosed(f"connection lost: {cause}")
+            )
+            for fut, _ in pending.values():
+                fut.set_exception(exc)
+        with self._send_mu:
+            if self._send_sock is sock:
+                self._send_buf = bytearray()
+                self._send_sock = None
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        with self._mu:
+            self._closed = True
+            sock, self._sock = self._sock, None
+            pending, self._pending = self._pending, {}
+        # in-flight requests fail typed instead of hanging or leaking;
+        # fail-then-sweep ordering as in _fail_conn
+        for fut, _ in pending.values():
+            fut.set_exception(wire.ConnectionClosed("client closed"))
+        with self._send_mu:
+            self._send_buf = bytearray()
+            self._send_sock = None
+        if sock is not None:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        reader = self._reader
+        if reader is not None and reader is not threading.current_thread():
+            reader.join(timeout=1.0)
+
+    # ------------------------------------------------------------------ #
+    # the pipeline
+    # ------------------------------------------------------------------ #
+    #: a submit burst larger than this flushes eagerly instead of waiting
+    #: for a consumer to block on one of its futures
+    MAX_SEND_BUF = 256 * 1024
+
+    def submit_frame(
+        self, msg_type: int, obj: Any, decode: _Decoder = None
+    ) -> BackendFuture:
+        """Register a future under a fresh request id and buffer the frame
+        for the wire; the reader thread resolves it. The frame goes out on
+        the first of: a consumer blocking on any future of this client
+        (flush-on-wait), the buffer exceeding ``MAX_SEND_BUF``, or the
+        next blocking call — so a burst of submits costs ONE coalesced
+        send instead of a syscall + GIL hand-off each."""
+        fut = BackendFuture()
+        with self._mu:
+            if self._closed:
+                fut.set_exception(wire.ConnectionClosed("client closed"))
+                return fut
+            sock = self._sock
+            if sock is None:
+                try:
+                    sock = self._connect_locked()
+                except OSError as e:
+                    fut.set_exception(
+                        wire.ConnectionClosed(f"reconnect failed: {e}")
+                    )
+                    return fut
+            rid = self._next_id
+            self._next_id += 1
+            self._pending[rid] = (fut, decode)
+        self.rpcs += 1
+        with self._send_mu:
+            if fut.done():
+                # the connection died between registration and here and
+                # _fail_conn already failed this future (and will sweep /
+                # has swept the buffer): never buffer a frame whose
+                # caller has been told ConnectionClosed — it must not be
+                # flushed onto a replacement connection later
+                return fut
+            self._send_buf += wire.encode_frame(msg_type, obj, rid)
+            self._send_sock = sock
+            big = len(self._send_buf) >= self.MAX_SEND_BUF
+        fut._flush = self._flush_sends
+        if big:
+            self._flush_sends()
+        return fut
+
+    def _flush_sends(self) -> None:
+        """Push every buffered request frame onto the socket in one send."""
+        with self._send_mu:
+            if not self._send_buf:
+                return
+            buf, self._send_buf = self._send_buf, bytearray()
+            sock, self._send_sock = self._send_sock, None
+        if sock is None:
+            return
+        try:
+            with self._write_mu:
+                sock.sendall(buf)
+            self.flushes += 1
+        except OSError as e:
+            self._fail_conn(sock, e)  # fails the buffered futures too
+
+    def submit(self, op: str, *args, **kwargs) -> BackendFuture:
+        frame = self._frame_for(op, *args, **kwargs)
+        if frame is None:  # lease-stateful / local ops run inline
+            return super().submit(op, *args, **kwargs)
+        return self.submit_frame(*frame)
+
+    def _call(self, msg_type: int, obj: Any, decode: _Decoder = None) -> Any:
+        return self.submit_frame(msg_type, obj, decode).result()
+
+
+class PooledRemoteBackend(_RemoteCore):
+    """PR 2's pool-per-in-flight-request transport, kept ONLY as the
+    benchmark baseline (``bench_remote`` pooled-vs-pipelined rows) — one
+    synchronous request per checked-out connection, concurrency by
+    growing the pool."""
+
+    def __init__(self, host: str, port: int, lease_size: int = DEFAULT_LEASE,
+                 connect_timeout_s: float = 10.0):
+        super().__init__(host, port, lease_size, connect_timeout_s)
+        self._pool: List[socket.socket] = []
+        self._pool_mu = threading.Lock()
+        with self._pool_mu:
+            self._pool.append(self._dial())
+
+    @contextmanager
+    def _conn(self):
+        with self._pool_mu:
+            sock = self._pool.pop() if self._pool else None
+        if sock is None:
+            sock = self._dial()
+        try:
+            yield sock
+        except BaseException:
+            try:
+                sock.close()
+            except OSError:
+                pass
+            raise
+        else:
+            with self._pool_mu:
+                if self._closed:
+                    sock.close()
+                else:
+                    self._pool.append(sock)
+
+    def _call(self, msg_type: int, obj: Any, decode: _Decoder = None) -> Any:
+        self.rpcs += 1
+        with self._conn() as sock:
+            wire.send_frame(sock, msg_type, obj, 1)
+            reply_type, _, reply = wire.recv_frame(sock)
+        if reply_type == wire.T_OK:
+            return reply if decode is None else decode(reply)
+        if reply_type == wire.T_ERR:
+            raise wire.exception_from_obj(reply)
+        raise wire.WireError(f"unexpected reply type 0x{reply_type:02x}")
+
+    def close(self) -> None:
+        with self._pool_mu:
+            self._closed = True
+            conns, self._pool = self._pool, []
+        for sock in conns:
+            try:
+                sock.close()
+            except OSError:
+                pass

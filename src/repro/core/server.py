@@ -5,14 +5,17 @@ Backend Service, finally behind a real socket).
 monolithic ``BackendService`` or ``ShardedBackend`` — and serves it to
 concurrent ``RemoteBackend`` clients over TCP:
 
-  * **thread per connection**, synchronous frames (`repro.core.wire`);
-    the client multiplexes with a connection pool, so server-side
-    concurrency (group commit batching across connections, parallel 2PC
-    apply) is fully exercised.
-  * **one client RPC per logical operation**: ``begin`` against a
-    ``ShardedBackend`` is a single frame — the per-shard fan-out and the
-    reply merge happen server-side behind ``ShardedBackend.begin``, so
-    the client pays one round trip, not one per shard.
+  * **pipelined connections** (wire v2): every request frame carries a
+    request id; a per-connection reader hands each request to a worker
+    pool and replies are sent *as handlers finish*, out of order if a
+    later request completes first. One connection therefore carries many
+    in-flight requests — the client multiplexes futures by id instead of
+    holding one pooled connection per outstanding call.
+  * **one client RPC per logical operation**: ``begin`` and the batch
+    ops (``fetch_blocks`` / ``fetch_metas`` / ``lookup_many`` /
+    ``sync_files``) against a ``ShardedBackend`` are a single frame —
+    the per-shard fan-out and the reply merge happen server-side, so the
+    client pays one round trip, not one per shard or per item.
   * **durability**: pass ``wal_path`` and the server attaches a
     ``WriteAheadLog`` to the backend — commit acks then imply fsync'd
     log records. On start, an existing log is crash-recovered first:
@@ -24,8 +27,14 @@ concurrent ``RemoteBackend`` clients over TCP:
     it is sent, so a restarted server never re-grants overlapping ids;
     the epoch (bumped on every restart) fences stale clients — a lease
     refresh carrying an old epoch gets ``StaleEpoch`` and must re-lease.
+  * **clean shutdown**: ``shutdown(drain=True)`` (what the standalone
+    entry point does on SIGTERM/SIGINT) stops accepting, waits for
+    in-flight requests to finish and their replies to flush, fsyncs the
+    WAL, and only then tears the sockets down — no torn-tail noise for
+    examples or orchestrators that stop the process politely.
 
-Run standalone (the crash-recovery tests SIGKILL this process)::
+Run standalone (the crash-recovery tests SIGKILL this process; SIGTERM
+exits cleanly)::
 
     python -m repro.core.server --wal /tmp/faasfs.wal --shards 2
 """
@@ -33,9 +42,11 @@ from __future__ import annotations
 
 import argparse
 import os
+import signal
 import socket
 import sys
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Optional, Set, Tuple
 
 from repro.core import wal as walmod
@@ -89,6 +100,7 @@ class BackendServer:
         port: int = 0,
         wal_path: Optional[str] = None,
         sync_mode: str = "fsync",
+        max_workers: int = 16,
     ):
         self.backend = backend
         self.wal: Optional[walmod.WriteAheadLog] = None
@@ -115,6 +127,14 @@ class BackendServer:
         self._conns: Set[socket.socket] = set()
         self._conns_mu = threading.Lock()
         self._accept_thread: Optional[threading.Thread] = None
+        # request handlers run here so one connection can have many
+        # requests in flight; replies go out as handlers finish
+        self._workers = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="faasfs-rpc"
+        )
+        self._inflight = 0
+        self._inflight_mu = threading.Lock()
+        self._drained = threading.Condition(self._inflight_mu)
 
     # ------------------------------------------------------------------ #
     def start(self) -> "BackendServer":
@@ -129,12 +149,26 @@ class BackendServer:
         self.start()
         self._stop.wait()
 
-    def shutdown(self) -> None:
+    def shutdown(self, drain: bool = False, drain_timeout_s: float = 10.0) -> None:
+        """Stop the server. With ``drain=True``, in-flight requests are
+        allowed to finish (and their replies to be sent) and the WAL is
+        fsync'd before any socket is torn down — the clean-SIGTERM path."""
         self._stop.set()
         try:
             self._lsock.close()
         except OSError:
             pass
+        if drain:
+            with self._drained:
+                self._drained.wait_for(
+                    lambda: self._inflight == 0, timeout=drain_timeout_s
+                )
+            if self.wal is not None:
+                try:
+                    self.wal.sync()
+                except Exception:
+                    pass
+        self._workers.shutdown(wait=drain)
         with self._conns_mu:
             conns = list(self._conns)
         for c in conns:
@@ -176,26 +210,91 @@ class BackendServer:
             "epoch": self.epoch,
         }
 
+    #: requests that may block (commit-lock waits, group-commit windows,
+    #: WAL fsyncs) run on the worker pool so they cannot head-of-line
+    #: block the fast reads pipelined behind them on the same connection;
+    #: everything else is pure in-memory work handled inline by the
+    #: connection reader — no scheduling hop, and replies to a burst of
+    #: buffered requests coalesce into one send
+    _SLOW_OPS = frozenset((wire.T_BEGIN, wire.T_COMMIT, wire.T_ALLOC_RANGE))
+
     def _serve_conn(self, sock: socket.socket) -> None:
+        send_mu = threading.Lock()
+        reader = wire.FrameReader(sock)
+        outbuf = bytearray()
         try:
             wire.send_frame(sock, wire.T_HELLO, self._hello())
             while not self._stop.is_set():
-                msg_type, obj = wire.recv_frame(sock)
-                try:
-                    reply = self._dispatch(msg_type, obj)
-                except Exception as e:  # backend errors travel as frames
-                    wire.send_frame(sock, wire.T_ERR, wire.exception_to_obj(e))
+                # flush coalesced replies before we could block (either in
+                # recv or behind a slow op's queue) or grow without bound
+                if outbuf and (
+                    not reader.pending() or len(outbuf) >= (1 << 20)
+                ):
+                    with send_mu:
+                        sock.sendall(outbuf)
+                    outbuf = bytearray()
+                msg_type, req_id, obj = reader.recv_frame()
+                if msg_type in self._SLOW_OPS:
+                    with self._inflight_mu:
+                        if self._stop.is_set():
+                            break
+                        self._inflight += 1
+                    try:
+                        self._workers.submit(
+                            self._handle_one, sock, send_mu,
+                            msg_type, req_id, obj,
+                        )
+                    except RuntimeError:  # pool shut down mid-race
+                        with self._drained:
+                            self._inflight -= 1
+                            self._drained.notify_all()
+                        break
                     continue
-                wire.send_frame(sock, wire.T_OK, reply)
+                try:
+                    reply_type, reply = wire.T_OK, self._dispatch(msg_type, obj)
+                except Exception as e:  # backend errors travel as frames
+                    reply_type, reply = wire.T_ERR, wire.exception_to_obj(e)
+                # coalesce: while more requests are already buffered the
+                # reply just accumulates; the loop top pays ONE send (and
+                # one client reader wakeup) for the whole burst
+                outbuf += wire.encode_frame(reply_type, reply, req_id)
+            if outbuf:  # stop flag raced the last inline reply: flush it
+                with send_mu:
+                    sock.sendall(outbuf)
         except (wire.WireError, OSError):
             pass  # peer went away / malformed peer: drop the connection
         finally:
             with self._conns_mu:
                 self._conns.discard(sock)
+            # in-flight handlers tolerate the close (send failures are
+            # swallowed); replies racing a dead peer are simply dropped
             try:
                 sock.close()
             except OSError:
                 pass
+
+    def _handle_one(
+        self,
+        sock: socket.socket,
+        send_mu: threading.Lock,
+        msg_type: int,
+        req_id: int,
+        obj: Any,
+    ) -> None:
+        try:
+            try:
+                reply_type, reply = wire.T_OK, self._dispatch(msg_type, obj)
+            except Exception as e:  # backend errors travel as frames
+                reply_type, reply = wire.T_ERR, wire.exception_to_obj(e)
+            try:
+                with send_mu:
+                    wire.send_frame(sock, reply_type, reply, req_id)
+            except OSError:
+                pass  # connection died while we were computing the reply
+        finally:
+            with self._drained:
+                self._inflight -= 1
+                self._drained.notify_all()
 
     # ------------------------------------------------------------------ #
     def _dispatch(self, msg_type: int, obj: Any) -> Any:
@@ -215,13 +314,25 @@ class BackendServer:
         if msg_type == wire.T_FETCH_BLOCK:
             key, at_ts = obj
             return tuple(be.fetch_block(tuple(key), at_ts))
+        if msg_type == wire.T_FETCH_BLOCKS:
+            keys, at_ts = obj
+            return [
+                tuple(e)
+                for e in be.fetch_blocks([tuple(k) for k in keys], at_ts)
+            ]
         if msg_type == wire.T_FETCH_META:
             fid, at_ts = obj
             ver, meta = be.fetch_meta(fid, at_ts)
             return (ver, meta.length, meta.exists)
+        if msg_type == wire.T_FETCH_METAS:
+            fids, at_ts = obj
+            return wire.metas_to_obj(be.fetch_metas(list(fids), at_ts))
         if msg_type == wire.T_LOOKUP:
             path, at_ts = obj
             return tuple(be.lookup(path, at_ts))
+        if msg_type == wire.T_LOOKUP_MANY:
+            paths, at_ts = obj
+            return [tuple(e) for e in be.lookup_many(list(paths), at_ts)]
         if msg_type == wire.T_LISTDIR:
             prefix, at_ts = obj
             return [tuple(e) for e in be.listdir(prefix, at_ts)]
@@ -229,6 +340,15 @@ class BackendServer:
             fid, known = obj
             out = be.sync_file(fid, {tuple(k): v for k, v in known.items()})
             return {k: tuple(v) for k, v in out.items()}
+        if msg_type == wire.T_SYNC_FILES:
+            reqs = {
+                fid: {tuple(k): v for k, v in known.items()}
+                for fid, known in obj.items()
+            }
+            return {
+                fid: {k: tuple(v) for k, v in upd.items()}
+                for fid, upd in be.sync_files(reqs).items()
+            }
         if msg_type == wire.T_ALLOC_RANGE:
             client_epoch, count = obj
             return tuple(self.allocator.grant(client_epoch, count))
@@ -242,7 +362,8 @@ class BackendServer:
 
 
 # --------------------------------------------------------------------------- #
-# standalone entry point (crash-recovery tests SIGKILL this process)
+# standalone entry point (crash-recovery tests SIGKILL this process;
+# SIGTERM/SIGINT drain in-flight requests, fsync the WAL, and exit 0)
 # --------------------------------------------------------------------------- #
 def make_backend(
     n_shards: int,
@@ -285,10 +406,21 @@ def main(argv=None) -> None:
         backend, host=args.host, port=args.port,
         wal_path=args.wal, sync_mode=args.sync_mode,
     )
+
+    def _graceful(signum, frame):  # noqa: ARG001 - signal handler shape
+        # wake serve_forever; the drain + WAL flush happen below, in the
+        # main thread, so the handler itself stays tiny and reentrant
+        server._stop.set()
+
+    signal.signal(signal.SIGTERM, _graceful)
+    signal.signal(signal.SIGINT, _graceful)
+
     recovered = (server.recovery or {}).get("commits", 0)
     print(f"LISTENING {server.port} epoch={server.epoch} "
           f"recovered={recovered}", flush=True)
     server.serve_forever()
+    server.shutdown(drain=True)
+    print("SHUTDOWN clean", flush=True)
 
 
 if __name__ == "__main__":

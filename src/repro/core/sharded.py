@@ -249,22 +249,60 @@ class ShardedBackend(BackendAPI):
             return (ts,) * self.n_shards
         return tuple(ts)
 
-    def sync_file(self, fid, known_versions):
-        return self.shards[self.shard_of_fid(fid)].sync_file(
-            fid, known_versions
+    def sync_files(self, reqs):
+        # fan out per home shard, merge coordinator-side: ONE logical
+        # round trip for the client no matter how many files (or shards)
+        out: Dict[FileId, Dict[BlockKey, Tuple[Timestamp, bytes]]] = {}
+        by_shard: Dict[int, Dict[FileId, Dict[BlockKey, Timestamp]]] = {}
+        for fid, known in reqs.items():
+            by_shard.setdefault(self.shard_of_fid(fid), {})[fid] = known
+        for s, sub in by_shard.items():
+            out.update(self.shards[s].sync_files(sub))
+        return out
+
+    def fetch_blocks(self, keys, at_ts=None):
+        # group by home shard, fetch each shard's slice as one batch,
+        # reassemble in input order (like begin, the fan-out is merged
+        # here — server-side over the wire — not paid by the client)
+        by_shard: Dict[int, List[int]] = {}
+        for i, key in enumerate(keys):
+            by_shard.setdefault(self.shard_of_block(key), []).append(i)
+        out: List[Optional[Tuple[Timestamp, bytes]]] = [None] * len(keys)
+        for s, idxs in by_shard.items():
+            got = self.shards[s].fetch_blocks(
+                [keys[i] for i in idxs], self._local_at(at_ts, s)
+            )
+            for i, entry in zip(idxs, got):
+                out[i] = entry
+        return out  # type: ignore[return-value]
+
+    def fetch_metas(self, fids, at_ts=None):
+        by_shard: Dict[int, List[int]] = {}
+        for i, fid in enumerate(fids):
+            by_shard.setdefault(self.shard_of_fid(fid), []).append(i)
+        out: List[Optional[Tuple[Timestamp, object]]] = [None] * len(fids)
+        for s, idxs in by_shard.items():
+            got = self.shards[s].fetch_metas(
+                [fids[i] for i in idxs], self._local_at(at_ts, s)
+            )
+            for i, entry in zip(idxs, got):
+                out[i] = entry
+        return out
+
+    def lookup_many(self, paths, at_ts=None):
+        by_shard: Dict[int, List[int]] = {}
+        for i, path in enumerate(paths):
+            by_shard.setdefault(self.shard_of_name(path), []).append(i)
+        out: List[Optional[Tuple[Timestamp, Optional[FileId]]]] = (
+            [None] * len(paths)
         )
-
-    def fetch_block(self, key, at_ts=None):
-        s = self.shard_of_block(key)
-        return self.shards[s].fetch_block(key, self._local_at(at_ts, s))
-
-    def fetch_meta(self, fid, at_ts=None):
-        s = self.shard_of_fid(fid)
-        return self.shards[s].fetch_meta(fid, self._local_at(at_ts, s))
-
-    def lookup(self, path, at_ts=None):
-        s = self.shard_of_name(path)
-        return self.shards[s].lookup(path, self._local_at(at_ts, s))
+        for s, idxs in by_shard.items():
+            got = self.shards[s].lookup_many(
+                [paths[i] for i in idxs], self._local_at(at_ts, s)
+            )
+            for i, entry in zip(idxs, got):
+                out[i] = entry
+        return out  # type: ignore[return-value]
 
     def listdir(self, prefix, at_ts=None):
         out: List[Tuple[str, Timestamp, Optional[FileId]]] = []

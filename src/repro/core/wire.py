@@ -12,16 +12,20 @@ their own ext tag because the protocol round-trips dict keys like
 ``BlockKey = (file_id, block_index)`` — decoding arrays as lists would
 make them unhashable.
 
-**Frames** — every message on the socket is ``header || body``:
+**Frames** — every message on the socket is ``header || body`` (wire v2):
 
-    header = MAGIC(1) | VERSION(1) | MSG_TYPE(1) | pad(1) | BODY_LEN(4, BE)
+    header = MAGIC(1) | VERSION(1) | MSG_TYPE(1) | pad(1)
+           | REQUEST_ID(4, BE) | BODY_LEN(4, BE)
 
 A peer that sees a wrong magic or an unsupported version drops the
 connection instead of guessing. The message-type byte selects the RPC
 (requests) or the outcome (``T_OK`` / ``T_ERR`` responses); bodies are
-codec-packed value trees. Each connection is synchronous — one
-outstanding request at a time — so no correlation ids are needed; the
-client multiplexes with a connection pool instead.
+codec-packed value trees. The request id (new in v2) correlates replies
+with requests, so MANY requests can be in flight on one connection and
+the server may answer them out of order as handlers finish — the client
+multiplexes futures by id instead of holding a pool of one-at-a-time
+connections (v1's model). Id 0 is reserved for unsolicited server
+frames (the hello).
 
 This module also pins down the *object conversions* between the typed
 dataclasses (``TxnPayload`` / ``BeginReply`` / ``CommitReply`` /
@@ -50,15 +54,15 @@ from repro.core.types import (
 # protocol constants
 # --------------------------------------------------------------------------- #
 MAGIC = 0xF5
-VERSION = 1
-_HEADER = struct.Struct(">BBBxI")
+VERSION = 2
+_HEADER = struct.Struct(">BBBxII")
 HEADER_LEN = _HEADER.size
 
 # responses
 T_HELLO = 0x01
 T_OK = 0x02
 T_ERR = 0x03
-# requests
+# requests (scalar, v1 heritage)
 T_BEGIN = 0x10
 T_SYNC_FILE = 0x11
 T_FETCH_BLOCK = 0x12
@@ -70,6 +74,11 @@ T_ALLOC_RANGE = 0x17
 T_STATS = 0x18
 T_LATEST_TS = 0x19
 T_PING = 0x1A
+# requests (batch, new in v2 — one frame, one reply, many items)
+T_FETCH_BLOCKS = 0x20
+T_FETCH_METAS = 0x21
+T_LOOKUP_MANY = 0x22
+T_SYNC_FILES = 0x23
 
 #: max body we will accept from a peer (a frame claiming more is corrupt)
 MAX_BODY = 256 * 1024 * 1024
@@ -360,21 +369,22 @@ def unpack(data: bytes) -> Any:
 # --------------------------------------------------------------------------- #
 # frames
 # --------------------------------------------------------------------------- #
-def encode_frame(msg_type: int, obj: Any) -> bytes:
+def encode_frame(msg_type: int, obj: Any, req_id: int = 0) -> bytes:
     body = pack(obj)
-    return _HEADER.pack(MAGIC, VERSION, msg_type, len(body)) + body
+    return _HEADER.pack(MAGIC, VERSION, msg_type, req_id, len(body)) + body
 
 
-def decode_header(hdr: bytes) -> Tuple[int, int]:
-    """(msg_type, body_len); raises WireError on bad magic/version."""
-    magic, version, msg_type, body_len = _HEADER.unpack(hdr)
+def decode_header(hdr: bytes) -> Tuple[int, int, int]:
+    """(msg_type, req_id, body_len); raises WireError on bad
+    magic/version."""
+    magic, version, msg_type, req_id, body_len = _HEADER.unpack(hdr)
     if magic != MAGIC:
         raise WireError(f"bad magic 0x{magic:02x}")
     if version != VERSION:
         raise WireError(f"unsupported wire version {version}")
     if body_len > MAX_BODY:
         raise WireError(f"frame body too large ({body_len} bytes)")
-    return msg_type, body_len
+    return msg_type, req_id, body_len
 
 
 def _recv_exact(sock, n: int) -> bytes:
@@ -388,14 +398,62 @@ def _recv_exact(sock, n: int) -> bytes:
     return b"".join(chunks)
 
 
-def send_frame(sock, msg_type: int, obj: Any) -> None:
-    sock.sendall(encode_frame(msg_type, obj))
+def send_frame(sock, msg_type: int, obj: Any, req_id: int = 0) -> None:
+    sock.sendall(encode_frame(msg_type, obj, req_id))
 
 
-def recv_frame(sock) -> Tuple[int, Any]:
-    msg_type, body_len = decode_header(_recv_exact(sock, HEADER_LEN))
+def recv_frame(sock) -> Tuple[int, int, Any]:
+    msg_type, req_id, body_len = decode_header(_recv_exact(sock, HEADER_LEN))
     body = _recv_exact(sock, body_len) if body_len else b""
-    return msg_type, unpack(body)
+    return msg_type, req_id, unpack(body)
+
+
+class FrameReader:
+    """Buffered frame parser over a socket.
+
+    Pipelined peers put many small frames on the wire back-to-back; one
+    ``recv`` here can pull dozens of them into the buffer, and the
+    parser then hands them out without another syscall (or another GIL
+    hand-off — on a busy multiplexed connection the scheduling churn,
+    not the copy, is what batching amortizes). ``pending()`` tells a
+    server loop whether more complete frames are already buffered, which
+    is the signal for coalescing replies before flushing."""
+
+    __slots__ = ("sock", "buf")
+
+    def __init__(self, sock):
+        self.sock = sock
+        self.buf = bytearray()
+
+    def _parse_one(self) -> Optional[Tuple[int, int, Any]]:
+        if len(self.buf) < HEADER_LEN:
+            return None
+        msg_type, req_id, body_len = decode_header(
+            bytes(self.buf[:HEADER_LEN])
+        )
+        end = HEADER_LEN + body_len
+        if len(self.buf) < end:
+            return None
+        body = bytes(self.buf[HEADER_LEN:end])
+        del self.buf[:end]
+        return msg_type, req_id, unpack(body)
+
+    def recv_frame(self) -> Tuple[int, int, Any]:
+        while True:
+            frame = self._parse_one()
+            if frame is not None:
+                return frame
+            chunk = self.sock.recv(1 << 20)
+            if not chunk:
+                raise ConnectionClosed("socket closed")
+            self.buf += chunk
+
+    def pending(self) -> bool:
+        """A complete frame is already buffered (no syscall needed)."""
+        if len(self.buf) < HEADER_LEN:
+            return False
+        _, _, body_len = decode_header(bytes(self.buf[:HEADER_LEN]))
+        return len(self.buf) >= HEADER_LEN + body_len
 
 
 # --------------------------------------------------------------------------- #
@@ -467,6 +525,23 @@ def commit_reply_from_obj(o: Dict[str, Any]):
     return CommitReply(
         ts=o["ts"], block_versions={tuple(k): v for k, v in o["bv"].items()}
     )
+
+
+def metas_to_obj(entries) -> List[Any]:
+    """Batch fetch_metas reply: None (never seen) or (ver, length, exists)."""
+    return [
+        None if e is None else (e[0], e[1].length, e[1].exists)
+        for e in entries
+    ]
+
+
+def metas_from_obj(obj) -> List[Any]:
+    from repro.core.blockstore import FileMeta  # avoid import cycle at top
+
+    return [
+        None if e is None else (e[0], FileMeta(e[1], e[2]))
+        for e in obj
+    ]
 
 
 def stats_to_obj(stats) -> Dict[str, Any]:

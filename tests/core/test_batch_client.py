@@ -1,0 +1,111 @@
+"""Client-side exploitation of the batch-first API: multi-block reads
+batch their misses into one ``fetch_blocks``, ``readahead_blocks``
+speculatively warms the LRU without perturbing transactional state, and
+the lazy policy's warm-up syncs the whole cached working set in one
+``sync_files`` round trip."""
+from typing import Dict
+
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.types import CachePolicy
+
+
+class CountingBackend(BackendService):
+    """BackendService that counts batch-op invocations (round trips)."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.calls: Dict[str, int] = {"fetch_blocks": 0, "sync_files": 0}
+        self.last_batch = None
+
+    def fetch_blocks(self, keys, at_ts=None):
+        self.calls["fetch_blocks"] += 1
+        self.last_batch = list(keys)
+        return super().fetch_blocks(keys, at_ts)
+
+    def sync_files(self, reqs):
+        self.calls["sync_files"] += 1
+        self.last_batch = dict(reqs)
+        return super().sync_files(reqs)
+
+
+def _mk_file(backend, path, blocks, fill=b"\x07"):
+    setup = LocalServer(backend)
+    t = setup.begin()
+    fid = t.create(path)
+    t.write(fid, 0, fill * (blocks * backend.block_size))
+    t.commit()
+    return fid
+
+
+def test_multiblock_read_is_one_batched_fetch():
+    be = CountingBackend(block_size=16)
+    fid = _mk_file(be, "/f", 8)
+
+    cold = LocalServer(be)            # empty cache: all 8 blocks miss
+    txn = cold.begin()
+    data = txn.read(fid, 0, 8 * 16)
+    assert data == b"\x07" * 128
+    assert be.calls["fetch_blocks"] == 1          # ONE round trip
+    assert len(be.last_batch) == 8
+    assert cold.misses == 8 and cold.hits == 0    # accounting unchanged
+    # every demanded block is a recorded transactional read
+    assert set(txn.reads) == {(fid, i) for i in range(8)}
+    txn.commit()
+
+
+def test_readahead_warms_lru_without_recording_reads():
+    be = CountingBackend(block_size=16)
+    fid = _mk_file(be, "/f", 8)
+
+    local = LocalServer(be, readahead_blocks=4)
+    txn = local.begin()
+    txn.read(fid, 0, 16)              # demand block 0 only
+    assert be.calls["fetch_blocks"] == 1
+    assert set(be.last_batch) == {(fid, i) for i in range(5)}  # 0 + 4 ahead
+    assert local.prefetched == 4
+    assert set(txn.reads) == {(fid, 0)}   # speculation is NOT a read
+    assert local.misses == 1              # only the demanded block counts
+
+    txn.read(fid, 16, 3 * 16)             # blocks 1-3: warmed, all hits
+    assert local.hits == 3 and local.misses == 1
+    # ...and the window slid forward: only the NOT-yet-cached tail
+    # (blocks 5-7; block 4 was already prefetched) rode the next fetch
+    assert be.calls["fetch_blocks"] == 2
+    assert set(be.last_batch) == {(fid, 5), (fid, 6), (fid, 7)}
+    assert local.prefetched == 7
+    txn.commit()
+
+
+def test_readahead_stops_at_file_end():
+    be = CountingBackend(block_size=16)
+    fid = _mk_file(be, "/f", 3)
+    local = LocalServer(be, readahead_blocks=8)
+    txn = local.begin()
+    txn.read(fid, 0, 16)
+    assert set(be.last_batch) == {(fid, 0), (fid, 1), (fid, 2)}
+    txn.commit()
+
+
+def test_lazy_warmup_batches_stale_files_into_one_sync():
+    be = CountingBackend(block_size=16, policy=CachePolicy.LAZY)
+    fa = _mk_file(be, "/a", 2, fill=b"a")
+    fb = _mk_file(be, "/b", 2, fill=b"b")
+
+    worker = LocalServer(be)
+    txn = worker.begin()
+    assert txn.read(fa, 0, 2) == b"aa"    # first open of /a: one sync RPC
+    assert txn.read(fb, 0, 2) == b"bb"    # first open of /b: another
+    txn.commit()
+    assert be.calls["sync_files"] == 2
+
+    # a new begin advances last_sync_ts; both files' sync points are now
+    # behind. The first open re-warms BOTH in ONE sync_files round trip,
+    # and the second open needs no RPC at all.
+    txn = worker.begin()
+    txn.read(fa, 0, 2)
+    assert be.calls["sync_files"] == 3
+    assert set(be.last_batch) == {fa, fb}
+    txn.read(fb, 0, 2)
+    assert be.calls["sync_files"] == 3    # already warmed, no extra RPC
+    txn.commit()

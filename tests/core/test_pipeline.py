@@ -1,0 +1,280 @@
+"""Wire v2 pipelining: request-id multiplexing on one connection.
+
+Covers what the backend-agnostic suites can't see: out-of-order reply
+dispatch, unknown/duplicate request ids, errors interleaved with
+successes on one socket, a mid-request ``close()`` failing pending
+futures with a typed ``ConnectionClosed``, and the standalone server's
+clean SIGTERM drain. Scripted fake servers speak raw frames so the test
+controls reply order exactly."""
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+from repro.core import wire
+from repro.core.remote import RemoteBackend
+from repro.core.types import NotFound
+
+HELLO = {
+    "server": "faasfs",
+    "version": wire.VERSION,
+    "block_size": 16,
+    "policy": "invalidate",
+    "n_shards": 0,
+    "epoch": 1,
+}
+
+
+class ScriptedServer:
+    """One-connection fake server running ``script(conn)`` after the
+    hello; lets tests choose reply order / misbehavior frame by frame."""
+
+    def __init__(self, script):
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind(("127.0.0.1", 0))
+        self._lsock.listen(1)
+        self.port = self._lsock.getsockname()[1]
+        self.error = None
+        self._conn = None
+        self._thread = threading.Thread(
+            target=self._run, args=(script,), daemon=True
+        )
+        self._thread.start()
+
+    def _run(self, script):
+        try:
+            conn, _ = self._lsock.accept()
+            self._conn = conn
+            wire.send_frame(conn, wire.T_HELLO, HELLO)
+            script(conn)
+        except Exception as e:  # surfaced by .close() assertions
+            self.error = e
+
+    def close(self):
+        for s in (self._conn, self._lsock):
+            if s is not None:
+                try:
+                    s.close()
+                except OSError:
+                    pass
+        self._thread.join(timeout=2)
+        if self.error is not None:
+            raise self.error
+
+
+def test_out_of_order_replies_route_to_the_right_futures():
+    ready = threading.Event()
+
+    def script(conn):
+        reqs = [wire.recv_frame(conn) for _ in range(3)]
+        ready.wait(5)
+        # answer LIFO: each reply carries its request id as the value so
+        # a misrouted future would be visible immediately
+        for _, rid, _ in reversed(reqs):
+            wire.send_frame(conn, wire.T_OK, rid * 10, rid)
+
+    srv = ScriptedServer(script)
+    rb = RemoteBackend("127.0.0.1", srv.port)
+    futs = [rb.submit_frame(wire.T_LATEST_TS, None) for _ in range(3)]
+    assert not any(f.done() for f in futs)   # all genuinely in flight
+    ready.set()
+    # request ids are assigned 1,2,3 in submit order; replies arrived
+    # 3,2,1 and must still land on their own futures
+    assert [f.result(timeout=5) for f in futs] == [10, 20, 30]
+    rb.close()
+    srv.close()
+
+
+def test_unknown_and_duplicate_request_ids_are_dropped_not_misdelivered():
+    def script(conn):
+        _, rid, _ = wire.recv_frame(conn)
+        wire.send_frame(conn, wire.T_OK, "bogus", rid + 999)   # unknown id
+        wire.send_frame(conn, wire.T_OK, "real", rid)          # the answer
+        wire.send_frame(conn, wire.T_OK, "dupe", rid)          # duplicate
+        # connection must still be usable afterwards
+        _, rid2, _ = wire.recv_frame(conn)
+        wire.send_frame(conn, wire.T_OK, "second", rid2)
+
+    srv = ScriptedServer(script)
+    rb = RemoteBackend("127.0.0.1", srv.port)
+    assert rb.submit_frame(wire.T_LATEST_TS, None).result(timeout=5) == "real"
+    deadline = time.time() + 5
+    while rb.stray_replies < 2 and time.time() < deadline:
+        time.sleep(0.01)
+    assert rb.stray_replies == 2             # bogus + duplicate, counted
+    # stream framing survived: the next call round-trips normally
+    assert rb.submit_frame(wire.T_LATEST_TS, None).result(timeout=5) == "second"
+    rb.close()
+    srv.close()
+
+
+def test_errors_interleave_with_successes_on_one_connection():
+    ready = threading.Event()
+
+    def script(conn):
+        reqs = [wire.recv_frame(conn) for _ in range(3)]
+        ready.wait(5)
+        (_, r1, _), (_, r2, _), (_, r3, _) = reqs
+        wire.send_frame(conn, wire.T_OK, "late-ok", r3)
+        wire.send_frame(
+            conn, wire.T_ERR, wire.exception_to_obj(NotFound("file 7")), r1
+        )
+        wire.send_frame(conn, wire.T_OK, "ok", r2)
+
+    srv = ScriptedServer(script)
+    rb = RemoteBackend("127.0.0.1", srv.port)
+    f1 = rb.submit_frame(wire.T_LATEST_TS, None)
+    f2 = rb.submit_frame(wire.T_LATEST_TS, None)
+    f3 = rb.submit_frame(wire.T_LATEST_TS, None)
+    ready.set()
+    with pytest.raises(NotFound):
+        f1.result(timeout=5)
+    assert f2.result(timeout=5) == "ok"
+    assert f3.result(timeout=5) == "late-ok"
+    assert isinstance(f1.exception(), NotFound)  # inspectable post-hoc
+    rb.close()
+    srv.close()
+
+
+def test_close_fails_inflight_futures_with_typed_connection_closed():
+    """Satellite regression: RemoteBackend.close() racing an in-flight
+    request must fail it promptly with ConnectionClosed — no hang, no
+    leaked socket or reader thread."""
+    got_request = threading.Event()
+    hold = threading.Event()
+
+    def script(conn):
+        wire.recv_frame(conn)
+        got_request.set()
+        hold.wait(10)      # never reply while the test closes the client
+
+    srv = ScriptedServer(script)
+    rb = RemoteBackend("127.0.0.1", srv.port)
+
+    fut = rb.submit_frame(wire.T_LATEST_TS, None)
+    blocked_result = {}
+
+    def blocking_caller():
+        try:
+            blocked_result["v"] = rb.latest_ts
+        except BaseException as e:
+            blocked_result["e"] = e
+
+    caller = threading.Thread(target=blocking_caller, daemon=True)
+    caller.start()
+    assert got_request.wait(5)
+    time.sleep(0.05)       # let the blocking call get on the wire too
+
+    rb.close()
+
+    with pytest.raises(wire.ConnectionClosed):
+        fut.result(timeout=5)
+    caller.join(timeout=5)
+    assert not caller.is_alive()
+    assert isinstance(blocked_result.get("e"), wire.ConnectionClosed)
+    assert rb._sock is None and not rb._pending      # nothing leaked
+    assert rb._reader is not None
+    rb._reader.join(timeout=2)
+    assert not rb._reader.is_alive()                 # reader wound down
+    hold.set()
+    srv.close()
+
+
+def test_peer_death_fans_connection_closed_to_all_pending():
+    def script(conn):
+        for _ in range(2):
+            wire.recv_frame(conn)
+        conn.close()       # die with two requests outstanding
+
+    srv = ScriptedServer(script)
+    rb = RemoteBackend("127.0.0.1", srv.port)
+    f1 = rb.submit_frame(wire.T_LATEST_TS, None)
+    f2 = rb.submit_frame(wire.T_LATEST_TS, None)
+    for f in (f1, f2):
+        with pytest.raises(wire.ConnectionClosed):
+            f.result(timeout=5)
+    rb.close()
+    srv.close()
+
+
+def test_post_close_submit_fails_fast():
+    def script(conn):
+        hold = threading.Event()
+        hold.wait(2)
+
+    srv = ScriptedServer(script)
+    rb = RemoteBackend("127.0.0.1", srv.port)
+    rb.close()
+    with pytest.raises(wire.ConnectionClosed):
+        rb.submit_frame(wire.T_PING, None).result(timeout=5)
+    srv.close()
+
+
+# --------------------------------------------------------------------------- #
+# standalone server: SIGTERM drains and exits clean (no torn WAL tail)
+# --------------------------------------------------------------------------- #
+def test_sigterm_drains_and_exits_clean(tmp_path):
+    wal_path = tmp_path / "server.wal"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.server",
+         "--wal", str(wal_path), "--block-size", "16"],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        env=env,
+        cwd=str(REPO_ROOT),
+        text=True,
+    )
+    try:
+        line = proc.stdout.readline()
+        assert line.startswith("LISTENING")
+        port = int(line.split()[1])
+
+        from repro.core.client import LocalServer
+
+        rb = RemoteBackend("127.0.0.1", port)
+        local = LocalServer(rb)
+        t = local.begin()
+        fid = t.create("/f")
+        t.write(fid, 0, b"x" * 16)
+        t.commit()
+        rb.close()
+
+        proc.send_signal(signal.SIGTERM)
+        out, err = proc.communicate(timeout=15)
+        assert proc.returncode == 0, err
+        assert "SHUTDOWN clean" in out
+
+        # the flushed WAL replays the commit on restart: nothing torn
+        proc2 = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.server",
+             "--wal", str(wal_path), "--block-size", "16"],
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+            env=env,
+            cwd=str(REPO_ROOT),
+            text=True,
+        )
+        try:
+            line2 = proc2.stdout.readline()
+            assert "recovered=1" in line2
+            assert "epoch=2" in line2
+        finally:
+            proc2.kill()
+            proc2.wait(timeout=10)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)

@@ -1,7 +1,9 @@
 """Remote-transport specifics: handshake, error mapping, fenced file-id
-leases, connection-pool concurrency, and cross-connection group commit.
-(The OCC / POSIX / snapshot suites already run against RemoteBackend via
-the conftest parametrization; this file covers what they can't.)"""
+leases, multiplexed-connection concurrency, and cross-connection group
+commit. (The OCC / POSIX / snapshot suites already run against
+RemoteBackend via the conftest parametrization; this file covers what
+they can't. Pipelining/out-of-order dispatch specifics live in
+test_pipeline.py.)"""
 import threading
 
 import pytest
@@ -163,12 +165,12 @@ def test_single_rpc_begin_over_sharded_backend(serve):
     assert rb.rpcs == before + 1
 
 
-def test_connection_pool_grows_and_reuses(serve):
+def test_multiplexed_connection_serves_concurrent_threads(serve):
+    """8 threads hammer ONE multiplexed connection: no pool, each request
+    gets its own id and every reply routes back to the right caller."""
     _, rb = serve(BackendService(block_size=16))
     rb.ping()
-    with rb._pool_mu:
-        pool_size = len(rb._pool)
-    assert pool_size >= 1          # idle connection returned to the pool
+    reconnects_before = rb.reconnects
 
     results = []
 
@@ -181,4 +183,57 @@ def test_connection_pool_grows_and_reuses(serve):
         t.start()
     for t in threads:
         t.join()
-    assert len(results) == 160     # concurrent RPCs all served
+    assert len(results) == 160        # concurrent RPCs all served...
+    assert rb.reconnects == reconnects_before  # ...over the SAME socket
+    assert rb.stray_replies == 0
+
+
+def test_batch_ops_cross_the_wire(serve):
+    """The plural ops are one frame each and match their scalar shims."""
+    for backend in (
+        BackendService(block_size=16),
+        ShardedBackend(n_shards=2, block_size=16),
+    ):
+        _, rb = serve(backend)
+        local = LocalServer(rb)
+        fids = []
+        for i in range(3):
+            t = local.begin()
+            fid = t.create(f"/b{i}")
+            t.write(fid, 0, bytes([65 + i]) * 40)   # 3 blocks each
+            t.commit()
+            fids.append(fid)
+
+        keys = [(fid, bi) for fid in fids for bi in range(3)]
+        before = rb.rpcs
+        batched = rb.fetch_blocks(keys)
+        assert rb.rpcs == before + 1               # ONE round trip
+        assert batched == [rb.fetch_block(k) for k in keys]
+
+        metas = rb.fetch_metas(fids + [99999])
+        assert [m[1].length for m in metas[:3]] == [40, 40, 40]
+        assert metas[3] is None                    # never-seen fid
+        with pytest.raises(NotFound):
+            rb.fetch_meta(99999)                   # scalar shim raises
+
+        paths = [f"/b{i}" for i in range(3)] + ["/missing"]
+        lk = rb.lookup_many(paths)
+        assert [fid for _, fid in lk] == fids + [None]
+        assert lk[0] == rb.lookup("/b0")
+
+
+def test_submit_pipelines_independent_requests(serve):
+    """submit() returns futures; N fetches put N requests in flight on
+    one connection and each future resolves with its own block."""
+    _, rb = serve(BackendService(block_size=16))
+    local = LocalServer(rb)
+    t = local.begin()
+    fid = t.create("/f")
+    t.write(fid, 0, b"".join(bytes([i]) * 16 for i in range(8)))
+    t.commit()
+
+    futs = [rb.submit("fetch_block", (fid, i)) for i in range(8)]
+    got = [f.result(timeout=5) for f in futs]
+    assert [data[0] for _, data in got] == list(range(8))
+    # non-frame ops still work through submit (inline fallback)
+    assert rb.submit("alloc_file_id").result() > 0

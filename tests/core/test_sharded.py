@@ -473,3 +473,68 @@ def test_lru_cache_evicts_oldest_and_counts():
     assert stats["evictions"] == 1
     assert stats["size"] == 3 and stats["capacity"] == 3
     assert stats["hits"] == 1
+
+
+def test_group_commit_registration_waits_for_durability():
+    """Regression for the 'group-commit visibility window' (formerly a
+    docs/transport.md known limitation): a sharded fast-path commit going
+    through the group committer must NOT register in the sync vector
+    until the batch's WAL fsync completes — otherwise a begin racing the
+    window observes a commit a crash could still lose. Fails on the old
+    ordering (register inside _commit_locked, barrier afterwards)."""
+
+    class GatedWAL:
+        """WAL double whose sync() blocks until released."""
+
+        def __init__(self):
+            self.entered = threading.Event()
+            self.release = threading.Event()
+            self.release.set()          # setup commits pass through
+            self.records = []
+            self.fsyncs = 0
+
+        def append(self, rec):
+            self.records.append(rec)
+            return len(self.records)
+
+        def sync(self, lsn=None):
+            self.entered.set()
+            assert self.release.wait(5), "test never released the fsync"
+            self.fsyncs += 1
+
+        def close(self):
+            pass
+
+    be = ShardedBackend(n_shards=2, block_size=16,
+                        group_commit_window_s=0.005)
+    wal = GatedWAL()
+    be.set_wal(wal)
+
+    setup = LocalServer(be)
+    t = setup.begin()
+    fid = t.create("/f")
+    t.write(fid, 0, b"\0" * 16)
+    t.commit()
+
+    vec_before = be.latest_ts
+    wal.entered.clear()
+    wal.release.clear()               # next fsync parks until we say so
+
+    committed = threading.Event()
+
+    def writer():
+        txn = setup.begin()
+        txn.write(fid, 0, b"Y" * 16)
+        txn.commit()                  # group-commit leader: blocks in sync
+        committed.set()
+
+    w = threading.Thread(target=writer, daemon=True)
+    w.start()
+    assert wal.entered.wait(5)        # commit applied, fsync in flight
+    # the commit is NOT yet durable: no begin may observe it
+    assert be.latest_ts == vec_before
+    assert not committed.is_set()
+    wal.release.set()                 # fsync completes
+    w.join(timeout=5)
+    assert committed.is_set()
+    assert be.latest_ts != vec_before  # now registered, post-durability

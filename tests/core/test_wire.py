@@ -95,11 +95,18 @@ def test_truncated_rejected():
 # frames
 # --------------------------------------------------------------------------- #
 def test_frame_header_roundtrip():
-    frame = wire.encode_frame(wire.T_COMMIT, {"x": 1})
-    msg_type, body_len = wire.decode_header(frame[: wire.HEADER_LEN])
+    frame = wire.encode_frame(wire.T_COMMIT, {"x": 1}, req_id=0xDEADBEEF)
+    msg_type, req_id, body_len = wire.decode_header(frame[: wire.HEADER_LEN])
     assert msg_type == wire.T_COMMIT
+    assert req_id == 0xDEADBEEF
     assert body_len == len(frame) - wire.HEADER_LEN
     assert wire.unpack(frame[wire.HEADER_LEN:]) == {"x": 1}
+
+
+def test_frame_default_req_id_is_zero():
+    frame = wire.encode_frame(wire.T_HELLO, None)
+    _, req_id, _ = wire.decode_header(frame[: wire.HEADER_LEN])
+    assert req_id == 0
 
 
 def test_frame_bad_magic_and_version_rejected():
@@ -169,6 +176,16 @@ def test_begin_and_commit_reply_roundtrip():
         wire.unpack(wire.pack(wire.commit_reply_to_obj(cr)))
     )
     assert out.ts == cr.ts and out.block_versions == cr.block_versions
+
+
+def test_metas_batch_conversion_roundtrip():
+    from repro.core.blockstore import FileMeta
+
+    entries = [(3, FileMeta(1024, True)), None, (0, FileMeta(0, False))]
+    out = wire.metas_from_obj(wire.unpack(wire.pack(wire.metas_to_obj(entries))))
+    assert out[0] == (3, FileMeta(1024, True))
+    assert out[1] is None
+    assert out[2] == (0, FileMeta(0, False))
 
 
 def test_exception_mapping_conflict_keys_survive():
@@ -248,3 +265,52 @@ if st is not None:
     @given(trees)
     def test_property_roundtrip(obj):
         assert wire.unpack(wire.pack(obj)) == obj
+
+    # ---- batch payload shapes (wire v2): the value trees the plural
+    # ops put on the wire must round-trip exactly ----
+    block_keys = st.tuples(
+        st.integers(min_value=0, max_value=2**31),
+        st.integers(min_value=0, max_value=2**31),
+    )
+
+    fetch_blocks_replies = st.lists(
+        st.tuples(st.integers(min_value=0, max_value=2**63 - 1),
+                  st.binary(max_size=128)),
+        max_size=16,
+    )
+
+    sync_files_replies = st.dictionaries(
+        st.integers(min_value=1, max_value=2**31),
+        st.dictionaries(
+            block_keys,
+            st.tuples(st.integers(min_value=0, max_value=2**63 - 1),
+                      st.binary(max_size=64)),
+            max_size=8,
+        ),
+        max_size=8,
+    )
+
+    lookup_many_replies = st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=2**63 - 1),
+            st.one_of(st.none(), st.integers(min_value=1, max_value=2**31)),
+        ),
+        max_size=16,
+    )
+
+    @settings(max_examples=100, deadline=None)
+    @given(fetch_blocks_replies)
+    def test_property_fetch_blocks_reply_roundtrip(reply):
+        wired = wire.unpack(wire.pack([tuple(e) for e in reply]))
+        assert [tuple(e) for e in wired] == reply
+
+    @settings(max_examples=100, deadline=None)
+    @given(sync_files_replies)
+    def test_property_sync_files_reply_roundtrip(reply):
+        assert wire.unpack(wire.pack(reply)) == reply
+
+    @settings(max_examples=100, deadline=None)
+    @given(lookup_many_replies)
+    def test_property_lookup_many_reply_roundtrip(reply):
+        wired = wire.unpack(wire.pack([tuple(e) for e in reply]))
+        assert [tuple(e) for e in wired] == reply
