@@ -20,8 +20,9 @@ from repro.core.api import LatencyInjector
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.nfs_baseline import NFSClient, NFSServer
-from repro.core.posix import FaaSFS, O_APPEND, O_CREAT
+from repro.core.posix import FaaSFS, O_APPEND, O_CREAT, O_RDWR
 from repro.core.retry import run_function
+from repro.core.runtime import FunctionRuntime
 from repro.core.types import CachePolicy
 
 
@@ -122,6 +123,87 @@ def _nfs_run(p: Personality) -> float:
     return time.perf_counter() - t0
 
 
+# --------------------------------------------------------------------------- #
+# varmail: the mail-server personality driven through the NEW function-first
+# API (FunctionRuntime + errno-faithful VFS with real directories). Each
+# iteration is four invocations, filebench-varmail style:
+#   deliver    create + append + fsync a new mail file
+#   read_new   readdir the mailbox, read the newest mail
+#   reread     read + append (mark seen) an existing mail
+#   expunge    unlink the oldest mail
+# readdir/unlink ride the real-directory invariants (the listing is
+# transactionally validated). Invocations alternate between two warm
+# containers, so the second container's cache is kept current by begin-
+# time sync messages; conflict_retries counts any OCC restarts.
+# --------------------------------------------------------------------------- #
+VARMAIL_ITERS = 50
+VARMAIL_MAILS = 24
+VARMAIL_MSG = 2 * BLOCK
+
+
+def _varmail_run() -> Dict[str, float]:
+    be = LatencyInjector(
+        BackendService(block_size=BLOCK, policy=CachePolicy.EAGER), RPC_S
+    )
+    runtimes = [FunctionRuntime(LocalServer(be)) for _ in range(2)]
+    rt = runtimes[0]
+    box = "/mnt/tsfs/varmail"
+
+    @rt.function
+    def setup(fs):
+        fs.makedirs(box, exist_ok=True)
+        for i in range(VARMAIL_MAILS):
+            fd = fs.open(f"{box}/m{i:05d}", O_CREAT | O_RDWR)
+            fs.write(fd, b"m" * VARMAIL_MSG)
+            fs.close(fd)
+
+    setup()
+    seq = [VARMAIL_MAILS]
+
+    def deliver(fs):
+        n = seq[0]
+        fd = fs.open(f"{box}/m{n:05d}", O_CREAT | O_APPEND | O_RDWR)
+        fs.write(fd, b"d" * VARMAIL_MSG)
+        fs.fsync(fd)
+        fs.close(fd)
+
+    def read_new(fs):
+        names = fs.readdir(box)
+        fd = fs.open(f"{box}/{names[-1]}")
+        fs.pread(fd, fs.fstat(fd)["st_size"], 0)
+        fs.close(fd)
+
+    def reread_mark(fs):
+        names = fs.readdir(box)
+        fd = fs.open(f"{box}/{names[len(names) // 2]}", O_APPEND | O_RDWR)
+        fs.pread(fd, BLOCK, 0)
+        fs.write(fd, b"S")
+        fs.fsync(fd)
+        fs.close(fd)
+
+    def expunge(fs):
+        names = fs.readdir(box)
+        fs.unlink(f"{box}/{names[0]}")
+
+    t0 = time.perf_counter()
+    for it in range(VARMAIL_ITERS):
+        # two warm containers alternate; deliver+expunge keep box size flat
+        a, b = runtimes[it % 2], runtimes[(it + 1) % 2]
+        a.invoke(deliver)
+        seq[0] += 1
+        b.invoke(read_new)
+        a.invoke(reread_mark)
+        b.invoke(expunge)
+    wall = time.perf_counter() - t0
+    agg_attempts = sum(r.stats.attempts for r in runtimes)
+    agg_invocations = sum(r.stats.invocations for r in runtimes)
+    return {
+        "ops_per_s": 4 * VARMAIL_ITERS / wall,
+        "us_per_iter": wall / VARMAIL_ITERS * 1e6,
+        "conflict_retries": agg_attempts - agg_invocations,
+    }
+
+
 def run() -> List[str]:
     rows = []
     for p in PERSONALITIES:
@@ -131,9 +213,43 @@ def run() -> List[str]:
         rows.append(f"filebench_{p.name}_faasfs,{tf / ITERS * 1e6:.1f},us_per_iter")
         rows.append(f"filebench_{p.name}_nfs,{tn / ITERS * 1e6:.1f},us_per_iter")
         rows.append(f"filebench_{p.name}_delta,{delta * 100:+.1f},pct_vs_nfs")
+    rows.extend(run_varmail())
     return rows
 
 
+def run_varmail() -> List[str]:
+    v = _varmail_run()
+    return [
+        f"filebench_varmail_runtime_ops,{v['ops_per_s']:.0f},invocations_per_s",
+        f"filebench_varmail_runtime_iter,{v['us_per_iter']:.1f},us_per_iter",
+        f"filebench_varmail_conflict_retries,{v['conflict_retries']:.0f},count",
+    ]
+
+
+def _smoke() -> None:
+    """Shrink knobs so a CI varmail run finishes in seconds."""
+    global VARMAIL_ITERS, VARMAIL_MAILS
+    VARMAIL_ITERS = 12
+    VARMAIL_MAILS = 8
+
+
+def main(argv: List[str]) -> None:
+    if "--smoke" in argv:
+        _smoke()
+    t0 = time.perf_counter()
+    rows = []
+    # --smoke runs only the varmail row (the new-API gate); a bare run
+    # keeps the full six-personality comparison
+    gen = run_varmail() if "--smoke" in argv else run()
+    for r in gen:
+        rows.append(r)
+        print(r, flush=True)
+    from benchmarks.run import _write_artifact
+
+    _write_artifact("filebench", rows, time.perf_counter() - t0, None)
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(r)
+    import sys
+
+    main(sys.argv[1:])

@@ -6,10 +6,18 @@ import numpy as np
 
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
-from repro.core.posix import FaaSFS, O_CREAT
-from repro.core.retry import run_function
+from repro.core.posix import FaaSFS, O_CREAT, O_RDWR
+from repro.core.runtime import FunctionRuntime
 from repro.core.tensorstate import TensorStore, unflatten_like
 from repro.core.types import CachePolicy, Conflict
+
+
+def run_function(local, fn, **kw):
+    """Invoke ``fn`` as a cloud function (implicit BEGIN/COMMIT/retry).
+
+    One-liner form of the function-first API; see docs/posix.md. For
+    decorated functions use ``@runtime.function`` below."""
+    return FunctionRuntime(local).invoke(fn, **kw)
 
 
 def main() -> None:
@@ -31,6 +39,27 @@ def main() -> None:
     run_function(worker_a, write_config)
     print("1. committed config atomically at function return")
 
+    # ---- 1b. the POSIX surface is errno-faithful: real directories,
+    # access modes, vectored I/O, OSError subclasses with correct errno --
+    def posix_surface(fs: FaaSFS) -> None:
+        fs.makedirs("/mnt/tsfs/app/logs", exist_ok=True)
+        assert fs.readdir("/mnt/tsfs/app") == ["config.json", "logs"]
+        try:
+            fs.rmdir("/mnt/tsfs/app")          # not empty
+        except OSError as e:
+            import errno as errno_mod
+            assert e.errno == errno_mod.ENOTEMPTY
+        fd = fs.open("/mnt/tsfs/app/logs/req", O_CREAT | O_RDWR)
+        fs.pwritev(fd, [b"GET /", b" 200\n"], 0)   # one write, one iovec
+        head, tail = fs.preadv(fd, [5, 5], 0)       # ONE fetch_blocks RPC
+        assert head == b"GET /" and tail == b" 200\n"
+        st = fs.stat("/mnt/tsfs/app/logs/req")      # full stat: size,
+        assert st["st_size"] == 10                  # kind, mtime/ctime
+        fs.close(fd)                                # (commit timestamps)
+
+    run_function(worker_a, posix_surface)
+    print("1b. errno-faithful VFS: real dirs, ENOTEMPTY, vectored I/O")
+
     # ---- 2. POSIX semantics: rename is atomic, reads are consistent -----
     def rotate(fs: FaaSFS) -> None:
         fd = fs.open("/mnt/tsfs/app/config.v2", O_CREAT)
@@ -50,9 +79,11 @@ def main() -> None:
 
     import threading
 
+    rt_a, rt_b = FunctionRuntime(worker_a), FunctionRuntime(worker_b)
+    bump_a, bump_b = rt_a.function(bump_counter), rt_b.function(bump_counter)
     threads = [
-        threading.Thread(target=lambda w=w: [run_function(w, bump_counter) for _ in range(50)])
-        for w in (worker_a, worker_b)
+        threading.Thread(target=lambda f=f: [f() for _ in range(50)])
+        for f in (bump_a, bump_b)
     ]
     for t in threads:
         t.start()

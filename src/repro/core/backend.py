@@ -59,6 +59,7 @@ from repro.core.types import (
     ReadRecord,
     Timestamp,
     WriteRecord,
+    normalize_meta_update,
 )
 
 
@@ -78,8 +79,10 @@ class TxnPayload:
     reads: List[ReadRecord] = field(default_factory=list)
     writes: List[WriteRecord] = field(default_factory=list)
     predicates: List[LengthPredicate] = field(default_factory=list)
-    # metadata mutations: fid -> new length (None => delete)
-    meta_updates: Dict[FileId, Optional[int]] = field(default_factory=dict)
+    # metadata mutations: fid -> None (delete) | ("s", length, kind) |
+    # ("t",) mtime-only touch | legacy int == ("s", int, "f"); see
+    # repro.core.types.normalize_meta_update
+    meta_updates: Dict[FileId, object] = field(default_factory=dict)
     # namespace mutations: path -> fid (None => unbind)
     name_updates: Dict[str, Optional[FileId]] = field(default_factory=dict)
     # names whose resolution the txn depends on: path -> observed version
@@ -492,11 +495,22 @@ class BackendService(BackendAPI):
                     w.key, w.apply_to(base, self.store.block_size), ts
                 )
                 touched_blocks.append(w.key)
-            for fid, new_len in payload.meta_updates.items():
-                if new_len is None:
+            for fid, upd in payload.meta_updates.items():
+                upd = normalize_meta_update(upd)
+                if upd is None:
                     self.store.put_meta(fid, FileMeta(0, exists=False), ts)
+                elif upd[0] == "t":
+                    # mtime-only touch (in-place data write): mutates the
+                    # current version in place — no version burned, no
+                    # undo needed, invisible to the commit log
+                    self.store.touch_meta(fid, ts)
+                    continue
                 else:
-                    self.store.put_meta(fid, FileMeta(new_len, exists=True), ts)
+                    _, new_len, kind = upd
+                    self.store.put_meta(
+                        fid, FileMeta(new_len, exists=True, kind=kind,
+                                      mtime_ts=ts), ts
+                    )
                 touched_files.append(fid)
             for path, fid in payload.name_updates.items():
                 self.store.bind_name(path, fid, ts)

@@ -69,8 +69,21 @@ class Versioned:
 
 @dataclass
 class FileMeta:
+    """Versioned inode: length + existence drive OCC validation; ``kind``
+    and ``mtime_ts`` make stat honest.
+
+    ``kind`` is ``"f"`` (regular file) or ``"d"`` (directory) and is
+    immutable per file id (recreation allocates a new id), so it may be
+    read without recording an OCC meta read. ``mtime_ts`` is the commit
+    timestamp of the last data modification; in-place block writes
+    advance it *without* creating a new meta version (``touch_meta``), so
+    they conflict with nobody — the meta version timestamp itself serves
+    as the POSIX ctime (last inode change)."""
+
     length: int
     exists: bool = True
+    kind: str = "f"
+    mtime_ts: Timestamp = 0
 
 
 class BlockStore:
@@ -185,6 +198,23 @@ class BlockStore:
         with self._lock:
             v = self._meta.setdefault(fid, Versioned())
             v.put(ts, meta, self.versions_kept)
+
+    def touch_meta(self, fid: FileId, ts: Timestamp) -> None:
+        """Advance the current meta's mtime in place — no new version, no
+        version-timestamp change, so concurrent meta readers stay valid
+        and snapshot GC pressure is zero. Writers hold the commit lock;
+        a fresh FileMeta object is swapped in so previously returned
+        references never mutate under a reader."""
+        with self._lock:
+            v = self._meta.get(fid)
+            if v is None or not v.versions:
+                return
+            cts, meta = v.versions[-1]
+            if meta.exists and ts > meta.mtime_ts:
+                v.versions[-1] = (
+                    cts,
+                    FileMeta(meta.length, meta.exists, meta.kind, ts),
+                )
 
     def meta(self, fid: FileId, ts: Optional[Timestamp] = None) -> Tuple[Timestamp, FileMeta]:
         with self._lock:

@@ -28,6 +28,10 @@ from typing import Dict, List, Optional, Set, Tuple
 from repro.core.api import BackendAPI
 from repro.core.backend import TxnPayload
 from repro.core.types import (
+    KIND_DIR,
+    KIND_FILE,
+    LOCK_BLOCK_INDEX,
+    META_TOUCH,
     BlockKey,
     CachePolicy,
     Conflict,
@@ -40,6 +44,7 @@ from repro.core.types import (
     Timestamp,
     TxnStateError,
     WriteRecord,
+    meta_set,
 )
 
 
@@ -244,6 +249,9 @@ class _TxnFile:
     base_length: int      # committed length observed
     meta_version: Timestamp
     dirty_meta: bool = False
+    kind: str = KIND_FILE
+    mtime: Timestamp = 0  # committed mtime observed (0 for txn-created)
+    ctime: Timestamp = 0  # committed meta version ts (POSIX ctime)
 
 
 class Transaction:
@@ -269,6 +277,11 @@ class Transaction:
         self._files: Dict[FileId, _TxnFile] = {}
         self._created: Set[FileId] = set()
         self._deleted: Set[FileId] = set()
+        self._dir_touches: Set[FileId] = set()
+        # probe_meta results, reused by _file so a VFS kind-check +
+        # file_info pair costs ONE fetch_meta round trip, not two
+        self._probed: Dict[FileId, Tuple[Timestamp, object]] = {}
+        self.committed_payload: Optional[TxnPayload] = None
         self.done = False
 
     # ------------------------------------------------------------------ #
@@ -292,10 +305,13 @@ class Transaction:
         Txn-local name updates are overlaid, so a file created earlier in
         the same transaction is visible.
 
-        Known limitation: a concurrent create of a *never-before-bound*
-        name leaves no version to validate against, so such phantoms are
-        not detected (full phantom protection needs per-directory version
-        objects — a cross-shard cost we haven't taken; cf. the paper,
+        Known limitation *at this layer*: a concurrent create of a
+        *never-before-bound* name leaves no version to validate against,
+        so such phantoms are not detected here. The POSIX VFS closes this
+        for real directories: every link/unlink ships a namespace
+        generation bump for the parent (``touch_dir``), and
+        ``FaaSFS.readdir``/``rmdir`` record the directory's meta version,
+        so phantom creates abort the lister at commit (cf. the paper,
         which does not validate directory listings at all)."""
         if not prefix.endswith("/"):
             prefix += "/"
@@ -312,9 +328,16 @@ class Transaction:
             p[len(prefix):] for p, fid in children.items() if fid is not None
         )
 
-    def create(self, path: str, exist_ok: bool = False) -> FileId:
+    def _check_mutable(self) -> None:
+        self._check_open()
+        if self.read_only:
+            raise TxnStateError("mutation in read-only transaction")
+
+    def create(self, path: str, exist_ok: bool = False, kind: str = KIND_FILE) -> FileId:
         self._check_open()
         existing = self.lookup(path)
+        if existing is None:
+            self._check_mutable()
         if existing is not None:
             if exist_ok:
                 return existing
@@ -323,25 +346,39 @@ class Transaction:
             raise Exists(path)
         fid = self.backend.alloc_file_id()
         self.name_updates[path] = fid
-        self._files[fid] = _TxnFile(fid, 0, 0, 0, dirty_meta=True)
+        self._files[fid] = _TxnFile(fid, 0, 0, 0, dirty_meta=True, kind=kind)
         self._created.add(fid)
         return fid
 
+    def bind(self, path: str, fid: Optional[FileId]) -> None:
+        """Raw namespace update: bind ``path`` to ``fid`` (None unbinds).
+        The VFS layer composes rename/replace semantics from this; the
+        caller is responsible for having recorded any name reads its
+        decision depended on (``lookup`` records them)."""
+        self._check_mutable()
+        self.name_updates[path] = fid
+
+    def delete_fid(self, fid: FileId) -> None:
+        """Mark a file id deleted (meta tombstone at commit). Records a
+        meta read, so a concurrent resurrection conflicts."""
+        self._check_mutable()
+        tf = self._file(fid)
+        tf.dirty_meta = True
+        # the txn-local length is NOT zeroed: POSIX keeps an unlinked
+        # file's contents readable through already-open descriptors
+        self._deleted.add(fid)
+
     def unlink(self, path: str) -> None:
-        self._check_open()
+        self._check_mutable()
         fid = self.lookup(path)
         if fid is None:
             raise NotFound(path)
         self.name_updates[path] = None
-        tf = self._file(fid)
-        tf.dirty_meta = True
-        tf.length = 0
-        self._files[fid] = tf
-        self._deleted.add(fid)
+        self.delete_fid(fid)
 
     def rename(self, src: str, dst: str) -> None:
         """Atomic rename (POSIX: never visible under both names)."""
-        self._check_open()
+        self._check_mutable()
         fid = self.lookup(src)
         if fid is None:
             raise NotFound(src)
@@ -354,19 +391,111 @@ class Transaction:
     def _file(self, fid: FileId) -> _TxnFile:
         tf = self._files.get(fid)
         if tf is None:
-            at = self.read_ts if self.read_only else None
-            try:
-                ver, meta = self.backend.fetch_meta(fid, at)
-            except NotFound:
-                ver, meta = 0, None
+            probed = self._probed.get(fid)
+            if probed is not None:
+                ver, meta = probed
+            else:
+                at = self.read_ts if self.read_only else None
+                try:
+                    ver, meta = self.backend.fetch_meta(fid, at)
+                except NotFound:
+                    ver, meta = 0, None
             if meta is None or not meta.exists:
                 raise NotFound(f"file {fid}")
             if not self.read_only:
                 self.meta_reads.setdefault(fid, ver)
             self.local.lazy_sync_file(fid)
-            tf = _TxnFile(fid, meta.length, meta.length, ver)
+            tf = _TxnFile(
+                fid, meta.length, meta.length, ver,
+                kind=meta.kind, mtime=meta.mtime_ts, ctime=ver,
+            )
             self._files[fid] = tf
         return tf
+
+    def file_info(self, fid: FileId) -> _TxnFile:
+        """Validated metadata view of ``fid`` (records an OCC meta read in
+        read-write transactions): length, kind, mtime/ctime commit
+        timestamps. Raises NotFound for a missing/deleted file."""
+        return self._file(fid)
+
+    def probe_meta(self, fid: FileId):
+        """Unvalidated meta read: the current FileMeta, or None if the
+        file does not exist (at this transaction's snapshot for read-only
+        transactions). Records NO OCC meta read — callers must only
+        depend on attributes that are immutable per file id (``kind``) or
+        that they separately pin with a predicate (``assert_exists``)."""
+        tf = self._files.get(fid)
+        if tf is not None:
+            if fid in self._deleted:
+                return None
+            from repro.core.blockstore import FileMeta
+
+            return FileMeta(tf.length, True, tf.kind, tf.mtime)
+        probed = self._probed.get(fid)
+        if probed is None:
+            at = self.read_ts if self.read_only else None
+            try:
+                probed = self.backend.fetch_meta(fid, at)
+            except NotFound:
+                return None
+            self._probed[fid] = probed
+        meta = probed[1]
+        return meta if meta.exists else None
+
+    def file_kind(self, fid: FileId) -> Optional[str]:
+        """``"f"`` / ``"d"`` for an existing file id, else None. Kind is
+        immutable per id, so this needs no OCC validation."""
+        meta = self.probe_meta(fid)
+        return None if meta is None else meta.kind
+
+    def assert_exists(self, fid: FileId) -> None:
+        """Pin "``fid`` exists at commit time" with a length predicate
+        (length >= 0 fails iff the meta tombstone applies first). Unlike
+        a meta read this does NOT conflict with concurrent metadata
+        bumps — it is how two creators in one directory both commit while
+        either still loses to a concurrent rmdir."""
+        self._check_open()
+        if fid in self._deleted:
+            raise NotFound(f"file {fid}")
+        if fid in self._created:
+            return  # created by this txn: validation precedes our apply
+        self.predicates.append(LengthPredicate(fid, PredicateKind.GE, 0))
+
+    def touch_dir(self, fid: FileId) -> None:
+        """Bump a directory's namespace generation at commit: ships a
+        meta set for the dir, so anything that recorded the dir's meta
+        version (readdir / stat / rmdir) conflicts with this link or
+        unlink — the phantom protection real directories buy us."""
+        self._check_open()
+        tf = self._files.get(fid)
+        if tf is not None and (tf.dirty_meta or fid in self._deleted):
+            return  # created or deleted in this txn: already shipping meta
+        self._dir_touches.add(fid)
+
+    def lock_file(self, fid: FileId, exclusive: bool = True) -> None:
+        """Advisory lock record (paper §3.1 optimistic lock elision): the
+        lock word is a reserved block. Shared lockers read it; an
+        exclusive locker also writes it. Acquisition always succeeds
+        locally — commit validation delivers the serialization the lock
+        would have: exclusive-vs-any conflicts, shared-vs-shared does
+        not. Locks release at commit/abort (function boundary).
+
+        An exclusive lock is a write: read-only transactions refuse it
+        (TxnStateError) — a snapshot transaction records no validated
+        reads, so its lock word would commit blind and serialize
+        nothing. (This also lets the runtime's read-only inference
+        transparently demote a function that starts taking exclusive
+        locks.) Shared locks are fine read-only: the snapshot already
+        serializes them at its read timestamp."""
+        if exclusive:
+            self._check_mutable()
+        else:
+            self._check_open()
+        key = (fid, LOCK_BLOCK_INDEX)
+        self._read_block(key)
+        if exclusive:
+            w = self.writes.setdefault(key, WriteRecord(key))
+            w.add(0, b"L")
 
     def length(self, fid: FileId) -> int:
         tf = self._file(fid)
@@ -451,6 +580,10 @@ class Transaction:
         if self.read_only:
             raise TxnStateError("write in read-only transaction")
         tf = self._file(fid)
+        if not data:
+            # POSIX: a zero-length write is a no-op — it must not extend
+            # the file, record writes, or touch mtime
+            return 0
         end = offset + len(data)
         b0, b1 = offset // self.block_size, max(offset, end - 1) // self.block_size
         pos = 0
@@ -467,7 +600,7 @@ class Transaction:
         return len(data)
 
     def truncate(self, fid: FileId, length: int) -> None:
-        self._check_open()
+        self._check_mutable()
         tf = self._file(fid)
         if length < tf.length:
             # POSIX: bytes past the new length must read as zeros if the
@@ -490,12 +623,22 @@ class Transaction:
     # ------------------------------------------------------------------ #
     def payload(self) -> TxnPayload:
         deleted = self._deleted
-        meta_updates: Dict[FileId, Optional[int]] = {}
+        meta_updates: Dict[FileId, object] = {}
         for fid, tf in self._files.items():
             if fid in deleted:
                 meta_updates[fid] = None
             elif tf.dirty_meta:
-                meta_updates[fid] = tf.length
+                meta_updates[fid] = meta_set(tf.length, tf.kind)
+        for fid in self._dir_touches:
+            # namespace-generation bump for parents of linked/unlinked
+            # entries; an explicit meta set (or delete) supersedes it
+            meta_updates.setdefault(fid, meta_set(0, KIND_DIR))
+        for key in self.writes:
+            # in-place data writes carry an mtime-only touch so stat stays
+            # honest; lock-word writes are not data modifications
+            fid = key[0]
+            if key[1] != LOCK_BLOCK_INDEX and fid not in meta_updates:
+                meta_updates[fid] = META_TOUCH
         return TxnPayload(
             read_ts=self.read_ts,
             reads=[ReadRecord(k, v) for k, v in self.reads.items()],
@@ -511,7 +654,7 @@ class Transaction:
     def commit(self) -> SyncTimestamp:
         self._check_open()
         self.done = True
-        payload = self.payload()
+        payload = self.committed_payload = self.payload()
         try:
             reply = self.backend.commit(payload)
         except Conflict:

@@ -196,7 +196,7 @@ class _RemoteCore(BackendAPI):
         return (
             wire.T_FETCH_META,
             (fid, at_ts),
-            lambda r: (r[0], FileMeta(r[1], r[2])),
+            lambda r: (r[0], FileMeta(r[1], r[2], r[3], r[4])),
         )
 
     def _enc_fetch_metas(self, fids, at_ts=None):

@@ -1,29 +1,30 @@
-"""Function-grained execution: implicit transactions + retry on conflict.
+"""Deprecated shim: function-grained execution moved to ``core/runtime``.
 
-``run_function`` is the FaaS invocation wrapper: BEGIN at entry, COMMIT at
-return (the paper's transparent transaction boundaries). The function must
-be retry-safe — exactly the idempotence contract cloud platforms already
-impose — and atomic commit upgrades that contract to exactly-once visible
-effects (paper §3.3, citing AFT [68]).
+``run_function`` predates the function-first programming model
+(``repro.core.runtime.FunctionRuntime``); it survives as a thin wrapper
+so existing callers keep working unmodified. New code should do::
+
+    runtime = FunctionRuntime(local)
+
+    @runtime.function
+    def fn(fs, ...): ...
+
+    fn(...)
+
+which adds read-only inference, capped jittered backoff, aggregate
+stats, and per-function retry policy on top of the same BEGIN-at-entry /
+COMMIT-at-return / restart-on-Conflict semantics.
 """
 from __future__ import annotations
 
-import random
-import time
-from dataclasses import dataclass, field
+import warnings
 from typing import Any, Callable, Optional
 
-from repro.core.client import LocalServer, Transaction
+from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS
-from repro.core.types import Conflict
+from repro.core.runtime import FunctionRuntime, InvocationStats
 
-
-@dataclass
-class InvocationStats:
-    attempts: int = 0
-    aborts: int = 0
-    commit_ts: int = 0
-    wall_s: float = 0.0
+__all__ = ["run_function", "InvocationStats"]
 
 
 def run_function(
@@ -36,36 +37,18 @@ def run_function(
     mount: str = "/mnt/tsfs",
     stats: Optional[InvocationStats] = None,
 ) -> Any:
-    """Invoke ``fn`` as a cloud function with an implicit transaction."""
-    t0 = time.perf_counter()
-    last: Optional[Conflict] = None
-    for attempt in range(max_retries):
-        txn = local.begin(read_only=read_only)
-        fs = FaaSFS(txn, mount=mount)
-        if stats:
-            stats.attempts += 1
-        try:
-            result = fn(fs)
-        except Conflict as c:  # pragma: no cover - functions normally don't
-            txn.abort()
-            last = c
-            continue
-        except BaseException:
-            txn.abort()
-            raise
-        try:
-            ts = txn.commit()
-            if stats:
-                stats.commit_ts = ts
-                stats.wall_s = time.perf_counter() - t0
-            return result
-        except Conflict as c:
-            last = c
-            if stats:
-                stats.aborts += 1
-            if backoff_s:
-                time.sleep(backoff_s * (1 + random.random()) * min(attempt + 1, 8))
-    raise Conflict(
-        f"function failed to commit after {max_retries} attempts: {last}",
-        last.keys if last else [],
+    """Invoke ``fn`` as a cloud function with an implicit transaction.
+
+    .. deprecated:: PR4
+        Use :class:`repro.core.runtime.FunctionRuntime` instead.
+    """
+    warnings.warn(
+        "run_function is deprecated; use FunctionRuntime.invoke "
+        "(repro.core.runtime)",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    runtime = FunctionRuntime(
+        local, mount=mount, max_retries=max_retries, backoff_s=backoff_s
+    )
+    return runtime.invoke(fn, read_only=read_only, stats=stats)

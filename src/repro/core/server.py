@@ -323,7 +323,7 @@ class BackendServer:
         if msg_type == wire.T_FETCH_META:
             fid, at_ts = obj
             ver, meta = be.fetch_meta(fid, at_ts)
-            return (ver, meta.length, meta.exists)
+            return (ver, meta.length, meta.exists, meta.kind, meta.mtime_ts)
         if msg_type == wire.T_FETCH_METAS:
             fids, at_ts = obj
             return wire.metas_to_obj(be.fetch_metas(list(fids), at_ts))

@@ -12,6 +12,51 @@ Timestamp = int                     # shard-local commit timestamp
 FileId = int
 BlockKey = Tuple[int, int]          # (file_id, block_index)
 
+# Reserved block index holding a file's advisory-lock word (optimistic
+# lock elision, paper §3.1). Far beyond any data block a real file can
+# reach at 4 KiB blocks; writes to it never count as data modifications
+# (no mtime touch).
+LOCK_BLOCK_INDEX = 1 << 30
+
+# File kinds carried in FileMeta ("f" regular file, "d" directory). A
+# file id never changes kind: unlink + recreate allocates a fresh id, so
+# kind may be read without OCC validation.
+KIND_FILE = "f"
+KIND_DIR = "d"
+
+
+# --------------------------------------------------------------------------- #
+# Meta-update encoding (TxnPayload.meta_updates values).
+#
+# Three forms, all wire/WAL-serializable as plain value trees:
+#   None             -> delete the file (unlink / rmdir / rename-over)
+#   ("s", length, kind) -> set length+kind; bumps the meta version, so
+#                       concurrent meta readers (stat / length checks)
+#                       fail OCC validation. Also the directory
+#                       "namespace generation" bump: every link/unlink
+#                       under a real directory ships ("s", 0, "d") for
+#                       the parent, which is what makes rmdir-vs-create
+#                       and readdir-vs-create conflicts detectable.
+#   ("t",)           -> mtime-only touch: an in-place data write. Applied
+#                       WITHOUT creating a meta version, so it conflicts
+#                       with nobody (preserves writer/stat concurrency).
+#   int (legacy)     -> ("s", int, "f"); accepted for old WAL records.
+# --------------------------------------------------------------------------- #
+def meta_set(length: int, kind: str = KIND_FILE) -> Tuple[str, int, str]:
+    return ("s", length, kind)
+
+
+META_TOUCH: Tuple[str, ...] = ("t",)
+
+
+def normalize_meta_update(value):
+    """Canonical (op, ...) tuple for any accepted meta_updates value."""
+    if value is None:
+        return None
+    if isinstance(value, int):
+        return ("s", value, KIND_FILE)
+    return tuple(value)
+
 # A client's global sync position. The monolithic backend uses a plain
 # Timestamp; the sharded backend uses a vector of per-shard timestamps
 # (one component per shard, compared componentwise). Client code never

@@ -54,7 +54,7 @@ from repro.core.types import (
 # protocol constants
 # --------------------------------------------------------------------------- #
 MAGIC = 0xF5
-VERSION = 2
+VERSION = 3  # v3: fetch_meta(s) replies carry (ver, length, exists, kind, mtime_ts)
 _HEADER = struct.Struct(">BBBxII")
 HEADER_LEN = _HEADER.size
 
@@ -528,9 +528,13 @@ def commit_reply_from_obj(o: Dict[str, Any]):
 
 
 def metas_to_obj(entries) -> List[Any]:
-    """Batch fetch_metas reply: None (never seen) or (ver, length, exists)."""
+    """Batch fetch_metas reply: None (never seen) or
+    (ver, length, exists, kind, mtime_ts) — kind and the mtime commit
+    timestamp travel with the meta so stat is honest over the wire."""
     return [
-        None if e is None else (e[0], e[1].length, e[1].exists)
+        None
+        if e is None
+        else (e[0], e[1].length, e[1].exists, e[1].kind, e[1].mtime_ts)
         for e in entries
     ]
 
@@ -539,7 +543,7 @@ def metas_from_obj(obj) -> List[Any]:
     from repro.core.blockstore import FileMeta  # avoid import cycle at top
 
     return [
-        None if e is None else (e[0], FileMeta(e[1], e[2]))
+        None if e is None else (e[0], FileMeta(e[1], e[2], e[3], e[4]))
         for e in obj
     ]
 

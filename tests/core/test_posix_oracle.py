@@ -1,0 +1,354 @@
+"""Differential oracle: random op traces against FaaSFS AND a real
+kernel filesystem (tmp dir) must produce identical results and errnos.
+
+The acceptance bar for the errno-faithful VFS: for the supported POSIX
+surface (open with flags/access modes, read/write/pread/pwrite, lseek,
+ftruncate, dup, rename, unlink, mkdir, rmdir, readdir, stat, close), the
+same sequence of operations yields the same values — or fails with the
+same errno — on FaaSFS (strict mode) and on the real thing, over the
+monolithic, sharded, and networked backends (conftest parametrization).
+
+Each hypothesis example runs one transaction in a fresh namespace root
+(and a fresh real temp dir), then commits — so the apply path of every
+backend kind is exercised too.
+"""
+import errno
+import itertools
+import os
+import random
+import shutil
+import stat as stat_mod
+import tempfile
+
+import pytest
+
+from repro.core.client import LocalServer
+from repro.core.posix import FaaSFS
+
+BLOCK = 16
+MOUNT = "/mnt/tsfs"
+
+# fixed path pool: files, nested dirs, and a path "through" a file
+PATHS = ["f1", "f2", "sub", "sub/f", "sub/deep", "sub/deep/g", "f1/bad"]
+
+ACC = [os.O_RDONLY, os.O_WRONLY, os.O_RDWR]
+EXTRA = [0, os.O_CREAT, os.O_TRUNC, os.O_APPEND, os.O_CREAT | os.O_EXCL,
+         os.O_CREAT | os.O_TRUNC, os.O_CREAT | os.O_APPEND]
+
+_case = itertools.count()
+
+
+def _payload(n: int) -> bytes:
+    return bytes((i * 7 + n) % 251 for i in range(n))
+
+
+class _Ours:
+    """Applies ops to FaaSFS; returns (tag, value) outcomes."""
+
+    def __init__(self, fs: FaaSFS, root: str):
+        self.fs = fs
+        self.root = root
+        self.fds = []          # parallel to the real side
+        self.isdir = []
+
+    def path(self, i):
+        return f"{self.root}/{PATHS[i]}"
+
+    def run(self, o):
+        fs = self.fs
+        kind, args = o[0], o[1:]
+        if kind == "open":
+            fd = fs.open(self.path(args[0]), args[1])
+            st = fs.fstat(fd)
+            self.fds.append(fd)
+            self.isdir.append(stat_mod.S_ISDIR(st["st_mode"]))
+            return ("open", len(self.fds) - 1)
+        if not self.fds and kind not in (
+            "mkdir", "rmdir", "unlink", "rename", "readdir", "stat"
+        ):
+            return ("skip", None)
+        if kind == "close":
+            i = args[0] % len(self.fds)
+            fs.close(self.fds.pop(i))
+            self.isdir.pop(i)
+            return ("close", None)
+        if kind == "dup":
+            i = args[0] % len(self.fds)
+            self.fds.append(fs.dup(self.fds[i]))
+            self.isdir.append(self.isdir[i])
+            return ("dup", None)
+        if kind == "read":
+            i = args[0] % len(self.fds)
+            return ("read", fs.read(self.fds[i], args[1]))
+        if kind == "write":
+            i = args[0] % len(self.fds)
+            return ("write", fs.write(self.fds[i], _payload(args[1])))
+        if kind == "pread":
+            i = args[0] % len(self.fds)
+            return ("pread", fs.pread(self.fds[i], args[1], args[2]))
+        if kind == "pwrite":
+            i = args[0] % len(self.fds)
+            return ("pwrite", fs.pwrite(self.fds[i], _payload(args[1]), args[2]))
+        if kind == "lseek":
+            i = args[0] % len(self.fds)
+            posn = fs.lseek(self.fds[i], args[1], args[2])
+            # a real directory's st_size is fs-specific: don't compare
+            # positions seeked relative to it
+            return ("lseek", None if self.isdir[i] else posn)
+        if kind == "ftruncate":
+            i = args[0] % len(self.fds)
+            fs.ftruncate(self.fds[i], args[1])
+            return ("ftruncate", None)
+        if kind == "mkdir":
+            fs.mkdir(self.path(args[0]))
+            return ("mkdir", None)
+        if kind == "rmdir":
+            fs.rmdir(self.path(args[0]))
+            return ("rmdir", None)
+        if kind == "unlink":
+            fs.unlink(self.path(args[0]))
+            return ("unlink", None)
+        if kind == "rename":
+            fs.rename(self.path(args[0]), self.path(args[1]))
+            return ("rename", None)
+        if kind == "readdir":
+            return ("readdir", sorted(fs.readdir(self.path(args[0]))))
+        if kind == "stat":
+            s = fs.stat(self.path(args[0]))
+            d = stat_mod.S_ISDIR(s["st_mode"])
+            return ("stat", (d, None if d else s["st_size"]))
+        raise AssertionError(kind)
+
+
+class _Real:
+    """Applies the same ops through ``os.*`` against a real temp dir."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.fds = []
+        self.isdir = []
+
+    def path(self, i):
+        return os.path.join(self.root, PATHS[i])
+
+    def run(self, o):
+        kind, args = o[0], o[1:]
+        if kind == "open":
+            fd = os.open(self.path(args[0]), args[1])
+            self.fds.append(fd)
+            self.isdir.append(stat_mod.S_ISDIR(os.fstat(fd).st_mode))
+            return ("open", len(self.fds) - 1)
+        if not self.fds and kind not in (
+            "mkdir", "rmdir", "unlink", "rename", "readdir", "stat"
+        ):
+            return ("skip", None)
+        if kind == "close":
+            i = args[0] % len(self.fds)
+            os.close(self.fds.pop(i))
+            self.isdir.pop(i)
+            return ("close", None)
+        if kind == "dup":
+            i = args[0] % len(self.fds)
+            self.fds.append(os.dup(self.fds[i]))
+            self.isdir.append(self.isdir[i])
+            return ("dup", None)
+        if kind == "read":
+            i = args[0] % len(self.fds)
+            return ("read", os.read(self.fds[i], args[1]))
+        if kind == "write":
+            i = args[0] % len(self.fds)
+            return ("write", os.write(self.fds[i], _payload(args[1])))
+        if kind == "pread":
+            i = args[0] % len(self.fds)
+            return ("pread", os.pread(self.fds[i], args[1], args[2]))
+        if kind == "pwrite":
+            i = args[0] % len(self.fds)
+            return ("pwrite", os.pwrite(self.fds[i], _payload(args[1]), args[2]))
+        if kind == "lseek":
+            i = args[0] % len(self.fds)
+            posn = os.lseek(self.fds[i], args[1], args[2])
+            return ("lseek", None if self.isdir[i] else posn)
+        if kind == "ftruncate":
+            i = args[0] % len(self.fds)
+            os.ftruncate(self.fds[i], args[1])
+            return ("ftruncate", None)
+        if kind == "mkdir":
+            os.mkdir(self.path(args[0]))
+            return ("mkdir", None)
+        if kind == "rmdir":
+            os.rmdir(self.path(args[0]))
+            return ("rmdir", None)
+        if kind == "unlink":
+            os.unlink(self.path(args[0]))
+            return ("unlink", None)
+        if kind == "rename":
+            os.rename(self.path(args[0]), self.path(args[1]))
+            return ("rename", None)
+        if kind == "readdir":
+            return ("readdir", sorted(os.listdir(self.path(args[0]))))
+        if kind == "stat":
+            s = os.stat(self.path(args[0]))
+            d = stat_mod.S_ISDIR(s.st_mode)
+            return ("stat", (d, None if d else s.st_size))
+        raise AssertionError(kind)
+
+    def cleanup(self):
+        for fd in self.fds:
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+
+
+def _outcome(side, o):
+    try:
+        return side.run(o)
+    except OSError as e:
+        return ("errno", e.errno)
+
+
+def _run_trace(local: LocalServer, ops) -> None:
+    """Replay one op trace against FaaSFS (strict) and a real temp dir;
+    every outcome (value or errno) must match. Commits at the end, so
+    the backend's apply path runs too."""
+    n = next(_case)
+    root = f"{MOUNT}/case{n}"
+    txn = local.begin()
+    fs = FaaSFS(txn, strict=True)
+    fs.mkdir(root)
+    ours = _Ours(fs, root)
+    realroot = tempfile.mkdtemp(prefix="faasfs-oracle-")
+    real = _Real(realroot)
+    try:
+        for o in ops:
+            a = _outcome(ours, o)
+            b = _outcome(real, o)
+            assert a == b, f"divergence on {o}: faasfs={a} real={b}"
+        txn.commit()
+    finally:
+        real.cleanup()
+        shutil.rmtree(realroot, ignore_errors=True)
+
+
+def _random_op(rng: random.Random):
+    path_i = rng.randrange(len(PATHS))
+    fd_i = rng.randrange(8)
+    size = rng.randrange(3 * BLOCK + 1)
+    off = rng.randrange(-1, 4 * BLOCK)
+    kind = rng.choice([
+        "open", "open", "open", "close", "dup", "read", "write", "write",
+        "pread", "pwrite", "pwrite", "lseek", "ftruncate", "mkdir", "mkdir",
+        "rmdir", "unlink", "rename", "readdir", "stat",
+    ])
+    if kind == "open":
+        return ("open", path_i, rng.choice(ACC) | rng.choice(EXTRA))
+    if kind in ("close", "dup"):
+        return (kind, fd_i)
+    if kind in ("read", "write"):
+        return (kind, fd_i, size)
+    if kind in ("pread", "pwrite"):
+        return (kind, fd_i, size, off)
+    if kind == "lseek":
+        return ("lseek", fd_i, off, rng.choice([0, 1, 2]))
+    if kind == "ftruncate":
+        return ("ftruncate", fd_i, off)
+    if kind == "rename":
+        return ("rename", path_i, rng.randrange(len(PATHS)))
+    return (kind, path_i)
+
+
+# hand-picked traces pinning the trickiest errno/ordering semantics;
+# these run everywhere (no hypothesis needed)
+FIXED_TRACES = [
+    # access modes + O_TRUNC-on-O_RDONLY + EBADF
+    [("open", 0, os.O_CREAT | os.O_RDWR), ("write", 0, 20), ("close", 0),
+     ("open", 0, os.O_RDONLY | os.O_TRUNC), ("stat", 0), ("write", 0, 4),
+     ("read", 0, 8)],
+    # dirs: EISDIR / ENOTDIR / ENOTEMPTY / rmdir / readdir
+    [("mkdir", 2), ("open", 3, os.O_CREAT), ("open", 2, os.O_RDWR),
+     ("open", 2, os.O_RDONLY), ("read", 0, 4), ("ftruncate", 0, 4),
+     ("rmdir", 2), ("unlink", 3), ("readdir", 2), ("rmdir", 2),
+     ("rmdir", 2), ("readdir", 2)],
+    # strict paths: missing parents, paths through files
+    [("open", 5, os.O_CREAT), ("mkdir", 4), ("mkdir", 2),
+     ("mkdir", 4), ("open", 5, os.O_CREAT | os.O_WRONLY), ("write", 0, 10),
+     ("open", 6, os.O_CREAT), ("mkdir", 6), ("stat", 5)],
+    # rename: replace, same-path, onto dir, subtree ordering
+    [("open", 0, os.O_CREAT | os.O_RDWR), ("write", 0, 9), ("close", 0),
+     ("open", 1, os.O_CREAT), ("rename", 0, 1), ("rename", 0, 0),
+     ("rename", 1, 1), ("mkdir", 2), ("rename", 1, 2), ("rename", 2, 1),
+     ("stat", 1), ("readdir", 2)],
+    # unlinked-but-open file keeps contents; stat path is gone
+    [("open", 0, os.O_CREAT | os.O_RDWR), ("write", 0, 24), ("lseek", 0, 0, 0),
+     ("unlink", 0), ("read", 0, 24), ("stat", 0), ("write", 0, 4),
+     ("pread", 0, 28, 0)],
+    # dup shares offset; close is per-fd; double close
+    [("open", 0, os.O_CREAT | os.O_RDWR), ("write", 0, 10), ("dup", 0),
+     ("lseek", 0, 2, 0), ("read", 1, 4), ("read", 0, 2), ("close", 0),
+     ("read", 0, 3), ("close", 0), ("close", 0)],
+    # sparse writes, zero fill, truncate-regrow, SEEK_END
+    [("open", 1, os.O_CREAT | os.O_RDWR), ("pwrite", 0, 40, 0),
+     ("pwrite", 0, 1, 60), ("lseek", 0, -5, 2), ("read", 0, 10),
+     ("ftruncate", 0, 13), ("pread", 0, 30, 0), ("pwrite", 0, 3, 29),
+     ("pread", 0, 40, 0), ("ftruncate", 0, -1), ("lseek", 0, -1, 0)],
+]
+
+
+@pytest.fixture(scope="function")
+def oracle_local(backend_factory):
+    return LocalServer(backend_factory(block_size=BLOCK))
+
+
+def test_differential_oracle_fixed_traces(oracle_local):
+    for trace in FIXED_TRACES:
+        _run_trace(oracle_local, trace)
+
+
+def test_differential_oracle_seeded_random(oracle_local):
+    rng = random.Random(0xFAA5)
+    for _ in range(40):
+        _run_trace(
+            oracle_local, [_random_op(rng) for _ in range(rng.randrange(4, 15))]
+        )
+
+
+def test_differential_oracle_hypothesis(oracle_local):
+    """Hypothesis-driven search (CI): random traces with shrinking."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    path_i = st.integers(0, len(PATHS) - 1)
+    fd_i = st.integers(0, 7)
+    size = st.integers(0, 3 * BLOCK)
+    off = st.integers(-1, 4 * BLOCK)
+    flags = st.builds(lambda a, e: a | e, st.sampled_from(ACC),
+                      st.sampled_from(EXTRA))
+    op = st.one_of(
+        st.tuples(st.just("open"), path_i, flags),
+        st.tuples(st.just("close"), fd_i),
+        st.tuples(st.just("dup"), fd_i),
+        st.tuples(st.just("read"), fd_i, size),
+        st.tuples(st.just("write"), fd_i, size),
+        st.tuples(st.just("pread"), fd_i, size, off),
+        st.tuples(st.just("pwrite"), fd_i, size, off),
+        st.tuples(st.just("lseek"), fd_i, off, st.sampled_from([0, 1, 2])),
+        st.tuples(st.just("ftruncate"), fd_i, off),
+        st.tuples(st.just("mkdir"), path_i),
+        st.tuples(st.just("rmdir"), path_i),
+        st.tuples(st.just("unlink"), path_i),
+        st.tuples(st.just("rename"), path_i, path_i),
+        st.tuples(st.just("readdir"), path_i),
+        st.tuples(st.just("stat"), path_i),
+    )
+
+    @settings(
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(ops=st.lists(op, max_size=14))
+    def inner(ops):
+        _run_trace(oracle_local, ops)
+
+    inner()

@@ -1,0 +1,590 @@
+"""Errno-faithful VFS semantics: real directories, access modes, dup,
+vectored I/O, full stat, and the transactional directory invariants
+(rmdir/readdir vs concurrent create)."""
+import errno
+
+import pytest
+
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.posix import (
+    LOCK_EX,
+    LOCK_SH,
+    O_APPEND,
+    O_CREAT,
+    O_RDONLY,
+    O_RDWR,
+    O_TRUNC,
+    O_WRONLY,
+    SEEK_END,
+    SEEK_SET,
+    FaaSFS,
+)
+from repro.core.types import Conflict, Exists, NotFound
+
+
+@pytest.fixture
+def local(backend_factory):
+    return LocalServer(backend_factory(block_size=16))
+
+
+def _fs(local, strict=True):
+    txn = local.begin()
+    return txn, FaaSFS(txn, strict=strict)
+
+
+def _errno_of(exc_info):
+    return exc_info.value.errno
+
+
+# --------------------------------------------------------------------------- #
+# satellite bugfixes: EBADF on close, EINVAL on bad lseek
+# --------------------------------------------------------------------------- #
+def test_close_unknown_fd_is_ebadf(local):
+    txn, fs = _fs(local)
+    with pytest.raises(OSError) as ei:
+        fs.close(99)
+    assert _errno_of(ei) == errno.EBADF
+    txn.abort()
+
+
+def test_double_close_is_ebadf(local):
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/a", O_CREAT | O_RDWR)
+    fs.close(fd)
+    with pytest.raises(OSError) as ei:
+        fs.close(fd)
+    assert _errno_of(ei) == errno.EBADF
+    txn.abort()
+
+
+def test_lseek_negative_result_is_einval(local):
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/a", O_CREAT | O_RDWR)
+    fs.write(fd, b"12345678")
+    with pytest.raises(OSError) as ei:
+        fs.lseek(fd, -100, SEEK_END)
+    assert _errno_of(ei) == errno.EINVAL
+    with pytest.raises(OSError) as ei:
+        fs.lseek(fd, -1, SEEK_SET)
+    assert _errno_of(ei) == errno.EINVAL
+    with pytest.raises(OSError) as ei:
+        fs.lseek(fd, 0, 7)  # bad whence
+    assert _errno_of(ei) == errno.EINVAL
+    # position is unchanged after a failed seek
+    assert fs.lseek(fd, 0, 1) == 8
+    txn.abort()
+
+
+# --------------------------------------------------------------------------- #
+# access modes
+# --------------------------------------------------------------------------- #
+def test_access_modes_enforced(local):
+    txn, fs = _fs(local, strict=True)
+    fd = fs.open("/mnt/tsfs/m", O_CREAT | O_WRONLY)
+    assert fs.write(fd, b"data") == 4
+    with pytest.raises(OSError) as ei:
+        fs.read(fd, 1)
+    assert _errno_of(ei) == errno.EBADF
+    ro = fs.open("/mnt/tsfs/m", O_RDONLY)
+    assert fs.pread(ro, 4, 0) == b"data"
+    with pytest.raises(OSError) as ei:
+        fs.write(ro, b"x")
+    assert _errno_of(ei) == errno.EBADF
+    with pytest.raises(OSError) as ei:
+        fs.ftruncate(ro, 0)
+    assert _errno_of(ei) == errno.EINVAL
+    txn.commit()
+
+
+def test_lenient_mode_keeps_legacy_bare_open_writable(local):
+    txn, fs = _fs(local, strict=False)
+    fd = fs.open("/mnt/tsfs/legacy", O_CREAT)  # no access mode given
+    assert fs.write(fd, b"ok") == 2
+    txn.commit()
+
+
+# --------------------------------------------------------------------------- #
+# errno-faithful errors double as the legacy exceptions
+# --------------------------------------------------------------------------- #
+def test_errors_are_oserror_subclasses_and_legacy_types(local):
+    txn, fs = _fs(local)
+    with pytest.raises(FileNotFoundError) as ei:
+        fs.open("/mnt/tsfs/nope")
+    assert _errno_of(ei) == errno.ENOENT
+    assert isinstance(ei.value, NotFound)  # legacy callers still catch this
+    txn.abort()
+
+
+def test_exists_eexist(local):
+    import os as _os
+
+    txn, fs = _fs(local)
+    fs.open("/mnt/tsfs/x", O_CREAT | O_RDWR)
+    with pytest.raises(FileExistsError) as ei:
+        fs.open("/mnt/tsfs/x", O_CREAT | _os.O_EXCL)
+    assert _errno_of(ei) == errno.EEXIST
+    assert isinstance(ei.value, Exists)
+    txn.abort()
+
+
+# --------------------------------------------------------------------------- #
+# real directories
+# --------------------------------------------------------------------------- #
+def test_mkdir_readdir_rmdir_roundtrip(local):
+    txn, fs = _fs(local)
+    fs.mkdir("/mnt/tsfs/d")
+    fs.mkdir("/mnt/tsfs/d/sub")
+    fd = fs.open("/mnt/tsfs/d/f", O_CREAT | O_RDWR)
+    fs.write(fd, b"x")
+    assert fs.readdir("/mnt/tsfs/d") == ["f", "sub"]
+    st = fs.stat("/mnt/tsfs/d")
+    import stat as stat_mod
+
+    assert stat_mod.S_ISDIR(st["st_mode"])
+    with pytest.raises(OSError) as ei:
+        fs.rmdir("/mnt/tsfs/d")
+    assert _errno_of(ei) == errno.ENOTEMPTY
+    fs.unlink("/mnt/tsfs/d/f")
+    fs.rmdir("/mnt/tsfs/d/sub")
+    fs.rmdir("/mnt/tsfs/d")
+    assert not fs.exists("/mnt/tsfs/d")
+    txn.commit()
+
+
+def test_dir_errnos(local):
+    txn, fs = _fs(local)
+    fs.mkdir("/mnt/tsfs/d")
+    fd = fs.open("/mnt/tsfs/f", O_CREAT | O_RDWR)
+    fs.write(fd, b"data")
+    # EISDIR family
+    with pytest.raises(IsADirectoryError):
+        fs.open("/mnt/tsfs/d", O_RDWR)
+    with pytest.raises(IsADirectoryError):
+        fs.open("/mnt/tsfs/d", O_CREAT)
+    with pytest.raises(IsADirectoryError):
+        fs.unlink("/mnt/tsfs/d")
+    dfd = fs.open("/mnt/tsfs/d", O_RDONLY)
+    with pytest.raises(IsADirectoryError):
+        fs.read(dfd, 1)
+    # ENOTDIR family
+    with pytest.raises(NotADirectoryError):
+        fs.open("/mnt/tsfs/f/sub", O_CREAT)
+    with pytest.raises(NotADirectoryError):
+        fs.readdir("/mnt/tsfs/f")
+    with pytest.raises(NotADirectoryError):
+        fs.rmdir("/mnt/tsfs/f")
+    # strict mode: missing intermediate dirs are ENOENT, not implicit
+    with pytest.raises(FileNotFoundError):
+        fs.open("/mnt/tsfs/missing/child", O_CREAT)
+    with pytest.raises(FileExistsError):
+        fs.mkdir("/mnt/tsfs/d")
+    txn.abort()
+
+
+def test_lenient_mode_materializes_ancestors_as_real_dirs(local):
+    txn, fs = _fs(local, strict=False)
+    fd = fs.open("/mnt/tsfs/a/b/c", O_CREAT)
+    fs.write(fd, b"deep")
+    assert fs.readdir("/mnt/tsfs/a") == ["b"]
+    assert fs.readdir("/mnt/tsfs/a/b") == ["c"]
+    import stat as stat_mod
+
+    assert stat_mod.S_ISDIR(fs.stat("/mnt/tsfs/a")["st_mode"])
+    txn.commit()
+
+
+def test_makedirs(local):
+    txn, fs = _fs(local, strict=True)
+    fs.makedirs("/mnt/tsfs/p/q/r")
+    assert fs.readdir("/mnt/tsfs/p/q") == ["r"]
+    with pytest.raises(FileExistsError):
+        fs.makedirs("/mnt/tsfs/p/q/r")
+    fs.makedirs("/mnt/tsfs/p/q/r", exist_ok=True)
+    txn.commit()
+
+
+# --------------------------------------------------------------------------- #
+# rename semantics
+# --------------------------------------------------------------------------- #
+def test_rename_replaces_existing_file(local):
+    txn, fs = _fs(local)
+    a = fs.open("/mnt/tsfs/a", O_CREAT | O_RDWR)
+    fs.write(a, b"AAA")
+    b = fs.open("/mnt/tsfs/b", O_CREAT | O_RDWR)
+    fs.write(b, b"BBB")
+    fs.rename("/mnt/tsfs/a", "/mnt/tsfs/b")
+    assert not fs.exists("/mnt/tsfs/a")
+    fd = fs.open("/mnt/tsfs/b", O_RDONLY)
+    assert fs.pread(fd, 10, 0) == b"AAA"
+    txn.commit()
+
+
+def test_rename_moves_directory_subtree(local):
+    txn, fs = _fs(local)
+    fs.makedirs("/mnt/tsfs/src/deep")
+    fd = fs.open("/mnt/tsfs/src/deep/f", O_CREAT | O_RDWR)
+    fs.write(fd, b"payload")
+    fs.rename("/mnt/tsfs/src", "/mnt/tsfs/dst")
+    assert not fs.exists("/mnt/tsfs/src")
+    assert fs.readdir("/mnt/tsfs/dst") == ["deep"]
+    fd = fs.open("/mnt/tsfs/dst/deep/f", O_RDONLY)
+    assert fs.pread(fd, 7, 0) == b"payload"
+    txn.commit()
+
+
+def test_rename_errnos(local):
+    txn, fs = _fs(local)
+    fs.mkdir("/mnt/tsfs/d")
+    fs.mkdir("/mnt/tsfs/full")
+    fs.open("/mnt/tsfs/full/x", O_CREAT)
+    fs.open("/mnt/tsfs/f", O_CREAT)
+    with pytest.raises(FileNotFoundError):
+        fs.rename("/mnt/tsfs/nope", "/mnt/tsfs/g")
+    with pytest.raises(IsADirectoryError):
+        fs.rename("/mnt/tsfs/f", "/mnt/tsfs/d")
+    with pytest.raises(NotADirectoryError):
+        fs.rename("/mnt/tsfs/d", "/mnt/tsfs/f")
+    with pytest.raises(OSError) as ei:
+        fs.rename("/mnt/tsfs/d", "/mnt/tsfs/full")
+    assert _errno_of(ei) == errno.ENOTEMPTY
+    with pytest.raises(OSError) as ei:
+        fs.rename("/mnt/tsfs/d", "/mnt/tsfs/d/inner")
+    assert _errno_of(ei) == errno.EINVAL
+    txn.abort()
+
+
+# --------------------------------------------------------------------------- #
+# dup / dup2 share one open-file description (offset)
+# --------------------------------------------------------------------------- #
+def test_dup_shares_offset(local):
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/a", O_CREAT | O_RDWR)
+    fs.write(fd, b"hello world")
+    fs.lseek(fd, 0)
+    d = fs.dup(fd)
+    assert fs.read(fd, 5) == b"hello"
+    assert fs.read(d, 6) == b" world"  # shared position advanced
+    fs.close(fd)
+    assert fs.read(d, 1) == b""        # dup survives the original's close
+    fd2 = fs.dup2(d, 40)
+    assert fs.lseek(fd2, 0, 1) == 11
+    assert fs.dup2(d, 40) == 40
+    txn.commit()
+
+
+# --------------------------------------------------------------------------- #
+# full stat: commit-timestamp mtime/ctime, kind, ino
+# --------------------------------------------------------------------------- #
+def test_stat_timestamps_follow_commits(local):
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/t", O_CREAT | O_RDWR)
+    fs.write(fd, b"0123456789")
+    txn.commit()
+
+    txn, fs = _fs(local)
+    st1 = fs.stat("/mnt/tsfs/t")
+    assert st1["st_size"] == 10
+    assert st1["st_mtime"] == st1["st_ctime"] > 0
+    txn.commit()
+
+    # in-place overwrite: mtime advances, ctime (inode change) does not
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/t", O_RDWR)
+    fs.pwrite(fd, b"X", 0)
+    txn.commit()
+    txn, fs = _fs(local)
+    st2 = fs.stat("/mnt/tsfs/t")
+    assert st2["st_mtime"] > st1["st_mtime"]
+    assert st2["st_ctime"] == st1["st_ctime"]
+    assert st2["st_size"] == 10
+    txn.commit()
+
+    # extension: both advance (length is an inode change)
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/t", O_RDWR | O_APPEND)
+    fs.write(fd, b"more")
+    txn.commit()
+    txn, fs = _fs(local)
+    st3 = fs.stat("/mnt/tsfs/t")
+    assert st3["st_mtime"] > st2["st_mtime"]
+    assert st3["st_ctime"] > st2["st_ctime"]
+    assert st3["st_size"] == 14
+    txn.commit()
+
+
+def test_inplace_write_does_not_conflict_with_stat_reader(backend_factory):
+    """The mtime-only touch must NOT bump the meta version: a reader
+    that stat'ed the file concurrently with an in-place writer commits
+    fine (exactly the pre-PR4 concurrency profile)."""
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    ta = a.begin()
+    fa = FaaSFS(ta)
+    fd = fa.open("/mnt/tsfs/shared", O_CREAT | O_RDWR)
+    fa.write(fd, b"0123456789abcdef" * 2)
+    ta.commit()
+
+    tb = b.begin()
+    fb = FaaSFS(tb)
+    st = fb.stat("/mnt/tsfs/shared")
+    assert st["st_size"] == 32
+    fd2 = fb.open("/mnt/tsfs/other", O_CREAT | O_RDWR)
+    fb.write(fd2, b"decision")
+
+    ta2 = a.begin()
+    fa2 = FaaSFS(ta2)
+    fd3 = fa2.open("/mnt/tsfs/shared", O_RDWR)
+    fa2.pwrite(fd3, b"X", 0)  # in-place: length unchanged
+    ta2.commit()
+
+    tb.commit()  # must NOT conflict
+
+
+# --------------------------------------------------------------------------- #
+# vectored I/O: a whole iovec is ONE fetch_blocks round trip
+# --------------------------------------------------------------------------- #
+class _CountingBackend:
+    """Transparent proxy counting fetch_blocks round trips."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.fetch_blocks_calls = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def fetch_blocks(self, keys, at_ts=None):
+        self.fetch_blocks_calls += 1
+        return self.inner.fetch_blocks(keys, at_ts)
+
+
+def test_preadv_is_one_fetch_blocks_rpc():
+    be = _CountingBackend(BackendService(block_size=16))
+    writer = LocalServer(be)
+    txn = writer.begin()
+    fs = FaaSFS(txn)
+    fd = fs.open("/mnt/tsfs/vec", O_CREAT | O_RDWR)
+    data = bytes(range(128))
+    fs.pwrite(fd, data, 0)  # 8 blocks of 16
+    txn.commit()
+
+    cold = LocalServer(be)  # fresh cache: every block is a miss
+    txn = cold.begin()
+    fs = FaaSFS(txn)
+    fd = fs.open("/mnt/tsfs/vec", O_RDONLY)
+    be.fetch_blocks_calls = 0
+    out = fs.preadv(fd, [10, 30, 50, 20], 4)  # 4 extents over 7 blocks
+    assert b"".join(out) == data[4:114]
+    assert [len(b) for b in out] == [10, 30, 50, 20]
+    assert be.fetch_blocks_calls == 1  # the whole iovec: ONE round trip
+    txn.commit()
+
+
+def test_pwritev_and_readv(local):
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/wv", O_CREAT | O_RDWR)
+    n = fs.pwritev(fd, [b"abc", b"def", b"ghi"], 2)
+    assert n == 9
+    assert fs.pread(fd, 11, 0) == b"\0\0abcdefghi"
+    fs.lseek(fd, 2)
+    assert fs.readv(fd, [3, 3]) == [b"abc", b"def"]
+    assert fs.lseek(fd, 0, 1) == 8
+    txn.commit()
+
+
+# --------------------------------------------------------------------------- #
+# transactional directory invariants (acceptance gates)
+# --------------------------------------------------------------------------- #
+def test_rmdir_aborts_on_concurrent_create(backend_factory):
+    """A create committing inside the directory after the remover read it
+    must abort the remover at commit (namespace-generation conflict)."""
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    ta = a.begin()
+    FaaSFS(ta).mkdir("/mnt/tsfs/d")
+    ta.commit()
+
+    remover = a.begin()
+    fr = FaaSFS(remover)
+    fr.rmdir("/mnt/tsfs/d")  # saw it empty
+
+    creator = b.begin()
+    fc = FaaSFS(creator)
+    fc.open("/mnt/tsfs/d/newfile", O_CREAT)
+    creator.commit()
+
+    with pytest.raises(Conflict):
+        remover.commit()
+
+
+def test_create_aborts_when_dir_removed_concurrently(backend_factory):
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    ta = a.begin()
+    FaaSFS(ta).mkdir("/mnt/tsfs/d")
+    ta.commit()
+
+    creator = b.begin()
+    fc = FaaSFS(creator)
+    fc.open("/mnt/tsfs/d/newfile", O_CREAT)
+
+    remover = a.begin()
+    FaaSFS(remover).rmdir("/mnt/tsfs/d")
+    remover.commit()
+
+    with pytest.raises(Conflict):
+        creator.commit()
+
+
+def test_readdir_phantom_protection(backend_factory):
+    """A listing of a real directory now conflicts with a concurrent
+    create of a brand-new name (the classic phantom the client layer
+    alone cannot see)."""
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    ta = a.begin()
+    FaaSFS(ta).mkdir("/mnt/tsfs/d")
+    ta.commit()
+
+    lister = a.begin()
+    fl = FaaSFS(lister)
+    assert fl.readdir("/mnt/tsfs/d") == []
+    fd = fl.open("/mnt/tsfs/manifest", O_CREAT | O_RDWR)
+    fl.write(fd, b"empty")  # decision derived from the (empty) listing
+
+    creator = b.begin()
+    FaaSFS(creator).open("/mnt/tsfs/d/phantom", O_CREAT)
+    creator.commit()
+
+    with pytest.raises(Conflict):
+        lister.commit()
+
+
+def test_concurrent_creators_in_one_dir_do_not_conflict(backend_factory):
+    """Creators pin the parent with an existence predicate, not a meta
+    read — two functions populating one directory both commit."""
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    ta = a.begin()
+    FaaSFS(ta).mkdir("/mnt/tsfs/d")
+    ta.commit()
+
+    t1, t2 = a.begin(), b.begin()
+    FaaSFS(t1).open("/mnt/tsfs/d/one", O_CREAT)
+    FaaSFS(t2).open("/mnt/tsfs/d/two", O_CREAT)
+    t1.commit()
+    t2.commit()  # no Conflict
+
+    t3 = a.begin()
+    assert FaaSFS(t3).readdir("/mnt/tsfs/d") == ["one", "two"]
+    t3.commit()
+
+
+# --------------------------------------------------------------------------- #
+# flock through the public lock API
+# --------------------------------------------------------------------------- #
+def test_flock_shared_readers_do_not_conflict(backend_factory):
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    ta = a.begin()
+    FaaSFS(ta).open("/mnt/tsfs/lockfile", O_CREAT)
+    ta.commit()
+
+    t1, t2 = a.begin(), b.begin()
+    f1, f2 = FaaSFS(t1), FaaSFS(t2)
+    fd1 = f1.open("/mnt/tsfs/lockfile")
+    fd2 = f2.open("/mnt/tsfs/lockfile")
+    f1.flock(fd1, LOCK_SH)
+    f2.flock(fd2, LOCK_SH)
+    t1.commit()
+    t2.commit()  # shared-vs-shared: fine
+
+
+def test_flock_exclusive_vs_shared_conflicts(backend_factory):
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    ta = a.begin()
+    FaaSFS(ta).open("/mnt/tsfs/lockfile", O_CREAT)
+    ta.commit()
+
+    t1, t2 = a.begin(), b.begin()
+    f1, f2 = FaaSFS(t1), FaaSFS(t2)
+    fd1 = f1.open("/mnt/tsfs/lockfile")
+    fd2 = f2.open("/mnt/tsfs/lockfile")
+    f1.flock(fd1, LOCK_EX)
+    f2.flock(fd2, LOCK_SH)
+    t1.commit()
+    with pytest.raises(Conflict):
+        t2.commit()
+
+
+def test_flock_does_not_touch_mtime(local):
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/lf", O_CREAT)
+    txn.commit()
+    txn, fs = _fs(local)
+    st1 = fs.stat("/mnt/tsfs/lf")
+    txn.commit()
+
+    txn, fs = _fs(local)
+    fd = fs.open("/mnt/tsfs/lf")
+    fs.flock(fd, LOCK_EX)
+    txn.commit()
+
+    txn, fs = _fs(local)
+    assert fs.stat("/mnt/tsfs/lf")["st_mtime"] == st1["st_mtime"]
+    txn.commit()
+
+
+def test_flock_legacy_positional_bool(backend_factory):
+    """flock(fd, True) predates the LOCK_* op form; True == 1 == LOCK_SH
+    numerically, so the bool must be special-cased to stay EXCLUSIVE."""
+    be = backend_factory(block_size=16)
+    a, b = LocalServer(be), LocalServer(be)
+
+    ta = a.begin()
+    FaaSFS(ta).open("/mnt/tsfs/lockfile", O_CREAT)
+    ta.commit()
+
+    t1, t2 = a.begin(), b.begin()
+    f1, f2 = FaaSFS(t1), FaaSFS(t2)
+    f1.flock(f1.open("/mnt/tsfs/lockfile"), True)   # legacy exclusive
+    f2.flock(f2.open("/mnt/tsfs/lockfile"), False)  # legacy shared
+    t1.commit()
+    with pytest.raises(Conflict):
+        t2.commit()
+
+
+def test_flock_exclusive_refused_in_read_only_txn(local):
+    txn, fs = _fs(local)
+    fs.open("/mnt/tsfs/rolock", O_CREAT)
+    txn.commit()
+
+    from repro.core.types import TxnStateError
+
+    ro = local.begin(read_only=True)
+    fs = FaaSFS(ro)
+    fd = fs.open("/mnt/tsfs/rolock")
+    fs.flock(fd, LOCK_SH)          # shared: fine at a snapshot
+    with pytest.raises(TxnStateError):
+        fs.flock(fd, LOCK_EX)      # exclusive is a write
+    ro.abort()
+
+
+def test_pread_negative_offset_beats_bad_fd(local):
+    txn, fs = _fs(local)
+    with pytest.raises(OSError) as ei:
+        fs.pread(99, 4, -1)        # EINVAL before the fd lookup (Linux)
+    assert _errno_of(ei) == errno.EINVAL
+    with pytest.raises(OSError) as ei:
+        fs.pwrite(99, b"x", -1)
+    assert _errno_of(ei) == errno.EINVAL
+    txn.abort()
