@@ -27,6 +27,13 @@ Five questions, mirroring the paper's EC2 deployment concerns:
      window widens: one fsync per batch instead of per commit is the
      whole durability story under load (fsyncs/commit is reported).
 
+  6. **Recovery time: checkpoint + tail vs full replay.** Recover an
+     N-commit log with and without a checkpoint, at N and 4N. Full
+     replay scales with N; checkpointed recovery must NOT (the gate:
+     checkpointed recovery at 4N stays within ``RECOVER_GATE_RATIO`` of
+     the time at N — restart is O(tail), the paper's cheap-restart
+     premise).
+
 ``--smoke`` shrinks durations/iterations so CI can afford the run; the
 artifact still lands in ``BENCH_remote.json``.
 """
@@ -39,6 +46,7 @@ import threading
 import time
 from typing import List, Tuple
 
+from repro.core import wal as walmod
 from repro.core.api import LatencyInjector
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
@@ -56,14 +64,19 @@ GROUP_WINDOWS_MS = (0.0, 0.5, 2.0)
 READ_CLIENTS = 4                # pooled-vs-pipelined comparison threads
 PIPELINE_WINDOW = 32            # in-flight futures per pipelined worker
 BATCH_FILE_BLOCKS = 16
+RECOVER_COMMITS = 1500          # N for the recovery-time comparison
+RECOVER_TAIL = 20               # post-checkpoint commits left to replay
+RECOVER_GATE_RATIO = 3.0        # ckpt recovery at 4N must stay within
+                                # this factor of the time at N (O(tail))
 
 
 def _smoke() -> None:
     """Shrink knobs so the suite finishes in a few seconds on CI."""
-    global DURATION_S, SEQ_TXNS, GROUP_WINDOWS_MS
+    global DURATION_S, SEQ_TXNS, GROUP_WINDOWS_MS, RECOVER_COMMITS
     DURATION_S = 0.15
     SEQ_TXNS = 60
     GROUP_WINDOWS_MS = (0.0, 2.0)
+    RECOVER_COMMITS = 500
 
 
 def _mk_backend() -> BackendService:
@@ -201,6 +214,33 @@ def read_throughput_pipelined(client: RemoteBackend, keys) -> float:
     return _timed_read_workers(loop)
 
 
+def _build_history(dirpath: str, n_commits: int, checkpoint: bool) -> None:
+    """Write an n-commit WAL history (RMW over 8 files, so state stays
+    small while history grows); with ``checkpoint``, compact once and
+    leave only a RECOVER_TAIL-commit tail to replay. sync_mode="none"
+    keeps the build fast — recovery reads the same bytes either way."""
+    be = BackendService(block_size=BLOCK, policy=CachePolicy.INVALIDATE)
+    wal = walmod.SegmentedWal(dirpath, sync_mode="none")
+    be.set_wal(wal)
+    fids = _mk_files(be, 8, file_bytes=BLOCK, prefix="/rec/f")
+    local = LocalServer(be)
+    tail = RECOVER_TAIL if checkpoint else 0
+    for i in range(n_commits - tail):
+        _rmw(local, fids[i % 8], 0)
+    if checkpoint:
+        walmod.checkpoint_backend(wal, be, epoch=1)
+        for i in range(tail):
+            _rmw(local, fids[i % 8], 0)
+    wal.close()
+
+
+def _recover_ms(dirpath: str) -> Tuple[float, int]:
+    be = BackendService(block_size=BLOCK, policy=CachePolicy.INVALIDATE)
+    t0 = time.perf_counter()
+    summary = walmod.recover_dir(be, dirpath)
+    return (time.perf_counter() - t0) * 1e3, summary["commits"]
+
+
 class _Served:
     """BackendServer + RemoteBackend pair with teardown."""
 
@@ -311,6 +351,41 @@ def run() -> List[str]:
                 f"txn/s fsync/commit={per_commit:.2f}"
             )
             served.close()
+
+    # ---- 6. recovery time: checkpoint+tail vs full replay ---- #
+    times = {}
+    with tempfile.TemporaryDirectory() as wd:
+        for n in (RECOVER_COMMITS, 4 * RECOVER_COMMITS):
+            for ckpt in (False, True):
+                d = os.path.join(wd, f"rec-{n}-{int(ckpt)}")
+                _build_history(d, n, checkpoint=ckpt)
+                ms, replayed = _recover_ms(d)
+                times[(n, ckpt)] = ms
+                tag = "ckpt" if ckpt else "full"
+                rows.append(
+                    f"remote_recover_{tag}_{n},{ms:.1f},"
+                    f"ms replayed={replayed} commits"
+                )
+    ratio = times[(4 * RECOVER_COMMITS, True)] / max(
+        times[(RECOVER_COMMITS, True)], 1e-9
+    )
+    # timer-noise floor: sub-millisecond recoveries can't gate on ratio
+    flat = times[(4 * RECOVER_COMMITS, True)] <= max(
+        RECOVER_GATE_RATIO * times[(RECOVER_COMMITS, True)], 5.0
+    )
+    beats_full = (
+        times[(4 * RECOVER_COMMITS, True)]
+        < times[(4 * RECOVER_COMMITS, False)]
+    )
+    rows.append(
+        f"remote_recover_ckpt_scaling,{ratio:.2f},"
+        f"x at 4x commits (gate <= {RECOVER_GATE_RATIO}: O(tail) not O(N))"
+    )
+    if not (flat and beats_full):
+        raise SystemExit(
+            f"recovery gate failed: checkpointed recovery must not scale "
+            f"with history (ratio={ratio:.2f}, times={times})"
+        )
     return rows
 
 

@@ -43,6 +43,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import defaultdict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
@@ -209,7 +210,18 @@ class _GroupCommitter:
                         p.done.set()  # aborts need no durability barrier
                 # ONE durable-log write (real WAL fsync or simulated cost)
                 # for the whole batch, then acknowledge every commit in it.
-                be._durable_barrier()
+                try:
+                    be._durable_barrier()
+                except BaseException as e:
+                    # fsync failure (WalFailed): the batch applied in
+                    # memory but is NOT durable — every waiter gets the
+                    # typed error instead of an ack, and registration is
+                    # withheld (the commits never become visible to
+                    # begin's sync vector)
+                    for p in committed:
+                        p.error = e
+                        p.done.set()
+                    raise
                 # Sync-vector registration (on_commit_applied) happens only
                 # AFTER the batch is durable: registering before the fsync
                 # would let a racing begin observe a commit a crash could
@@ -548,6 +560,59 @@ class BackendService(BackendAPI):
     def set_wal(self, wal) -> None:
         """Attach a durable log; subsequent commits fsync before acking."""
         self.wal = wal
+
+    # ------------------------------------------------------------------ #
+    # checkpointing: consistent snapshot export/import
+    # ------------------------------------------------------------------ #
+    @contextmanager
+    def freeze(self):
+        """Hold the commit lock so ``export_snapshot`` sees a consistent
+        committed-and-durable state (every commit path holds this lock
+        from apply through its durability barrier) and so a WAL rotation
+        inside the freeze exactly brackets the snapshot."""
+        with self.commit_lock:
+            yield
+
+    def export_snapshot(self) -> Dict:
+        """Wire-packable snapshot of the full shard state — current
+        block/meta/namespace entries, the commit-log tail (cache
+        invalidation scans survive a restart), and the sequencer. Caller
+        holds the commit lock (``freeze``); only references are copied
+        here, serialization happens outside the lock."""
+        blocks, metas, names, next_fid = self.store.export_chains()
+        return {
+            "kind": "mono",
+            "ts": self._ts,
+            "next_fid": next_fid,
+            "blocks": blocks,
+            "metas": metas,
+            "names": names,
+            "log": [
+                (r.ts, list(r.blocks), list(r.meta_files), list(r.names))
+                for r in self._log
+            ],
+        }
+
+    def import_snapshot(self, snap: Dict) -> None:
+        """Rebuild this backend from an ``export_snapshot`` tree (crash
+        recovery, before the WAL tail replays on top)."""
+        if snap.get("kind") != "mono":
+            raise ValueError(
+                f"snapshot kind {snap.get('kind')!r} does not match this "
+                "monolithic backend"
+            )
+        with self.commit_lock:
+            self.store.import_chains(
+                snap["blocks"], snap["metas"], snap["names"], snap["next_fid"]
+            )
+            if snap["ts"] > self._ts:
+                self._ts = snap["ts"]
+            self._log = [
+                CommitRecord(
+                    ts, [tuple(k) for k in blks], list(fids), list(nms)
+                )
+                for ts, blks, fids, nms in snap["log"]
+            ]
 
     # ------------------------------------------------------------------ #
     # WAL crash recovery

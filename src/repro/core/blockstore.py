@@ -257,6 +257,55 @@ class BlockStore:
             return [k for k in self._blocks if k[0] == fid]
 
     # ------------------------------------------------------------------ #
+    # checkpoint export/import: current entries only (chains truncated to
+    # the latest durable version — the undo history is recovery-time
+    # garbage; snapshots older than the checkpoint correctly raise
+    # SnapshotTooOld afterwards via the truncated flag)
+    # ------------------------------------------------------------------ #
+    def export_chains(self):
+        """Wire-packable snapshot of every chain's newest entry. The
+        caller must hold the backend commit lock, so 'newest' is a
+        consistent committed state; values are immutable (bytes /
+        FileMeta-by-value / fid) so only references are copied here —
+        serialization happens outside the lock."""
+        with self._lock:
+            blocks = [
+                (k, v.versions[-1][0], v.versions[-1][1],
+                 v.truncated or len(v.versions) > 1)
+                for k, v in self._blocks.items() if v.versions
+            ]
+            metas = []
+            for fid, v in self._meta.items():
+                if not v.versions:
+                    continue
+                ts, m = v.versions[-1]
+                metas.append((fid, ts, m.length, m.exists, m.kind,
+                              m.mtime_ts, v.truncated or len(v.versions) > 1))
+            names = [
+                (path, v.versions[-1][0], v.versions[-1][1],
+                 v.truncated or len(v.versions) > 1)
+                for path, v in self._names.items() if v.versions
+            ]
+            return blocks, metas, names, self._next_file_id
+
+    def import_chains(self, blocks, metas, names, next_fid) -> None:
+        """Rebuild the store from an ``export_chains`` snapshot: every
+        chain restarts as a single-entry version chain at its original
+        commit timestamp, marked truncated when history was dropped."""
+        with self._lock:
+            for k, ts, data, trunc in blocks:
+                self._blocks[tuple(k)] = Versioned([(ts, data)], bool(trunc))
+            for fid, ts, length, exists, kind, mtime_ts, trunc in metas:
+                self._meta[fid] = Versioned(
+                    [(ts, FileMeta(length, exists, kind, mtime_ts))],
+                    bool(trunc),
+                )
+            for path, ts, fid, trunc in names:
+                self._names[path] = Versioned([(ts, fid)], bool(trunc))
+            if next_fid > self._next_file_id:
+                self._next_file_id = next_fid
+
+    # ------------------------------------------------------------------ #
     # undo (2PC rollback of a partially applied cross-shard commit)
     # ------------------------------------------------------------------ #
     def pop_block(self, key: BlockKey, ts: Timestamp) -> None:

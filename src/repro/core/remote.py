@@ -312,6 +312,11 @@ class _RemoteCore(BackendAPI):
     def ping(self) -> None:
         self._call(wire.T_PING, None)
 
+    def checkpoint(self) -> Dict[str, int]:
+        """Admin op: force a server-side WAL checkpoint + compaction
+        cycle; returns its summary ``{seg, bytes, segments_removed}``."""
+        return self._call(wire.T_CHECKPOINT, None)
+
 
 class RemoteBackend(_RemoteCore):
     """Multiplexed, pipelined transport (the default).

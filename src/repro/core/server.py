@@ -17,10 +17,23 @@ concurrent ``RemoteBackend`` clients over TCP:
     the per-shard fan-out and the reply merge happen server-side, so the
     client pays one round trip, not one per shard or per item.
   * **durability**: pass ``wal_path`` and the server attaches a
-    ``WriteAheadLog`` to the backend — commit acks then imply fsync'd
-    log records. On start, an existing log is crash-recovered first:
-    scan, truncate the torn tail, replay every intact commit record into
-    the fresh backend, resume the sequencers, and bump the epoch.
+    segmented ``SegmentedWal`` directory to the backend — commit acks
+    then imply fsync'd log records. On start the directory is
+    crash-recovered first: load the newest valid checkpoint, replay only
+    the WAL tail after it, truncate the torn tail, resume the
+    sequencers, and bump the epoch. (A pre-existing regular file at
+    ``wal_path`` is served in the legacy single-file layout.)
+  * **bounded recovery**: a background trigger (live-segment bytes or
+    records-since-checkpoint, plus the ``T_CHECKPOINT`` admin op)
+    rotates the log, snapshots the backend under a brief all-commit-lock
+    freeze, serializes + installs the checkpoint concurrently with new
+    commits, and deletes every covered segment — restart cost is
+    O(tail), not O(history).
+  * **pipelining backpressure**: each connection may have at most
+    ``max_inflight_per_conn`` dispatched-but-unreplied blockable
+    requests; past the cap the reader stops draining the socket, so a
+    hostile client flooding ``begin``/``commit`` frames stalls in its
+    own TCP send path instead of growing the worker queue without bound.
   * **fenced file-id allocation**: instead of proxying the coordinator
     counter one id at a time, the server grants *range leases*
     ``(epoch, start, count)``. Each grant is WAL-logged durably before
@@ -91,8 +104,21 @@ class FileIdAllocator:
             self.grants += 1
         return self.epoch, start, count
 
+    def peek_next(self) -> int:
+        """Current allocator position — the fid floor a checkpoint must
+        record. The checkpointer calls this after rotating the WAL, so
+        every lease record a compaction could delete is already counted
+        (grants bump the counter before appending their record)."""
+        with self._mu:
+            return self._next
+
 
 class BackendServer:
+    #: checkpoint trigger defaults: compact once the live segments exceed
+    #: this many bytes (or this many appended records, whichever first)
+    CHECKPOINT_BYTES_DEFAULT = 16 << 20
+    CHECKPOINT_RECORDS_DEFAULT = 50_000
+
     def __init__(
         self,
         backend: BackendAPI,
@@ -101,19 +127,47 @@ class BackendServer:
         wal_path: Optional[str] = None,
         sync_mode: str = "fsync",
         max_workers: int = 16,
+        max_inflight_per_conn: int = 64,
+        checkpoint_bytes: Optional[int] = None,
+        checkpoint_records: Optional[int] = None,
+        checkpoint_interval_s: float = 0.25,
     ):
         self.backend = backend
-        self.wal: Optional[walmod.WriteAheadLog] = None
+        self.wal = None  # WriteAheadLog (legacy file) | SegmentedWal (dir)
         self.recovery: Optional[Dict[str, int]] = None
+        self.max_inflight_per_conn = max(1, int(max_inflight_per_conn))
+        self.checkpoint_bytes = (
+            self.CHECKPOINT_BYTES_DEFAULT if checkpoint_bytes is None
+            else checkpoint_bytes
+        )
+        self.checkpoint_records = (
+            self.CHECKPOINT_RECORDS_DEFAULT if checkpoint_records is None
+            else checkpoint_records
+        )
+        self.checkpoint_interval_s = checkpoint_interval_s
+        self.checkpoints = 0            # completed checkpoint cycles
+        self.checkpoint_failures = 0    # failed background cycles
+        self._ckpt_mu = threading.Lock()  # one checkpoint at a time
+        self._ckpt_appends = 0          # wal.appends at the last checkpoint
+        self._ckpt_thread: Optional[threading.Thread] = None
         epoch, next_fid = 1, 1
         if wal_path is not None:
-            if os.path.exists(wal_path) and os.path.getsize(wal_path) > 0:
-                self.recovery = walmod.recover(backend, wal_path)
+            if os.path.isfile(wal_path):
+                # legacy single-file log: recover + append, no compaction
+                if os.path.getsize(wal_path) > 0:
+                    self.recovery = walmod.recover(backend, wal_path)
+                    epoch = self.recovery["epoch"] + 1
+                    next_fid = self.recovery["fid_floor"]
+                self.wal = walmod.WriteAheadLog(wal_path, sync_mode=sync_mode)
+            else:
+                # segmented directory: newest valid checkpoint + WAL tail
+                self.recovery = walmod.recover_dir(backend, wal_path)
                 epoch = self.recovery["epoch"] + 1
                 next_fid = self.recovery["fid_floor"]
-            self.wal = walmod.WriteAheadLog(wal_path, sync_mode=sync_mode)
+                self.wal = walmod.SegmentedWal(wal_path, sync_mode=sync_mode)
             self.wal.append(("epoch", epoch))
             self.wal.sync()
+            self._ckpt_appends = self.wal.appends
             backend.set_wal(self.wal)  # type: ignore[attr-defined]
         self.epoch = epoch
         self.allocator = FileIdAllocator(self.wal, epoch, next_fid)
@@ -143,7 +197,72 @@ class BackendServer:
         )
         t.start()
         self._accept_thread = t
+        if isinstance(self.wal, walmod.SegmentedWal) and (
+            self.checkpoint_bytes or self.checkpoint_records
+        ):
+            ct = threading.Thread(
+                target=self._ckpt_loop, name="faasfs-ckpt", daemon=True
+            )
+            ct.start()
+            self._ckpt_thread = ct
         return self
+
+    # ------------------------------------------------------------------ #
+    # checkpoint + compaction (the admin op and the background trigger)
+    # ------------------------------------------------------------------ #
+    def run_checkpoint(self) -> Dict[str, int]:
+        """Force one checkpoint + compaction cycle now. Serialized with
+        the background trigger; safe to call while commits are in flight
+        (the commit locks are held only for the O(state) capture and the
+        WAL rotation, not the serialization/fsync)."""
+        wal = self.wal
+        if not isinstance(wal, walmod.SegmentedWal):
+            raise ValueError(
+                "checkpointing requires a segmented WAL directory "
+                "(server started without --wal, or with a legacy "
+                "single-file log)"
+            )
+        with self._ckpt_mu:
+            summary = walmod.checkpoint_backend(
+                wal, self.backend, self.epoch,
+                next_fid_fn=self.allocator.peek_next,
+            )
+            self._ckpt_appends = wal.appends
+            self.checkpoints += 1
+            return summary
+
+    def _ckpt_due(self) -> bool:
+        wal = self.wal
+        if self.checkpoint_records and (
+            wal.appends - self._ckpt_appends >= self.checkpoint_records
+        ):
+            return True
+        if self.checkpoint_bytes and wal.live_bytes() >= self.checkpoint_bytes:
+            return True
+        return False
+
+    def _ckpt_loop(self) -> None:
+        delay = self.checkpoint_interval_s
+        while not self._stop.wait(delay):
+            try:
+                if self._ckpt_due():
+                    self.run_checkpoint()
+                delay = self.checkpoint_interval_s
+            except walmod.WalFailed:
+                return  # poisoned log: no further durability work
+            except Exception as e:
+                # A failed cycle leaves a .tmp at worst (recovery ignores
+                # it) — but each attempt also rotates the log, so retry
+                # with exponential backoff instead of minting a fresh
+                # segment file every tick against e.g. a full disk, and
+                # say so instead of failing silently.
+                self.checkpoint_failures += 1
+                delay = min(max(delay, 0.05) * 2, 30.0)
+                print(
+                    f"faasfs: checkpoint cycle failed ({e!r}); "
+                    f"retrying in {delay:.1f}s",
+                    file=sys.stderr, flush=True,
+                )
 
     def serve_forever(self) -> None:
         self.start()
@@ -154,6 +273,15 @@ class BackendServer:
         allowed to finish (and their replies to be sent) and the WAL is
         fsync'd before any socket is torn down — the clean-SIGTERM path."""
         self._stop.set()
+        # join the checkpoint trigger BEFORE touching the WAL: a tick
+        # that already passed its _stop check must finish (or never
+        # start) its cycle now — a stale daemon thread must not rotate /
+        # install / delete segments after shutdown() returned and a new
+        # incarnation reopened the directory. (_stop.wait wakes sleepers
+        # immediately; the join only ever waits out an in-flight cycle.)
+        ct = self._ckpt_thread
+        if ct is not None and ct is not threading.current_thread():
+            ct.join(timeout=drain_timeout_s)
         try:
             self._lsock.close()
         except OSError:
@@ -181,7 +309,8 @@ class BackendServer:
             except OSError:
                 pass
         if self.wal is not None:
-            self.wal.close()
+            with self._ckpt_mu:  # let a mid-flight checkpoint finish
+                self.wal.close()
 
     # ------------------------------------------------------------------ #
     def _accept_loop(self) -> None:
@@ -211,17 +340,26 @@ class BackendServer:
         }
 
     #: requests that may block (commit-lock waits, group-commit windows,
-    #: WAL fsyncs) run on the worker pool so they cannot head-of-line
-    #: block the fast reads pipelined behind them on the same connection;
-    #: everything else is pure in-memory work handled inline by the
-    #: connection reader — no scheduling hop, and replies to a burst of
-    #: buffered requests coalesce into one send
-    _SLOW_OPS = frozenset((wire.T_BEGIN, wire.T_COMMIT, wire.T_ALLOC_RANGE))
+    #: WAL fsyncs, checkpoint cycles) run on the worker pool so they
+    #: cannot head-of-line block the fast reads pipelined behind them on
+    #: the same connection; everything else is pure in-memory work
+    #: handled inline by the connection reader — no scheduling hop, and
+    #: replies to a burst of buffered requests coalesce into one send
+    _SLOW_OPS = frozenset(
+        (wire.T_BEGIN, wire.T_COMMIT, wire.T_ALLOC_RANGE, wire.T_CHECKPOINT)
+    )
 
     def _serve_conn(self, sock: socket.socket) -> None:
         send_mu = threading.Lock()
         reader = wire.FrameReader(sock)
         outbuf = bytearray()
+        # per-connection backpressure: dispatched-but-unreplied slow ops.
+        # While the count sits at the cap the reader simply stops pulling
+        # bytes off the socket, so the kernel's TCP window fills and the
+        # flood stalls in the CLIENT's send path — bounded worker-queue
+        # growth per connection, no matter how hostile the pipelining.
+        conn_inflight = [0]
+        conn_cv = threading.Condition()
         try:
             wire.send_frame(sock, wire.T_HELLO, self._hello())
             while not self._stop.is_set():
@@ -235,6 +373,19 @@ class BackendServer:
                     outbuf = bytearray()
                 msg_type, req_id, obj = reader.recv_frame()
                 if msg_type in self._SLOW_OPS:
+                    if outbuf and conn_inflight[0] >= self.max_inflight_per_conn:
+                        # don't sit on computed replies while backpressure
+                        # stalls this reader
+                        with send_mu:
+                            sock.sendall(outbuf)
+                        outbuf = bytearray()
+                    with conn_cv:
+                        while (
+                            conn_inflight[0] >= self.max_inflight_per_conn
+                            and not self._stop.is_set()
+                        ):
+                            conn_cv.wait(0.05)
+                        conn_inflight[0] += 1
                     with self._inflight_mu:
                         if self._stop.is_set():
                             break
@@ -242,12 +393,14 @@ class BackendServer:
                     try:
                         self._workers.submit(
                             self._handle_one, sock, send_mu,
-                            msg_type, req_id, obj,
+                            msg_type, req_id, obj, conn_inflight, conn_cv,
                         )
                     except RuntimeError:  # pool shut down mid-race
                         with self._drained:
                             self._inflight -= 1
                             self._drained.notify_all()
+                        with conn_cv:
+                            conn_inflight[0] -= 1
                         break
                     continue
                 try:
@@ -280,6 +433,8 @@ class BackendServer:
         msg_type: int,
         req_id: int,
         obj: Any,
+        conn_inflight: Optional[list] = None,
+        conn_cv: Optional[threading.Condition] = None,
     ) -> None:
         try:
             try:
@@ -292,6 +447,11 @@ class BackendServer:
             except OSError:
                 pass  # connection died while we were computing the reply
         finally:
+            if conn_cv is not None:
+                # reply sent (or dropped): open the connection's window
+                with conn_cv:
+                    conn_inflight[0] -= 1
+                    conn_cv.notify_all()
             with self._drained:
                 self._inflight -= 1
                 self._drained.notify_all()
@@ -352,6 +512,8 @@ class BackendServer:
         if msg_type == wire.T_ALLOC_RANGE:
             client_epoch, count = obj
             return tuple(self.allocator.grant(client_epoch, count))
+        if msg_type == wire.T_CHECKPOINT:
+            return dict(self.run_checkpoint())
         if msg_type == wire.T_STATS:
             return wire.stats_to_obj(be.stats)
         if msg_type == wire.T_LATEST_TS:
@@ -387,7 +549,10 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser(description="FaaSFS backend server")
     p.add_argument("--host", default="127.0.0.1")
     p.add_argument("--port", type=int, default=0)
-    p.add_argument("--wal", default=None, help="durable log path")
+    p.add_argument("--wal", default=None,
+                   help="durable log directory (segmented + checkpointed);"
+                        " an existing regular file is served in the legacy"
+                        " single-file layout")
     p.add_argument("--sync-mode", default="fsync", choices=walmod.SYNC_MODES)
     p.add_argument("--shards", type=int, default=0,
                    help="0 = monolithic backend, N = sharded")
@@ -395,6 +560,20 @@ def main(argv=None) -> None:
     p.add_argument("--policy", default="invalidate")
     p.add_argument("--versions-kept", type=int, default=16)
     p.add_argument("--group-window", type=float, default=0.0)
+    p.add_argument("--checkpoint-bytes", type=int, default=None,
+                   help="compact once live WAL segments exceed this size "
+                        f"(default {BackendServer.CHECKPOINT_BYTES_DEFAULT}; "
+                        "0 disables the size trigger)")
+    p.add_argument("--checkpoint-records", type=int, default=None,
+                   help="compact once this many records were appended since "
+                        "the last checkpoint "
+                        f"(default {BackendServer.CHECKPOINT_RECORDS_DEFAULT};"
+                        " 0 disables the record trigger)")
+    p.add_argument("--checkpoint-interval", type=float, default=0.25,
+                   help="seconds between checkpoint-trigger checks")
+    p.add_argument("--max-inflight", type=int, default=64,
+                   help="per-connection cap on dispatched-but-unreplied "
+                        "blockable requests (pipelining backpressure)")
     args = p.parse_args(argv)
 
     backend = make_backend(
@@ -405,6 +584,10 @@ def main(argv=None) -> None:
     server = BackendServer(
         backend, host=args.host, port=args.port,
         wal_path=args.wal, sync_mode=args.sync_mode,
+        max_inflight_per_conn=args.max_inflight,
+        checkpoint_bytes=args.checkpoint_bytes,
+        checkpoint_records=args.checkpoint_records,
+        checkpoint_interval_s=args.checkpoint_interval,
     )
 
     def _graceful(signum, frame):  # noqa: ARG001 - signal handler shape
@@ -416,8 +599,9 @@ def main(argv=None) -> None:
     signal.signal(signal.SIGINT, _graceful)
 
     recovered = (server.recovery or {}).get("commits", 0)
+    ckpt_seg = (server.recovery or {}).get("ckpt_seg", 0)
     print(f"LISTENING {server.port} epoch={server.epoch} "
-          f"recovered={recovered}", flush=True)
+          f"recovered={recovered} ckpt_seg={ckpt_seg}", flush=True)
     server.serve_forever()
     server.shutdown(drain=True)
     print("SHUTDOWN clean", flush=True)

@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import threading
 import zlib
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -330,6 +331,58 @@ class ShardedBackend(BackendAPI):
         self.wal = wal
         for sh in self.shards:
             sh.wal = wal
+
+    # ------------------------------------------------------------------ #
+    # checkpointing: one snapshot covering every shard + the coordinator
+    # ------------------------------------------------------------------ #
+    @contextmanager
+    def freeze(self):
+        """Hold EVERY shard's commit lock (in shard order, like 2PC, so
+        no deadlock against a concurrent cross-shard commit). With all
+        locks held, no commit can apply or register anywhere, so the
+        per-shard snapshots plus the sync vector form one consistent
+        cut — and a WAL rotation inside the freeze exactly brackets it."""
+        for sh in self.shards:
+            sh.commit_lock.acquire()
+        try:
+            yield
+        finally:
+            for sh in reversed(self.shards):
+                sh.commit_lock.release()
+
+    def export_snapshot(self) -> Dict:
+        """Caller holds every shard lock (``freeze``)."""
+        with self._vec_lock:
+            applied = list(self._applied)
+            gts = self._gts
+        with self._fid_lock:
+            next_fid = self._next_fid
+        return {
+            "kind": "sharded",
+            "n": self.n_shards,
+            "shards": [sh.export_snapshot() for sh in self.shards],
+            "applied": applied,
+            "gts": gts,
+            "next_fid": next_fid,
+        }
+
+    def import_snapshot(self, snap: Dict) -> None:
+        if snap.get("kind") != "sharded" or snap.get("n") != self.n_shards:
+            raise ValueError(
+                f"snapshot kind={snap.get('kind')!r} n={snap.get('n')!r} "
+                f"does not match this {self.n_shards}-shard backend"
+            )
+        for sh, s in zip(self.shards, snap["shards"]):
+            sh.import_snapshot(s)
+        with self._vec_lock:
+            for i, ts in enumerate(snap["applied"]):
+                if ts > self._applied[i]:
+                    self._applied[i] = ts
+            if snap["gts"] > self._gts:
+                self._gts = snap["gts"]
+        with self._fid_lock:
+            if snap["next_fid"] > self._next_fid:
+                self._next_fid = snap["next_fid"]
 
     # ------------------------------------------------------------------ #
     # WAL crash recovery

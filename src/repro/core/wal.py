@@ -1,4 +1,4 @@
-"""Durable write-ahead commit log + crash recovery.
+"""Durable write-ahead commit log + checkpointing + crash recovery.
 
 Until now the backend only *modeled* durability: ``commit_service_s``
 charged a simulated log-fsync per commit-lock acquisition, and group
@@ -7,6 +7,28 @@ real path real: on validate-success the commit's effects are appended to
 an on-disk log and fsync'd **before the client's commit is acknowledged**,
 so an acked commit survives a server crash. Group commit keeps its role
 unchanged — many appends, one fsync.
+
+Three layers live here:
+
+  * ``WriteAheadLog`` — one append-only CRC-framed file. On an fsync (or
+    write) failure the log is *poisoned*: every subsequent ``append`` /
+    ``sync`` raises ``WalFailed`` and the fsync is never retried — after
+    a failed fsync the kernel may have dropped the dirty pages, so a
+    later "successful" fsync would silently lie about durability
+    (fsyncgate). In-flight commits fail typed instead of acking.
+  * ``SegmentedWal`` — a log *directory* of numbered segments
+    (``wal.000001``, ``wal.000002``, …) with rotation, plus installed
+    checkpoints (``ckpt.NNNNNN``). This is what bounds recovery: replay
+    is O(tail since the last checkpoint), not O(history).
+  * checkpoint writer/loader + ``recover_dir`` — a checkpoint serializes
+    a consistent backend snapshot (current block / meta / namespace
+    entries, commit-log tail, sequencers, sync vector, epoch, fid floor)
+    through the ``wire`` codec into a CRC-framed file, written to a
+    ``.tmp`` name, fsync'd, atomically renamed into place, directory
+    fsync'd — then every WAL segment the checkpoint covers is deleted.
+    Recovery loads the newest *valid* checkpoint (falling back to the
+    previous one if the newest is torn), replays only the segments after
+    it, and truncates the final segment's torn tail.
 
 **Record framing.** The log is a flat sequence of records::
 
@@ -68,6 +90,22 @@ _REC_HDR = struct.Struct(">II")
 SYNC_MODES = ("fsync", "none")
 
 
+class WalFailed(Exception):
+    """The durable log hit an unrecoverable I/O failure (failed write or
+    fsync). The log object is poisoned: every subsequent ``append`` /
+    ``sync`` raises this, and the fsync is never retried — a failed fsync
+    may have dropped the dirty pages from the kernel cache, so retrying
+    could report durability for data that is gone (fsyncgate)."""
+
+
+class RecoveryError(Exception):
+    """The log directory cannot prove it covers every acked commit —
+    a coverage hole (no valid checkpoint but segments start past 1, a
+    gap in the segment numbering) or corruption in a non-final segment.
+    Refusing to start is the only honest move: silently rebuilding from
+    a hole would serve a state missing acked data."""
+
+
 class WriteAheadLog:
     def __init__(self, path: str, sync_mode: str = "fsync"):
         if sync_mode not in SYNC_MODES:
@@ -83,6 +121,15 @@ class WriteAheadLog:
         self._synced = self._end
         self.appends = 0
         self.fsyncs = 0
+        self._fsync = os.fsync  # injectable: tests poison the log this way
+        self._failed: Optional[BaseException] = None
+
+    def _check_poisoned(self) -> None:
+        if self._failed is not None:
+            raise WalFailed(
+                f"log {self.path} poisoned by earlier I/O failure: "
+                f"{self._failed}"
+            )
 
     # ------------------------------------------------------------------ #
     def append(self, record: Any) -> int:
@@ -91,7 +138,12 @@ class WriteAheadLog:
         body = wire.pack(record)
         frame = _REC_HDR.pack(len(body), zlib.crc32(body)) + body
         with self._mu:
-            self._f.write(frame)
+            self._check_poisoned()
+            try:
+                self._f.write(frame)
+            except OSError as e:
+                self._failed = e
+                raise WalFailed(f"log {self.path} write failed: {e}") from e
             self._end += len(frame)
             self.appends += 1
             return self._end
@@ -99,20 +151,33 @@ class WriteAheadLog:
     def sync(self, lsn: Optional[int] = None) -> None:
         """Durability barrier: block until the log through ``lsn`` (or the
         current end) is on stable storage. Concurrent callers are absorbed
-        by a single fsync (group commit)."""
+        by a single fsync (group commit). Raises ``WalFailed`` — and
+        poisons the log — if the fsync fails; the caller must NOT ack the
+        commit it was barriering for."""
         if lsn is None:
             with self._mu:
+                self._check_poisoned()
                 lsn = self._end
         if self.sync_mode == "none":
+            self._check_poisoned()
             return
+        self._check_poisoned()
         if self._synced >= lsn:
             return
         with self._sync_mu:
+            self._check_poisoned()
             if self._synced >= lsn:
                 return
             with self._mu:
                 end = self._end
-            os.fsync(self._f.fileno())
+            try:
+                self._fsync(self._f.fileno())
+            except OSError as e:
+                # Poison BEFORE releasing _sync_mu: concurrent syncers
+                # queued behind this fsync must not retry it against a
+                # page cache the kernel may already have dropped.
+                self._failed = e
+                raise WalFailed(f"log {self.path} fsync failed: {e}") from e
             self.fsyncs += 1
             if end > self._synced:
                 self._synced = end
@@ -224,8 +289,405 @@ def replay(backend, records) -> Dict[str, int]:
 
 
 def recover(backend, path: str) -> Dict[str, int]:
-    """Full crash recovery: scan, truncate the torn tail, replay into
-    ``backend``. Returns the replay summary (see ``replay``)."""
+    """Single-file crash recovery (legacy layout): scan, truncate the
+    torn tail, replay into ``backend``. Returns the replay summary (see
+    ``replay``). The segmented layout recovers via ``recover_dir``."""
     records, good_end = scan(path)
     truncate_to(path, good_end)
     return replay(backend, records)
+
+
+# --------------------------------------------------------------------------- #
+# segmented log directory
+# --------------------------------------------------------------------------- #
+_SEG_PREFIX = "wal."
+_CKPT_PREFIX = "ckpt."
+_TMP_SUFFIX = ".tmp"
+CKPT_VERSION = 1
+
+
+def _seg_name(idx: int) -> str:
+    return f"{_SEG_PREFIX}{idx:06d}"
+
+
+def _ckpt_name(idx: int) -> str:
+    return f"{_CKPT_PREFIX}{idx:06d}"
+
+
+def _parse_numbered(name: str, prefix: str) -> Optional[int]:
+    if not name.startswith(prefix) or name.endswith(_TMP_SUFFIX):
+        return None
+    try:
+        return int(name[len(prefix):])
+    except ValueError:
+        return None
+
+
+def list_segments(dirpath: str) -> List[Tuple[int, str]]:
+    """Sorted ``(index, path)`` of live WAL segments in ``dirpath``."""
+    out = []
+    for name in os.listdir(dirpath):
+        idx = _parse_numbered(name, _SEG_PREFIX)
+        if idx is not None:
+            out.append((idx, os.path.join(dirpath, name)))
+    return sorted(out)
+
+
+def list_checkpoints(dirpath: str) -> List[Tuple[int, str]]:
+    """Sorted ``(covered_segment, path)`` of installed checkpoints."""
+    out = []
+    for name in os.listdir(dirpath):
+        idx = _parse_numbered(name, _CKPT_PREFIX)
+        if idx is not None:
+            out.append((idx, os.path.join(dirpath, name)))
+    return sorted(out)
+
+
+def _fsync_dir(dirpath: str) -> None:
+    """Make directory-entry mutations (create/rename/unlink) durable."""
+    fd = os.open(dirpath, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class SegmentedWal:
+    """A write-ahead log split across numbered segment files in one
+    directory. Presents the same ``append`` / ``sync`` / counters surface
+    as ``WriteAheadLog`` (backends attach it unchanged via ``set_wal``),
+    plus ``rotate`` / ``drop_through`` for the checkpointer.
+
+    LSNs are ``(segment_index, offset)`` pairs. ``rotate`` fully fsyncs
+    the outgoing segment before opening the next one, so any LSN in a
+    segment older than the current one is durable by construction —
+    ``sync`` only ever fsyncs the current segment.
+    """
+
+    def __init__(self, dirpath: str, sync_mode: str = "fsync"):
+        os.makedirs(dirpath, exist_ok=True)
+        self.dir = dirpath
+        self.sync_mode = sync_mode
+        self._mu = threading.Lock()  # guards the current-segment swap
+        segs = list_segments(dirpath)
+        self._cur_idx = segs[-1][0] if segs else 1
+        self._cur = WriteAheadLog(
+            os.path.join(dirpath, _seg_name(self._cur_idx)), sync_mode
+        )
+        if not segs:
+            _fsync_dir(dirpath)
+        # counters survive rotation (benchmarks read them continuously)
+        self._appends_done = 0
+        self._fsyncs_done = 0
+
+    # -- WriteAheadLog-compatible surface ------------------------------ #
+    @property
+    def appends(self) -> int:
+        return self._appends_done + self._cur.appends
+
+    @property
+    def fsyncs(self) -> int:
+        return self._fsyncs_done + self._cur.fsyncs
+
+    def append(self, record: Any) -> Tuple[int, int]:
+        # _mu is held ACROSS the inner append: an append racing rotate()
+        # must not land in (or hit the closed fd of) a just-retired
+        # segment — the record would sit in a compaction-covered file the
+        # checkpoint never saw. sync() deliberately does NOT take _mu
+        # around the fsync (group commit must absorb concurrent
+        # appenders); a racer that snapshots the old segment returns
+        # early off its _synced watermark, which rotation leaves at the
+        # segment end.
+        with self._mu:
+            return (self._cur_idx, self._cur.append(record))
+
+    def sync(self, lsn: Optional[Tuple[int, int]] = None) -> None:
+        with self._mu:
+            cur, idx = self._cur, self._cur_idx
+        if lsn is None:
+            cur.sync(None)
+            return
+        seg, off = lsn
+        if seg < idx:
+            return  # rotation fsync'd that whole segment already
+        cur.sync(off)
+
+    def close(self) -> None:
+        with self._mu:
+            self._cur.close()
+
+    # -- segmentation --------------------------------------------------- #
+    def rotate(self) -> int:
+        """Fsync + retire the current segment, open the next one; returns
+        the retired segment's index (the checkpoint coverage bound). The
+        caller must quiesce appenders (the checkpointer holds the commit
+        locks and the allocator lock), so no record can straddle the
+        boundary."""
+        with self._mu:
+            old, old_idx = self._cur, self._cur_idx
+            old.sync()  # everything in the old segment is durable
+            new_idx = old_idx + 1
+            new = WriteAheadLog(
+                os.path.join(self.dir, _seg_name(new_idx)), self.sync_mode
+            )
+            self._appends_done += old.appends
+            self._fsyncs_done += old.fsyncs
+            self._cur, self._cur_idx = new, new_idx
+            old.close()
+        _fsync_dir(self.dir)
+        return old_idx
+
+    def drop_through(self, covered_idx: int) -> int:
+        """Delete every segment with index <= ``covered_idx`` (they are
+        fully represented by an installed checkpoint). Returns how many
+        were removed."""
+        removed = 0
+        for idx, path in list_segments(self.dir):
+            if idx <= covered_idx and idx != self._cur_idx:
+                try:
+                    os.unlink(path)
+                    removed += 1
+                except FileNotFoundError:
+                    pass
+        if removed:
+            _fsync_dir(self.dir)
+        return removed
+
+    def live_bytes(self) -> int:
+        """Total on-disk size of all live segments (the compaction
+        trigger's size signal — shrinks when drop_through runs)."""
+        total = 0
+        for _, path in list_segments(self.dir):
+            try:
+                total += os.path.getsize(path)
+            except FileNotFoundError:
+                pass
+        return total
+
+    @property
+    def current_segment(self) -> int:
+        return self._cur_idx
+
+
+# --------------------------------------------------------------------------- #
+# checkpoints: consistent snapshot files covering a WAL prefix
+# --------------------------------------------------------------------------- #
+def _append_framed(f, record: Any) -> None:
+    body = wire.pack(record)
+    f.write(_REC_HDR.pack(len(body), zlib.crc32(body)) + body)
+
+
+def write_checkpoint(
+    dirpath: str,
+    covered_seg: int,
+    epoch: int,
+    next_fid: int,
+    state: Any,
+) -> str:
+    """Serialize one backend snapshot into ``ckpt.<covered_seg>``.
+
+    The file is a CRC-framed record sequence — ``("ckpt-hdr", version,
+    covered_seg, epoch, next_fid)``, ``("state", tree)``, ``("ckpt-end",
+    2)`` — written to a ``.tmp`` name, fsync'd, atomically renamed into
+    place, then the directory entry is fsync'd. A crash at ANY point
+    before the rename leaves only ignorable ``.tmp`` garbage; a torn
+    installed file (storage corruption) is rejected by the CRC/end-marker
+    check at load time and recovery falls back to the previous
+    checkpoint, whose covered segments are only deleted after a
+    *successful* install.
+    """
+    final = os.path.join(dirpath, _ckpt_name(covered_seg))
+    tmp = final + _TMP_SUFFIX
+    with open(tmp, "wb") as f:
+        _append_framed(f, ("ckpt-hdr", CKPT_VERSION, covered_seg, epoch,
+                           next_fid))
+        _append_framed(f, ("state", state))
+        _append_framed(f, ("ckpt-end", 2))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)
+    _fsync_dir(dirpath)
+    return final
+
+
+def load_checkpoint(path: str) -> Optional[Dict[str, Any]]:
+    """Parse + validate one checkpoint file; ``None`` if torn/invalid
+    (bad CRC, missing end marker, wrong record shape, unknown version)."""
+    records, _ = scan(path)
+    if len(records) != 3:
+        return None
+    hdr, state_rec, end = records
+    if not (isinstance(hdr, tuple) and len(hdr) == 5 and hdr[0] == "ckpt-hdr"):
+        return None
+    if hdr[1] != CKPT_VERSION:
+        return None
+    if not (isinstance(state_rec, tuple) and len(state_rec) == 2
+            and state_rec[0] == "state"):
+        return None
+    if end != ("ckpt-end", 2):
+        return None
+    return {
+        "seg": hdr[2],
+        "epoch": hdr[3],
+        "next_fid": hdr[4],
+        "state": state_rec[1],
+    }
+
+
+def checkpoint_backend(
+    wal: SegmentedWal, backend, epoch: int, next_fid_fn=None
+) -> Dict[str, int]:
+    """One full checkpoint + compaction cycle against ``backend``.
+
+    Under the backend's ``freeze()`` (all commit locks — the capture is
+    an O(state) reference walk, NOT the serialization): rotate the log so
+    the segment boundary exactly brackets the snapshot, then export the
+    snapshot tree and read the file-id allocator position. Outside the
+    locks: serialize + fsync + rename-install the checkpoint, then
+    delete every covered segment. Commits proceed concurrently with the
+    expensive part (pack/write/fsync).
+
+    ``next_fid_fn`` (the server passes its allocator's ``peek_next``) is
+    called strictly AFTER the rotation: a lease grant bumps the counter
+    before appending its record, so any lease whose record landed in a
+    now-covered segment is visible to this read — covered segments can
+    be deleted without ever shrinking the recoverable fid floor. A grant
+    racing past the rotation lands its record in the new (kept) segment.
+    """
+    with backend.freeze():
+        covered = wal.rotate()
+        state = backend.export_snapshot()
+        next_fid = next_fid_fn() if next_fid_fn is not None else 1
+    path = write_checkpoint(wal.dir, covered, epoch, next_fid, state)
+    removed = wal.drop_through(covered)
+    # previous checkpoints are now redundant (their fallback value is
+    # gone anyway: the segments after them were just deleted)
+    for idx, old in list_checkpoints(wal.dir):
+        if idx < covered:
+            try:
+                os.unlink(old)
+            except FileNotFoundError:
+                pass
+    return {
+        "seg": covered,
+        "bytes": os.path.getsize(path),
+        "segments_removed": removed,
+    }
+
+
+def recover_dir(backend, dirpath: str) -> Dict[str, int]:
+    """Bounded crash recovery over a segmented log directory.
+
+    Order: load the newest *valid* checkpoint (torn/invalid ones are
+    skipped — fall back toward older checkpoints), import its snapshot
+    into ``backend``, then replay only the WAL segments strictly after
+    the one it covers, truncating the final segment's torn tail. Leftover
+    ``.tmp`` files, invalid checkpoints, and segments already covered by
+    the loaded checkpoint are deleted (a crash between checkpoint install
+    and segment deletion re-runs the deletion here).
+
+    Raises ``RecoveryError`` — refusing to start — when the directory
+    cannot prove full coverage of acked commits: no valid checkpoint but
+    the segments do not start at 1 (the only checkpoint rotted after its
+    covered segments were deleted), a gap in the segment numbering, or a
+    torn record inside a NON-final segment (segments are fully fsync'd
+    before rotation, so a mid-log tear is storage corruption, not a
+    crash artifact — replaying past the hole would violate commit
+    order, replaying up to it would silently drop acked data).
+
+    Returns ``{"commits": tail_commits_replayed, "epoch", "fid_floor",
+    "ckpt_seg", "ckpt_loaded"}`` — ``commits`` counts ONLY the tail, the
+    number that bounds restart cost.
+    """
+    os.makedirs(dirpath, exist_ok=True)
+    chosen: Optional[Dict[str, Any]] = None
+    invalid: List[str] = []
+    for idx, path in sorted(list_checkpoints(dirpath), reverse=True):
+        c = load_checkpoint(path)
+        if c is not None:
+            chosen = c
+            break
+        invalid.append(path)
+
+    epoch = 0
+    fid_floor = 1
+    base_seg = 0 if chosen is None else chosen["seg"]
+
+    # Coverage proof BEFORE mutating anything: rotation numbers segments
+    # contiguously and compaction only ever deletes a prefix covered by
+    # an installed checkpoint, so the live tail must run base_seg+1,
+    # base_seg+2, … without gaps. A hole means acked commits are
+    # unrecoverable — refuse rather than silently serve a partial state
+    # (e.g. the ONLY checkpoint rotted after its covered segments were
+    # deleted: chosen is None but the segments start far past 1).
+    tail_idx = [i for i, _ in list_segments(dirpath) if i > base_seg]
+    expected = list(range(base_seg + 1, base_seg + 1 + len(tail_idx)))
+    if tail_idx != expected:
+        covered = ("no valid checkpoint" if chosen is None
+                   else f"checkpoint covers <= {base_seg}")
+        raise RecoveryError(
+            f"WAL coverage hole in {dirpath}: {covered} but live "
+            f"segments are {tail_idx} (expected {expected}); acked "
+            "commits may be missing — refusing to recover"
+        )
+
+    if chosen is not None:
+        backend.import_snapshot(chosen["state"])
+        epoch = chosen["epoch"]
+        fid_floor = max(fid_floor, chosen["next_fid"])
+
+    commits = 0
+    segs = [e for e in list_segments(dirpath) if e[0] > base_seg]
+    for pos, (idx, path) in enumerate(segs):
+        records, good_end = scan(path)
+        last = pos == len(segs) - 1
+        if last:
+            truncate_to(path, good_end)  # torn tail of the crash
+        elif good_end < os.path.getsize(path):
+            raise RecoveryError(
+                f"torn record inside non-final WAL segment {path} "
+                f"(intact through byte {good_end}): storage corruption — "
+                "acked commits past the hole are unrecoverable, refusing"
+            )
+        # one record-dispatch loop for both layouts: per-segment replay()
+        # folds monotonically (bump_fid_floor per segment is safe)
+        seg_summary = replay(backend, records)
+        commits += seg_summary["commits"]
+        epoch = max(epoch, seg_summary["epoch"])
+        fid_floor = max(fid_floor, seg_summary["fid_floor"])
+
+    # cleanup: covered segments, invalid checkpoints, orphaned tmp files,
+    # checkpoints older than the one we loaded
+    for idx, path in list_segments(dirpath):
+        if idx <= base_seg:
+            try:
+                os.unlink(path)
+            except FileNotFoundError:
+                pass
+    for path in invalid:
+        try:
+            os.unlink(path)
+        except FileNotFoundError:
+            pass
+    for idx, path in list_checkpoints(dirpath):
+        if chosen is not None and idx < base_seg:
+            try:
+                os.unlink(path)
+            except FileNotFoundError:
+                pass
+    for name in os.listdir(dirpath):
+        if name.endswith(_TMP_SUFFIX):
+            try:
+                os.unlink(os.path.join(dirpath, name))
+            except FileNotFoundError:
+                pass
+
+    if hasattr(backend, "bump_fid_floor"):
+        backend.bump_fid_floor(fid_floor)
+    return {
+        "commits": commits,
+        "epoch": epoch,
+        "fid_floor": fid_floor,
+        "ckpt_seg": base_seg,
+        "ckpt_loaded": chosen is not None,
+    }

@@ -79,6 +79,9 @@ T_FETCH_BLOCKS = 0x20
 T_FETCH_METAS = 0x21
 T_LOOKUP_MANY = 0x22
 T_SYNC_FILES = 0x23
+# admin (v3): force a WAL checkpoint + compaction cycle; replies with the
+# summary {seg, bytes, segments_removed}
+T_CHECKPOINT = 0x24
 
 #: max body we will accept from a peer (a frame claiming more is corrupt)
 MAX_BODY = 256 * 1024 * 1024
@@ -595,6 +598,7 @@ def exception_to_obj(exc: BaseException) -> Dict[str, Any]:
 
 def exception_from_obj(o: Dict[str, Any]) -> BaseException:
     from repro.core.blockstore import SnapshotTooOld
+    from repro.core.wal import WalFailed
 
     etype, msg, extra = o["t"], o["m"], o["x"]
     if etype == "Conflict":
@@ -605,6 +609,9 @@ def exception_from_obj(o: Dict[str, Any]) -> BaseException:
         "TxnStateError": TxnStateError,
         "SnapshotTooOld": SnapshotTooOld,
         "StaleEpoch": StaleEpoch,
+        # a poisoned durable log: the commit was NOT acked and the server
+        # will fail every further commit until it restarts and recovers
+        "WalFailed": WalFailed,
         "ValueError": ValueError,
         "KeyError": KeyError,
     }

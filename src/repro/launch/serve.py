@@ -15,7 +15,7 @@ from repro.configs.base import get_config, list_configs, reduced_config
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS
-from repro.core.retry import run_function
+from repro.core.runtime import FunctionRuntime
 from repro.core.tensorstate import TensorStore
 from repro.core.types import CachePolicy
 from repro.models import model as M
@@ -39,7 +39,7 @@ def main() -> None:
     def publish(fs: FaaSFS) -> None:
         TensorStore(fs, prefix="/mnt/tsfs/train").save("state", template)
 
-    run_function(boot, publish)
+    FunctionRuntime(boot).invoke(publish)
 
     max_len = args.tokens + 8
 

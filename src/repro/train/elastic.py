@@ -20,7 +20,7 @@ from typing import Dict, List, Optional
 
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS, O_CREAT, O_TRUNC
-from repro.core.retry import InvocationStats, run_function
+from repro.core.runtime import FunctionRuntime
 
 TOPOLOGY_PATH = "/mnt/tsfs/cluster/topology"
 
@@ -47,6 +47,7 @@ class ElasticCoordinator:
     def __init__(self, local: LocalServer, path: str = TOPOLOGY_PATH):
         self.local = local
         self.path = path
+        self._runtime = FunctionRuntime(local)
 
     # ------------------------------------------------------------------ #
     def bootstrap(self, workers: List[str], partitions: Dict[str, List[str]]) -> None:
@@ -57,7 +58,7 @@ class ElasticCoordinator:
             fs.write(fd, topo.to_bytes())
             fs.close(fd)
 
-        run_function(self.local, do)
+        self._runtime.invoke(do)
 
     def read(self, fs: FaaSFS) -> Topology:
         """Read topology INSIDE a step's transaction: joins the read set, so
@@ -81,7 +82,7 @@ class ElasticCoordinator:
             fs.close(fd)
             out["topo"] = topo
 
-        run_function(self.local, do)
+        self._runtime.invoke(do)
         return out["topo"]
 
     def join(self, worker: str, partitions: Optional[List[str]] = None) -> Topology:

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS, O_CREAT
-from repro.core.retry import InvocationStats, run_function
+from repro.core.runtime import FunctionRuntime, InvocationStats
 from repro.core.tensorstate import TensorStore, flatten_with_names, unflatten_like
 
 PyTree = Any
@@ -73,6 +73,7 @@ class TransactionalTrainer:
         self.root = root.rstrip("/")
         self.name = name
         self.stats = WorkerStats()
+        self._runtime = FunctionRuntime(local)
 
     # ------------------------------------------------------------------ #
     def init(self, state: PyTree) -> int:
@@ -84,7 +85,7 @@ class TransactionalTrainer:
             fs.close(fd)
 
         inv = InvocationStats()
-        run_function(self.local, do_init, stats=inv)
+        self._runtime.invoke(do_init, stats=inv)
         return inv.commit_ts
 
     # ------------------------------------------------------------------ #
@@ -111,7 +112,7 @@ class TransactionalTrainer:
             holder["bytes"] = s["bytes_written"]
 
         inv = InvocationStats()
-        run_function(self.local, do_step, stats=inv)
+        self._runtime.invoke(do_step, stats=inv)
         self.stats.steps += 1
         self.stats.aborts += inv.aborts
         self.stats.commit_bytes += holder.get("bytes", 0)
@@ -132,5 +133,5 @@ class TransactionalTrainer:
             store = TensorStore(fs, prefix=self.root)
             holder["flat"] = store.load(self.name)
 
-        run_function(self.local, do_read, read_only=snapshot)
+        self._runtime.invoke(do_read, read_only=snapshot)
         return unflatten_like(self.template, holder["flat"])

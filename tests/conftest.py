@@ -39,8 +39,14 @@ def backend_factory(request, tmp_path):
         else:
             n = int(kind[len("remote-sharded"):])
             inner = ShardedBackend(n_shards=n, **kwargs)
-        wal_path = tmp_path / f"wal-{len(live)}.log"
-        server = BackendServer(inner, wal_path=str(wal_path)).start()
+        # segmented WAL directory with an aggressive record threshold, so
+        # the suites also exercise checkpoint + compaction cycles racing
+        # their commits (most tests stay below it; heavy ones trigger it)
+        wal_path = tmp_path / f"wal-{len(live)}"
+        server = BackendServer(
+            inner, wal_path=str(wal_path),
+            checkpoint_records=400, checkpoint_interval_s=0.1,
+        ).start()
         client = RemoteBackend("127.0.0.1", server.port)
         live.append((server, client))
         return client

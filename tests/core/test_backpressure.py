@@ -1,0 +1,135 @@
+"""Per-connection in-flight cap: a hostile pipelined client cannot queue
+unbounded work server-side. Once a connection has ``max_inflight_per_conn``
+dispatched-but-unreplied blockable requests, the server stops draining its
+socket — backpressure propagates over TCP — while other connections keep
+being served."""
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core import wire
+from repro.core.backend import BackendService
+from repro.core.server import BackendServer
+
+
+class _GatedBackend(BackendService):
+    """``begin`` parks until the test opens the gate, so dispatched
+    requests pile up in a controlled way."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.gate = threading.Event()
+        self.begin_entered = 0
+        self._count_mu = threading.Lock()
+
+    def begin(self, *args, **kwargs):
+        with self._count_mu:
+            self.begin_entered += 1
+        assert self.gate.wait(30), "test forgot to open the gate"
+        return super().begin(*args, **kwargs)
+
+
+def _dial_raw(port) -> socket.socket:
+    sock = socket.create_connection(("127.0.0.1", port), timeout=10)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    msg_type, _, _ = wire.recv_frame(sock)  # consume the hello
+    assert msg_type == wire.T_HELLO
+    return sock
+
+
+def test_hostile_flood_is_capped_and_others_stay_live():
+    cap = 4
+    flood = 40
+    backend = _GatedBackend(block_size=16)
+    server = BackendServer(
+        backend, max_inflight_per_conn=cap, max_workers=16
+    ).start()
+    hostile = None
+    try:
+        hostile = _dial_raw(server.port)
+        body = {"t": 0, "k": None, "p": None}
+        burst = b"".join(
+            wire.encode_frame(wire.T_BEGIN, body, req_id)
+            for req_id in range(1, flood + 1)
+        )
+        hostile.sendall(burst)
+
+        # the server may dispatch at most `cap` of them; the rest stay in
+        # the socket, not in the worker queue
+        deadline = time.time() + 5
+        while backend.begin_entered < cap and time.time() < deadline:
+            time.sleep(0.01)
+        time.sleep(0.3)  # give an unbounded drain time to overshoot
+        assert backend.begin_entered == cap
+        assert server._inflight <= cap
+
+        # a second connection is fully live while the flood is stalled:
+        # inline ops answer from its own reader thread...
+        other = _dial_raw(server.port)
+        wire.send_frame(other, wire.T_PING, None, 7)
+        msg_type, req_id, _ = wire.recv_frame(other)
+        assert (msg_type, req_id) == (wire.T_OK, 7)
+        # ...and its blockable ops get their own worker-pool slots
+        # (dispatched beyond the hostile connection's cap)
+        wire.send_frame(other, wire.T_BEGIN, body, 8)
+        deadline = time.time() + 5
+        while backend.begin_entered < cap + 1 and time.time() < deadline:
+            time.sleep(0.01)
+        assert backend.begin_entered == cap + 1
+
+        # open the gate: the flood drains to completion, every request is
+        # answered exactly once, in id order no worse than at-most-cap
+        # out of order
+        backend.gate.set()
+        msg_type, req_id, _ = wire.recv_frame(other)
+        assert (msg_type, req_id) == (wire.T_OK, 8)
+        other.close()
+        seen = set()
+        for _ in range(flood):
+            msg_type, req_id, _ = wire.recv_frame(hostile)
+            assert msg_type == wire.T_OK
+            seen.add(req_id)
+        assert seen == set(range(1, flood + 1))
+        # nothing left dispatched
+        deadline = time.time() + 5
+        while server._inflight and time.time() < deadline:
+            time.sleep(0.01)
+        assert server._inflight == 0
+    finally:
+        backend.gate.set()
+        if hostile is not None:
+            hostile.close()
+        server.shutdown()
+
+
+def test_capped_connection_recovers_after_drain():
+    """After a flood drains, the same connection keeps working normally
+    (the cap is a window, not a penalty)."""
+    backend = _GatedBackend(block_size=16)
+    backend.gate.set()  # no stalling in this test
+    server = BackendServer(
+        backend, max_inflight_per_conn=2, max_workers=4
+    ).start()
+    try:
+        sock = _dial_raw(server.port)
+        body = {"t": 0, "k": None, "p": None}
+        n = 25
+        burst = b"".join(
+            wire.encode_frame(wire.T_BEGIN, body, rid)
+            for rid in range(1, n + 1)
+        )
+        sock.sendall(burst)
+        seen = set()
+        for _ in range(n):
+            msg_type, req_id, _ = wire.recv_frame(sock)
+            assert msg_type == wire.T_OK
+            seen.add(req_id)
+        assert seen == set(range(1, n + 1))
+        wire.send_frame(sock, wire.T_PING, None, 99)
+        msg_type, req_id, _ = wire.recv_frame(sock)
+        assert (msg_type, req_id) == (wire.T_OK, 99)
+        sock.close()
+    finally:
+        server.shutdown()

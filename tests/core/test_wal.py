@@ -1,10 +1,14 @@
 """Durable commit log: torn-tail handling, replay fidelity, group-fsync
-amortization, and true SIGKILL crash recovery of the RPC server."""
+amortization, fsync-failure poisoning, checkpoint + compaction (bounded
+recovery), and true SIGKILL crash recovery of the RPC server."""
+import errno
 import os
+import random
 import signal
 import struct
 import subprocess
 import sys
+import threading
 import time
 from pathlib import Path
 
@@ -14,6 +18,7 @@ from repro.core import wal as walmod
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.sharded import ShardedBackend
+from repro.core.types import Conflict
 
 REPO_ROOT = Path(__file__).resolve().parents[2]
 
@@ -181,7 +186,7 @@ def test_group_commit_amortizes_fsyncs(tmp_path):
 # --------------------------------------------------------------------------- #
 # true crash: SIGKILL the server process, restart, verify durability
 # --------------------------------------------------------------------------- #
-def _spawn_server(wal_path, shards=0, block_size=16):
+def _spawn_server(wal_path, shards=0, block_size=16, extra=()):
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + env.get(
         "PYTHONPATH", ""
@@ -192,6 +197,7 @@ def _spawn_server(wal_path, shards=0, block_size=16):
             "--wal", str(wal_path),
             "--shards", str(shards),
             "--block-size", str(block_size),
+            *extra,
         ],
         stdout=subprocess.PIPE,
         stderr=subprocess.PIPE,
@@ -201,8 +207,18 @@ def _spawn_server(wal_path, shards=0, block_size=16):
     )
     line = proc.stdout.readline()
     assert line.startswith("LISTENING"), (line, proc.stderr.read())
+    fields = dict(
+        kv.split("=", 1) for kv in line.split()[2:] if "=" in kv
+    )
     port = int(line.split()[1])
-    return proc, port
+    return proc, port, fields
+
+
+def _tear_newest_segment(wal_dir) -> None:
+    """Simulate a crash mid-append: garbage bytes at the live tail."""
+    segs = walmod.list_segments(str(wal_dir))
+    with open(segs[-1][1], "ab") as f:
+        f.write(struct.pack(">II", 4096, 0) + b"torn")
 
 
 @pytest.mark.parametrize("shards", [0, 2], ids=["mono", "sharded2"])
@@ -210,7 +226,7 @@ def test_sigkill_acked_commits_survive_restart(tmp_path, shards):
     from repro.core.remote import RemoteBackend
 
     wal_path = tmp_path / "server.wal"
-    proc, port = _spawn_server(wal_path, shards=shards)
+    proc, port, _ = _spawn_server(wal_path, shards=shards)
     try:
         rb = RemoteBackend("127.0.0.1", port)
         local = LocalServer(rb)
@@ -234,10 +250,9 @@ def test_sigkill_acked_commits_survive_restart(tmp_path, shards):
         proc.wait()
 
     # simulate the torn tail a mid-append crash leaves behind
-    with open(wal_path, "ab") as f:
-        f.write(struct.pack(">II", 4096, 0) + b"torn")
+    _tear_newest_segment(wal_path)
 
-    proc2, port2 = _spawn_server(wal_path, shards=shards)
+    proc2, port2, _ = _spawn_server(wal_path, shards=shards)
     try:
         rb2 = RemoteBackend("127.0.0.1", port2)
         assert rb2.server_epoch == 2       # restart fenced a new epoch
@@ -258,7 +273,7 @@ def test_restart_never_regrants_leased_fids(tmp_path):
     from repro.core.remote import RemoteBackend
 
     wal_path = tmp_path / "server.wal"
-    proc, port = _spawn_server(wal_path)
+    proc, port, _ = _spawn_server(wal_path)
     try:
         rb = RemoteBackend("127.0.0.1", port, lease_size=8)
         first = [rb.alloc_file_id() for _ in range(20)]  # spans 3 leases
@@ -266,7 +281,7 @@ def test_restart_never_regrants_leased_fids(tmp_path):
     finally:
         proc.kill()
         proc.wait()
-    proc2, port2 = _spawn_server(wal_path)
+    proc2, port2, _ = _spawn_server(wal_path)
     try:
         rb2 = RemoteBackend("127.0.0.1", port2, lease_size=8)
         second = [rb2.alloc_file_id() for _ in range(20)]
@@ -275,3 +290,585 @@ def test_restart_never_regrants_leased_fids(tmp_path):
     finally:
         proc2.kill()
         proc2.wait()
+
+
+# --------------------------------------------------------------------------- #
+# fsync failure: poison, fail typed, never retry (fsyncgate)
+# --------------------------------------------------------------------------- #
+class _FailingFsync:
+    def __init__(self, fail_after=0):
+        self.calls = 0
+        self.fail_after = fail_after
+
+    def __call__(self, fd):
+        self.calls += 1
+        if self.calls > self.fail_after:
+            raise OSError(errno.EIO, "injected fsync failure")
+        os.fsync(fd)
+
+
+def test_fsync_failure_poisons_log(tmp_path):
+    log = walmod.WriteAheadLog(str(tmp_path / "w.log"))
+    log.append(("epoch", 1))
+    log.sync()                               # healthy fsync
+    boom = _FailingFsync()
+    log._fsync = boom
+    lsn = log.append(("c", 0, 1, ([], {}, {})))
+    with pytest.raises(walmod.WalFailed):
+        log.sync(lsn)
+    assert boom.calls == 1
+    # poisoned: every subsequent append/sync raises typed, and the fsync
+    # is NEVER retried against a page cache the kernel may have dropped
+    with pytest.raises(walmod.WalFailed):
+        log.append(("c", 0, 2, ([], {}, {})))
+    with pytest.raises(walmod.WalFailed):
+        log.sync()
+    with pytest.raises(walmod.WalFailed):
+        log.sync(lsn)
+    assert boom.calls == 1
+    log.close()
+
+
+def test_fsync_failure_fails_commit_instead_of_acking(tmp_path):
+    path = str(tmp_path / "w.log")
+    be = BackendService(block_size=16, wal=walmod.WriteAheadLog(path))
+    local = LocalServer(be)
+    txn = local.begin()
+    fid = txn.create("/f")
+    txn.write(fid, 0, b"ok")
+    txn.commit()                             # durably acked
+
+    be.wal._fsync = _FailingFsync()
+    txn = local.begin()
+    txn.write(fid, 4, b"lost")
+    with pytest.raises(walmod.WalFailed):
+        txn.commit()                         # NOT acked
+    txn = local.begin()
+    txn.write(fid, 8, b"also")
+    with pytest.raises(walmod.WalFailed):
+        txn.commit()                         # still poisoned
+
+    # Recovery: the acked commit is there. The first FAILED commit's
+    # record was appended before the fsync failed, so it may legitimately
+    # replay (a failed durability barrier leaves the outcome
+    # indeterminate — the client was told WalFailed, never acked). The
+    # poisoned log accepted NOTHING afterwards: the second failed commit
+    # raised at append time and left no record.
+    be2 = BackendService(block_size=16)
+    summary = walmod.recover(be2, path)
+    assert summary["commits"] == 2
+    check = LocalServer(be2).begin()
+    assert check.read(fid, 0, 2) == b"ok"
+
+
+def test_fsync_failure_fails_whole_group_commit_batch(tmp_path):
+    path = str(tmp_path / "w.log")
+    log = walmod.WriteAheadLog(path)
+    be = BackendService(block_size=16, group_commit_window_s=0.02, wal=log)
+    setup = LocalServer(be)
+    fids = []
+    for i in range(3):
+        txn = setup.begin()
+        fid = txn.create(f"/g{i}")
+        txn.write(fid, 0, b"seed")
+        txn.commit()
+        fids.append(fid)
+
+    log._fsync = _FailingFsync()
+    errors = []
+    barrier = threading.Barrier(3)
+
+    def worker(i):
+        local = LocalServer(be)
+        txn = local.begin()
+        txn.write(fids[i], 0, b"x")  # disjoint files: nobody conflicts
+        barrier.wait()
+        try:
+            txn.commit()
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # every waiter in the batch got the typed failure — nobody was acked
+    assert len(errors) == 3
+    assert all(isinstance(e, walmod.WalFailed) for e in errors)
+
+
+def test_fsync_failure_travels_typed_over_the_wire(tmp_path):
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    server = BackendServer(
+        BackendService(block_size=16), wal_path=str(tmp_path / "waldir")
+    ).start()
+    try:
+        rb = RemoteBackend("127.0.0.1", server.port)
+        local = LocalServer(rb)
+        txn = local.begin()
+        fid = txn.create("/f")
+        txn.write(fid, 0, b"ok")
+        txn.commit()
+        server.wal._cur._fsync = _FailingFsync()
+        txn = local.begin()
+        txn.write(fid, 4, b"nope")
+        with pytest.raises(walmod.WalFailed):
+            txn.commit()
+        rb.close()
+    finally:
+        server.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint + compaction: bounded recovery
+# --------------------------------------------------------------------------- #
+def _mk_kind(kind):
+    if kind == "mono":
+        return BackendService(block_size=32)
+    return ShardedBackend(n_shards=2, block_size=32)
+
+
+def _run_workload(backend, seed, n_ops=60, ckpt_every=None, wal=None,
+                  epoch=1):
+    """Deterministic committed workload (creates/writes/appends/unlinks/
+    renames over a small path set). With ``ckpt_every``, a checkpoint +
+    compaction cycle runs mid-stream every that-many commits."""
+    rng = random.Random(seed)
+    local = LocalServer(backend)
+    paths = [f"/d/f{i}" for i in range(6)]
+    commits = 0
+    for _ in range(n_ops):
+        txn = local.begin()
+        p = rng.choice(paths)
+        r = rng.random()
+        try:
+            fid = txn.lookup(p)
+            if fid is None:
+                fid = txn.create(p)
+                txn.write(fid, 0, bytes([rng.randrange(256)]) * 8)
+            elif r < 0.45:
+                off = rng.randrange(0, 64)
+                txn.write(fid, off, rng.randbytes(rng.randrange(1, 24)))
+            elif r < 0.65:
+                end = txn.length(fid)
+                txn.write(fid, end, b"app" * rng.randrange(1, 4))
+            elif r < 0.8:
+                txn.unlink(p)
+            else:
+                q = rng.choice(paths)
+                if q != p and txn.lookup(q) is None:
+                    txn.rename(p, q)
+            txn.commit()
+            commits += 1
+        except Conflict:  # single-threaded: shouldn't happen
+            txn.abort()
+        if ckpt_every and wal is not None and commits % ckpt_every == 0:
+            walmod.checkpoint_backend(wal, backend, epoch)
+    return commits
+
+
+def _digest(backend):
+    """Canonical state fingerprint from the snapshot exporter: blocks,
+    metas (kind + mtime included), namespace, commit-log tail, sequencers
+    and — for sharded — the sync vector. next_fid is normalized out (see
+    test_checkpoint_restores_alloc_floor_genesis_replay_does_not)."""
+    with backend.freeze():
+        snap = backend.export_snapshot()
+
+    def canon(s):
+        s = dict(s)
+        s.pop("next_fid", None)
+        if s.get("kind") == "sharded":
+            s["shards"] = [canon(sub) for sub in s["shards"]]
+        else:
+            for key in ("blocks", "metas", "names"):
+                s[key] = sorted(s[key], key=lambda e: repr(e[0]))
+        return s
+
+    return canon(snap), backend.latest_ts
+
+
+@pytest.mark.parametrize("kind", ["mono", "sharded2"])
+@pytest.mark.parametrize("seed", [1, 7, 23])
+def test_checkpoint_tail_recovery_equals_genesis_replay(tmp_path, kind, seed):
+    """Property: replay-from-genesis and checkpoint+tail recovery rebuild
+    identical backend state — blocks, metas (kind/mtime_ts), namespace,
+    commit-log tail, sequencers, sync vector — for mono AND sharded."""
+    wal_a = walmod.SegmentedWal(str(tmp_path / "a"))
+    be_a = _mk_kind(kind)
+    be_a.set_wal(wal_a)
+    _run_workload(be_a, seed)
+    wal_a.close()
+
+    wal_b = walmod.SegmentedWal(str(tmp_path / "b"))
+    be_b = _mk_kind(kind)
+    be_b.set_wal(wal_b)
+    _run_workload(be_b, seed, ckpt_every=17, wal=wal_b)
+    wal_b.close()
+
+    assert _digest(be_a) == _digest(be_b)      # same workload, same state
+
+    rec_a = _mk_kind(kind)
+    sum_a = walmod.recover_dir(rec_a, str(tmp_path / "a"))
+    rec_b = _mk_kind(kind)
+    sum_b = walmod.recover_dir(rec_b, str(tmp_path / "b"))
+    assert sum_a["ckpt_loaded"] is False
+    assert sum_b["ckpt_loaded"] is True
+    assert sum_b["commits"] < sum_a["commits"]  # tail-only replay
+    assert _digest(rec_a) == _digest(be_a)
+    assert _digest(rec_b) == _digest(be_a)
+
+
+def test_checkpoint_restores_alloc_floor_genesis_replay_does_not(tmp_path):
+    """The checkpoint snapshot carries the store's file-id floor, which a
+    pure effect-replay cannot reconstruct (allocations are not logged —
+    only server-side leases are). Checkpoint+tail is therefore strictly
+    better here; the digest comparison normalizes the field out."""
+    wal = walmod.SegmentedWal(str(tmp_path / "w"))
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    _run_workload(be, 3, n_ops=20)
+    walmod.checkpoint_backend(wal, be, epoch=1)
+    wal.close()
+    rec = BackendService(block_size=32)
+    walmod.recover_dir(rec, str(tmp_path / "w"))
+    assert rec.store._next_file_id == be.store._next_file_id
+
+
+def test_compaction_shrinks_log_dir(tmp_path):
+    """Same workload with and without checkpointing: the compacted log
+    directory must be strictly smaller (segments covered by the
+    checkpoint are deleted; the checkpoint stores current state, not
+    history)."""
+    wal_a = walmod.SegmentedWal(str(tmp_path / "plain"))
+    be_a = BackendService(block_size=32)
+    be_a.set_wal(wal_a)
+    # hammer ONE file so history >> state
+    local = LocalServer(be_a)
+    txn = local.begin()
+    fid = txn.create("/hot")
+    txn.write(fid, 0, b"\0" * 64)
+    txn.commit()
+    for i in range(200):
+        txn = local.begin()
+        txn.write(fid, (i % 8) * 8, b"%08d" % i)
+        txn.commit()
+    wal_a.close()
+
+    wal_b = walmod.SegmentedWal(str(tmp_path / "ckpt"))
+    be_b = BackendService(block_size=32)
+    be_b.set_wal(wal_b)
+    local = LocalServer(be_b)
+    txn = local.begin()
+    fid = txn.create("/hot")
+    txn.write(fid, 0, b"\0" * 64)
+    txn.commit()
+    for i in range(200):
+        txn = local.begin()
+        txn.write(fid, (i % 8) * 8, b"%08d" % i)
+        txn.commit()
+        if (i + 1) % 50 == 0:
+            walmod.checkpoint_backend(wal_b, be_b, epoch=1)
+    wal_b.close()
+
+    def dir_bytes(d):
+        return sum(
+            os.path.getsize(os.path.join(d, n)) for n in os.listdir(d)
+        )
+
+    plain, compacted = dir_bytes(str(tmp_path / "plain")), dir_bytes(
+        str(tmp_path / "ckpt")
+    )
+    assert compacted < plain
+    # and the compacted dir still recovers the exact same state
+    rec = BackendService(block_size=32)
+    walmod.recover_dir(rec, str(tmp_path / "ckpt"))
+    assert _digest(rec) == _digest(be_a)
+
+
+@pytest.mark.parametrize("spoil", ["garbage", "truncated", "no_end_marker"])
+def test_torn_newest_checkpoint_falls_back_to_previous(tmp_path, spoil):
+    """A torn newest checkpoint (crash/corruption at install) must not
+    lose acked commits: recovery falls back to the previous checkpoint
+    plus the full remaining tail."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    _run_workload(be, 11, n_ops=30)
+    walmod.checkpoint_backend(wal, be, epoch=1)      # good checkpoint
+    _run_workload(be, 12, n_ops=10)                  # tail after it
+    wal.close()
+
+    # a "newer" checkpoint that is torn — recovery must reject it
+    torn = os.path.join(d, walmod._ckpt_name(99))
+    if spoil == "garbage":
+        with open(torn, "wb") as f:
+            f.write(os.urandom(64))
+    elif spoil == "truncated":
+        good = [p for _, p in walmod.list_checkpoints(d)
+                if not p.endswith(torn)]
+        with open(good[0], "rb") as f:
+            data = f.read()
+        with open(torn, "wb") as f:
+            f.write(data[: len(data) // 2])
+    else:  # framed records but no end marker
+        with open(torn, "wb") as f:
+            walmod._append_framed(
+                f, ("ckpt-hdr", walmod.CKPT_VERSION, 99, 1, 1)
+            )
+    # plus an orphaned tmp from the same crash
+    with open(torn + ".tmp", "wb") as f:
+        f.write(b"half-written")
+
+    rec = BackendService(block_size=32)
+    summary = walmod.recover_dir(rec, d)
+    assert summary["ckpt_loaded"] is True
+    assert summary["ckpt_seg"] == 1                  # the previous one
+    assert _digest(rec) == _digest(be)               # zero acked loss
+    # torn artifacts cleaned up
+    assert not os.path.exists(torn)
+    assert not os.path.exists(torn + ".tmp")
+
+
+def test_crash_between_install_and_segment_delete(tmp_path, monkeypatch):
+    """Crash after the checkpoint's rename but before compaction deletes
+    the covered segments: recovery must use the checkpoint, replay ONLY
+    the tail (covered segments are present but skipped — replaying them
+    on top of the snapshot would corrupt version chains), and finish the
+    deletion."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    _run_workload(be, 5, n_ops=25)
+    monkeypatch.setattr(walmod.SegmentedWal, "drop_through",
+                        lambda self, idx: 0)         # "crash" before delete
+    walmod.checkpoint_backend(wal, be, epoch=1)
+    monkeypatch.undo()
+    assert walmod.list_segments(d)[0][0] == 1        # covered seg still here
+    tail = _run_workload(be, 6, n_ops=7)
+    wal.close()
+
+    rec = BackendService(block_size=32)
+    summary = walmod.recover_dir(rec, d)
+    assert summary["ckpt_loaded"] is True
+    assert summary["commits"] == tail                # tail only, counter-proven
+    assert _digest(rec) == _digest(be)
+    assert walmod.list_segments(d)[0][0] > summary["ckpt_seg"]  # cleaned
+
+
+def test_recover_empty_and_checkpointless_dirs(tmp_path):
+    rec = BackendService(block_size=32)
+    summary = walmod.recover_dir(rec, str(tmp_path / "fresh"))
+    assert summary == {
+        "commits": 0, "epoch": 0, "fid_floor": 1,
+        "ckpt_seg": 0, "ckpt_loaded": False,
+    }
+    # segments but no checkpoint: plain full replay
+    d = str(tmp_path / "nockpt")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    n = _run_workload(be, 9, n_ops=15)
+    wal.close()
+    rec = BackendService(block_size=32)
+    summary = walmod.recover_dir(rec, d)
+    assert summary["ckpt_loaded"] is False
+    assert summary["commits"] == n
+    assert _digest(rec) == _digest(be)
+
+
+def test_checkpoint_preserves_lease_floor_across_compaction(tmp_path):
+    """A lease logged in a segment that compaction deletes must stay
+    covered by the checkpoint's fid floor (grant bumps the counter before
+    appending, and the checkpointer reads the counter after rotating)."""
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    d = str(tmp_path / "waldir")
+    server = BackendServer(BackendService(block_size=16), wal_path=d).start()
+    rb = RemoteBackend("127.0.0.1", server.port, lease_size=8)
+    first = [rb.alloc_file_id() for _ in range(20)]   # 3 leases logged
+    assert rb.checkpoint()["segments_removed"] >= 1   # lease records gone
+    rb.close()
+    server.shutdown()
+
+    server2 = BackendServer(BackendService(block_size=16), wal_path=d).start()
+    rb2 = RemoteBackend("127.0.0.1", server2.port, lease_size=8)
+    second = [rb2.alloc_file_id() for _ in range(20)]
+    assert not (set(first) & set(second))
+    rb2.close()
+    server2.shutdown()
+
+
+def test_checkpoint_concurrent_with_commits(tmp_path):
+    """Checkpoints must not stall the commit path for their whole
+    duration: commits from 4 threads interleave with repeated checkpoint
+    cycles and every acked commit is recovered."""
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    d = str(tmp_path / "waldir")
+    server = BackendServer(ShardedBackend(n_shards=2, block_size=32),
+                           wal_path=d).start()
+    rb = RemoteBackend("127.0.0.1", server.port)
+    setup = LocalServer(rb)
+    fids = []
+    for i in range(4):
+        txn = setup.begin()
+        fid = txn.create(f"/c{i}")
+        txn.write(fid, 0, (0).to_bytes(8, "little"))
+        txn.commit()
+        fids.append(fid)
+
+    done = threading.Event()
+    acked = [0] * 4
+
+    def committer(i):
+        local = LocalServer(rb)
+        while not done.is_set():
+            txn = local.begin()
+            cur = int.from_bytes(txn.read(fids[i], 0, 8), "little")
+            txn.write(fids[i], 0, (cur + 1).to_bytes(8, "little"))
+            try:
+                txn.commit()
+            except Conflict:
+                continue
+            acked[i] = cur + 1
+
+    threads = [threading.Thread(target=committer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for _ in range(5):
+        time.sleep(0.02)
+        rb.checkpoint()
+    done.set()
+    for t in threads:
+        t.join()
+    final = []
+    txn = LocalServer(rb).begin()
+    for i in range(4):
+        final.append(int.from_bytes(txn.read(fids[i], 0, 8), "little"))
+    txn.commit()
+    rb.close()
+    server.shutdown()
+
+    rec = ShardedBackend(n_shards=2, block_size=32)
+    walmod.recover_dir(rec, d)
+    check = LocalServer(rec).begin()
+    for i in range(4):
+        got = int.from_bytes(check.read(fids[i], 0, 8), "little")
+        assert got == final[i] >= acked[i]
+
+
+@pytest.mark.parametrize("shards", [0, 2], ids=["mono", "sharded2"])
+def test_sigkill_with_checkpointing_replays_only_the_tail(tmp_path, shards):
+    """SIGKILL a server that has already compacted: acked commits
+    survive, restart replays ONLY the post-checkpoint tail
+    (counter-proven via the recovered= field), and the covered segments
+    are gone from disk."""
+    from repro.core.remote import RemoteBackend
+
+    wal_path = tmp_path / "waldir"
+    extra = ("--checkpoint-records", "8", "--checkpoint-interval", "0.02")
+    proc, port, _ = _spawn_server(wal_path, shards=shards, extra=extra)
+    total = 30
+    try:
+        rb = RemoteBackend("127.0.0.1", port)
+        local = LocalServer(rb)
+        txn = local.begin()
+        fid = txn.create("/counter")
+        txn.write(fid, 0, (0).to_bytes(8, "little"))
+        txn.commit()
+        for _ in range(total):
+            txn = local.begin()
+            cur = int.from_bytes(txn.read(fid, 0, 8), "little")
+            txn.write(fid, 0, (cur + 1).to_bytes(8, "little"))
+            txn.commit()
+        deadline = time.time() + 10
+        while not walmod.list_checkpoints(str(wal_path)):
+            assert time.time() < deadline, "checkpoint trigger never fired"
+            time.sleep(0.02)
+        # a couple more acked commits land in the post-checkpoint tail
+        for _ in range(3):
+            txn = local.begin()
+            cur = int.from_bytes(txn.read(fid, 0, 8), "little")
+            txn.write(fid, 0, (cur + 1).to_bytes(8, "little"))
+            txn.commit()
+        rb.close()
+    finally:
+        proc.kill()
+        proc.wait()
+
+    _tear_newest_segment(wal_path)
+    covered = walmod.list_checkpoints(str(wal_path))[-1][0]
+    assert all(i > covered for i, _ in walmod.list_segments(str(wal_path)))
+
+    proc2, port2, fields = _spawn_server(wal_path, shards=shards, extra=extra)
+    try:
+        assert int(fields["ckpt_seg"]) >= 1
+        # bounded recovery: the tail is strictly smaller than the history
+        assert int(fields["recovered"]) < total + 4
+        rb2 = RemoteBackend("127.0.0.1", port2)
+        txn = LocalServer(rb2).begin()
+        assert int.from_bytes(txn.read(fid, 0, 8), "little") == total + 3
+        txn.commit()
+        rb2.close()
+    finally:
+        proc2.kill()
+        proc2.wait()
+
+
+# --------------------------------------------------------------------------- #
+# recovery refusal: coverage holes are fatal, not silently replayed-around
+# --------------------------------------------------------------------------- #
+def test_recovery_refuses_when_only_checkpoint_rots(tmp_path):
+    """If the ONLY checkpoint is invalid and its covered segments are
+    already compacted away, recovery must refuse to start — rebuilding
+    from the surviving tail alone would silently drop acked commits."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    _run_workload(be, 21, n_ops=20)
+    walmod.checkpoint_backend(wal, be, epoch=1)      # segments <= 1 deleted
+    _run_workload(be, 22, n_ops=5)
+    wal.close()
+    (ckpt_path,) = [p for _, p in walmod.list_checkpoints(d)]
+    with open(ckpt_path, "r+b") as f:                # bit rot
+        f.seek(8)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(walmod.RecoveryError):
+        walmod.recover_dir(BackendService(block_size=32), d)
+    assert os.path.exists(ckpt_path)                 # evidence preserved
+
+
+def test_recovery_refuses_segment_gap_and_mid_log_tear(tmp_path):
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    _run_workload(be, 31, n_ops=10)
+    wal.rotate()
+    _run_workload(be, 32, n_ops=10)
+    wal.rotate()
+    _run_workload(be, 33, n_ops=10)
+    wal.close()
+    segs = walmod.list_segments(d)
+    assert len(segs) == 3
+
+    # a torn record INSIDE a non-final segment is storage corruption
+    with open(segs[1][1], "r+b") as f:
+        f.seek(10)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(walmod.RecoveryError):
+        walmod.recover_dir(BackendService(block_size=32), d)
+
+    # a missing middle segment is a coverage hole
+    os.unlink(segs[1][1])
+    with pytest.raises(walmod.RecoveryError):
+        walmod.recover_dir(BackendService(block_size=32), d)
