@@ -1,0 +1,100 @@
+"""Gate CI on transport-benchmark regressions.
+
+Compares a freshly measured ``BENCH_remote.json`` against the baseline
+committed in the repo. CI machines are slower and noisier than the box
+that recorded the baseline, so the gate is a *tolerance band*, not an
+equality check:
+
+- ``LOWER_BETTER`` metrics (latencies) may be at most ``TOLERANCE``×
+  the baseline value.
+- ``HIGHER_BETTER`` metrics (throughputs) must reach at least
+  ``1/TOLERANCE`` of the baseline value.
+- ``EXACT`` metrics are invariants (RPC counts), compared exactly —
+  machine speed cannot excuse an extra round trip.
+
+A metric missing from the current run fails (a silently dropped row is
+how a gate rots); a metric missing from the *baseline* is skipped, so
+adding a new row to the bench does not require regenerating baselines
+in the same change.
+
+Usage::
+
+    python benchmarks/check_regression.py BASELINE.json CURRENT.json
+
+Exit status 0 = within band, 1 = regression (details on stderr).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict
+
+#: slowdown band: CI boxes legitimately run ~2x slower than the bench
+#: box; anything past this is a transport regression, not machine noise
+TOLERANCE = 2.5
+
+LOWER_BETTER = {
+    "remote_seq_socket",
+    "remote_seq_socket_p50",
+    "remote_seq_socket_p95",
+    "remote_seq_socket_p99",
+    "remote_seq_socket_wal",
+    "remote_fetch_batched_16blk",
+}
+HIGHER_BETTER = {
+    "remote_tps_socket",
+    "remote_reads_pipelined",
+}
+EXACT = {
+    "remote_fetch_batch_rpcs",
+}
+
+
+def _load(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["metric"]: float(r["value"]) for r in doc["results"]}
+
+
+def check(baseline: Dict[str, float], current: Dict[str, float]):
+    """Yield (metric, base, cur, verdict, detail) for every gated metric."""
+    for metric in sorted(LOWER_BETTER | HIGHER_BETTER | EXACT):
+        base = baseline.get(metric)
+        if base is None:
+            yield metric, None, current.get(metric), "skip", "not in baseline"
+            continue
+        cur = current.get(metric)
+        if cur is None:
+            yield metric, base, None, "FAIL", "missing from current run"
+            continue
+        if metric in EXACT:
+            ok = cur == base
+            detail = f"must equal {base:g}"
+        elif metric in LOWER_BETTER:
+            ok = cur <= base * TOLERANCE
+            detail = f"<= {base * TOLERANCE:.1f} ({TOLERANCE}x of {base:g})"
+        else:
+            ok = cur >= base / TOLERANCE
+            detail = f">= {base / TOLERANCE:.1f} ({base:g}/{TOLERANCE})"
+        yield metric, base, cur, ("ok" if ok else "FAIL"), detail
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    baseline, current = _load(argv[0]), _load(argv[1])
+    failed = False
+    for metric, base, cur, verdict, detail in check(baseline, current):
+        line = f"{verdict:>4}  {metric}: baseline={base} current={cur} ({detail})"
+        print(line, file=sys.stderr if verdict == "FAIL" else sys.stdout)
+        failed |= verdict == "FAIL"
+    if failed:
+        print("transport benchmark regression detected", file=sys.stderr)
+        return 1
+    print("benchmark within tolerance band")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -281,6 +281,10 @@ class Transaction:
         # probe_meta results, reused by _file so a VFS kind-check +
         # file_info pair costs ONE fetch_meta round trip, not two
         self._probed: Dict[FileId, Tuple[Timestamp, object]] = {}
+        # lookup results (ver, fid) by path: repeat lookups of a path the
+        # txn already observed are free, and lookup_many prefetches a
+        # whole directory walk into it in ONE round trip
+        self._names: Dict[str, Tuple[Timestamp, Optional[FileId]]] = {}
         self.committed_payload: Optional[TxnPayload] = None
         self.done = False
 
@@ -291,10 +295,55 @@ class Transaction:
         at = self.read_ts if self.read_only else None
         if path in self.name_updates:
             return self.name_updates[path]
+        cached = self._names.get(path)
+        if cached is not None:
+            return cached[1]
         ver, fid = self.backend.lookup(path, at)
+        self._names[path] = (ver, fid)
         if not self.read_only:
             self.name_reads.setdefault(path, ver)
         return fid
+
+    def lookup_many(self, paths: List[str]) -> List[Optional[FileId]]:
+        """Resolve many paths in ONE backend round trip (modulo txn-local
+        overlays and already-cached names). Records the same name reads
+        ``lookup`` would — a deep-path walk that prefetches its ancestry
+        here has identical OCC validation, it just stops paying a round
+        trip per component."""
+        at = self.read_ts if self.read_only else None
+        missing = [
+            p for p in paths
+            if p not in self.name_updates and p not in self._names
+        ]
+        if missing:
+            for p, (ver, fid) in zip(
+                missing, self.backend.lookup_many(missing, at)
+            ):
+                self._names[p] = (ver, fid)
+                if not self.read_only:
+                    self.name_reads.setdefault(p, ver)
+        return [
+            self.name_updates[p]
+            if p in self.name_updates else self._names[p][1]
+            for p in paths
+        ]
+
+    def probe_metas(self, fids: List[FileId]) -> None:
+        """Prefetch unvalidated metas for many file ids in ONE round trip;
+        subsequent ``probe_meta`` / ``file_info`` calls on these ids hit
+        the probe cache. Ids the txn already has state for are skipped;
+        never-bound ids cache as absent."""
+        at = self.read_ts if self.read_only else None
+        missing = [
+            fid for fid in fids
+            if fid not in self._files and fid not in self._probed
+        ]
+        if not missing:
+            return
+        for fid, entry in zip(missing, self.backend.fetch_metas(missing, at)):
+            # entry is None for a never-bound id; cache the miss so the
+            # walk does not re-probe it (probe_meta maps it to None)
+            self._probed[fid] = entry if entry is not None else (0, None)
 
     def readdir(self, prefix: str) -> List[str]:
         """Direct children bound under ``prefix`` — a transactional read.
@@ -437,10 +486,10 @@ class Transaction:
             try:
                 probed = self.backend.fetch_meta(fid, at)
             except NotFound:
-                return None
+                probed = (0, None)
             self._probed[fid] = probed
         meta = probed[1]
-        return meta if meta.exists else None
+        return meta if meta is not None and meta.exists else None
 
     def file_kind(self, fid: FileId) -> Optional[str]:
         """``"f"`` / ``"d"`` for an existing file id, else None. Kind is

@@ -322,10 +322,26 @@ class RemoteBackend(_RemoteCore):
     """Multiplexed, pipelined transport (the default).
 
     ``submit(op, *args)`` puts the request on the wire and returns a
-    ``BackendFuture`` immediately; the reader thread resolves it when the
-    (possibly out-of-order) reply lands. Blocking calls are futures the
-    caller waits on — one code path either way.
-    """
+    ``BackendFuture`` immediately; replies (possibly out of order) are
+    matched back to futures by request id. Blocking calls are futures
+    the caller waits on — one code path either way.
+
+    **Serial fast path.** Receiving is lease-based: whichever thread
+    blocks first on an unresolved future takes the *reader lease* and
+    recvs replies itself, resolving every future whose reply it sees —
+    a serial RPC therefore completes on the calling thread with zero
+    extra wakeups (the pre-PR-6 design crossed ~2: reader-thread recv,
+    then event hand-off to the caller). A standing reader thread still
+    exists, but parked: it only reads when woken for timed waits or
+    hand-offs, plus a low-frequency opportunistic drain that catches
+    unsolicited frames (stray replies, server FIN) while no caller is
+    waiting."""
+
+    #: parked-reader tick: how often the standing reader opportunistically
+    #: drains the socket when nobody holds the lease
+    IDLE_TICK = 0.05
+    #: follower retry tick while another thread holds the reader lease
+    FOLLOW_TICK = 0.05
 
     def __init__(self, host: str, port: int, lease_size: int = DEFAULT_LEASE,
                  connect_timeout_s: float = 10.0):
@@ -336,7 +352,10 @@ class RemoteBackend(_RemoteCore):
         self._send_buf = bytearray()         # frames awaiting a flush
         self._send_sock: Optional[socket.socket] = None
         self._sock: Optional[socket.socket] = None
+        self._rdr: Optional[wire.FrameReader] = None
         self._reader: Optional[threading.Thread] = None
+        self._rx_lease = threading.Lock()    # whoever holds it recvs
+        self._rx_wake = threading.Event()    # kicks the parked reader
         self._next_id = 1
         self._pending: Dict[int, Tuple[BackendFuture, _Decoder]] = {}
         self.stray_replies = 0   # unknown/duplicate request ids observed
@@ -351,40 +370,133 @@ class RemoteBackend(_RemoteCore):
     def _connect_locked(self) -> socket.socket:
         sock = self._dial()
         self._sock = sock
-        t = threading.Thread(
-            target=self._reader_loop, args=(sock,),
-            name="faasfs-mux-reader", daemon=True,
-        )
-        t.start()
-        self._reader = t
+        self._rdr = wire.FrameReader(sock)
+        if self._reader is None:
+            # ONE standing (parked) reader for the client's lifetime —
+            # reconnects swap the socket, not the thread
+            t = threading.Thread(
+                target=self._reader_loop,
+                name="faasfs-mux-reader", daemon=True,
+            )
+            t.start()
+            self._reader = t
         return sock
 
-    def _reader_loop(self, sock: socket.socket) -> None:
-        reader = wire.FrameReader(sock)  # one recv drains a reply burst
+    # ------------------------------------------------------------------ #
+    # receive path (always under the reader lease)
+    # ------------------------------------------------------------------ #
+    def _dispatch_reply(self, msg_type: int, req_id: int, obj: Any) -> None:
+        with self._mu:
+            entry = self._pending.pop(req_id, None)
+        if entry is None:
+            # unknown or already-answered id: never mis-deliver — count
+            # it and keep the stream (framing is intact)
+            self.stray_replies += 1
+            return
+        fut, decode = entry
+        if msg_type == wire.T_ERR:
+            fut.set_exception(wire.exception_from_obj(obj))
+        elif msg_type == wire.T_OK:
+            try:
+                fut.set_result(obj if decode is None else decode(obj))
+            except Exception as e:  # decoder bug ≠ wedged caller
+                fut.set_exception(e)
+        else:
+            fut.set_exception(
+                wire.WireError(f"unexpected reply type 0x{msg_type:02x}")
+            )
+
+    def _rx_block(self, sock, rdr) -> bool:
+        """Blocking read of at least one frame, then drain whatever else
+        is already buffered — one recv resolves a whole reply burst."""
         try:
+            self._dispatch_reply(*rdr.recv_frame())
             while True:
-                msg_type, req_id, obj = reader.recv_frame()
-                with self._mu:
-                    entry = self._pending.pop(req_id, None)
-                if entry is None:
-                    # unknown or already-answered id: never mis-deliver —
-                    # count it and keep the stream (framing is intact)
-                    self.stray_replies += 1
-                    continue
-                fut, decode = entry
-                if msg_type == wire.T_ERR:
-                    fut.set_exception(wire.exception_from_obj(obj))
-                elif msg_type == wire.T_OK:
-                    try:
-                        fut.set_result(obj if decode is None else decode(obj))
-                    except Exception as e:  # decoder bug ≠ wedged caller
-                        fut.set_exception(e)
-                else:
-                    fut.set_exception(
-                        wire.WireError(f"unexpected reply type 0x{msg_type:02x}")
-                    )
+                frame = rdr.next_frame()
+                if frame is None:
+                    return True
+                self._dispatch_reply(*frame)
         except (wire.WireError, OSError) as e:
             self._fail_conn(sock, e)
+            return False
+
+    def _rx_opportunistic(self, sock, rdr) -> None:
+        """Drain frames that already arrived, without ever blocking."""
+        try:
+            while True:
+                frame = rdr.next_frame()
+                if frame is None:
+                    n = rdr.fill(socket.MSG_DONTWAIT)
+                    if n is None:
+                        return  # nothing queued in the kernel
+                    if n == 0:
+                        raise wire.ConnectionClosed("socket closed")
+                    continue
+                self._dispatch_reply(*frame)
+        except (wire.WireError, OSError) as e:
+            self._fail_conn(sock, e)
+
+    def _reader_loop(self) -> None:
+        while True:
+            self._rx_wake.wait(self.IDLE_TICK)
+            if self._closed:
+                return
+            self._rx_wake.clear()
+            self._drain_replies()
+
+    def _drain_replies(self) -> None:
+        while True:
+            if not self._rx_lease.acquire(blocking=False):
+                return  # a waiting caller is reading; it hands back
+            try:
+                if self._closed:
+                    return
+                with self._mu:
+                    sock, rdr = self._sock, self._rdr
+                    has_pending = bool(self._pending)
+                if sock is None or rdr is None:
+                    return
+                if has_pending:
+                    if not self._rx_block(sock, rdr):
+                        return
+                    # loop: re-check for still-pending requests
+                else:
+                    self._rx_opportunistic(sock, rdr)
+                    return
+            finally:
+                self._rx_lease.release()
+
+    def _wait_for(self, fut: BackendFuture, timeout) -> None:
+        """``BackendFuture._wait`` hook: drive the receive path from the
+        waiting thread (untimed waits), or kick the parked reader and
+        let the caller park on the event (timed waits / done() polls)."""
+        ev = fut._event
+        if timeout is not None:
+            self._rx_wake.set()
+            return
+        while not ev.is_set():
+            if self._rx_lease.acquire(blocking=False):
+                try:
+                    if ev.is_set():
+                        break
+                    with self._mu:
+                        sock, rdr = self._sock, self._rdr
+                    if sock is None or rdr is None:
+                        # connection gone: _fail_conn / close resolves
+                        # our future; tolerate the tiny re-dial window
+                        ev.wait(0.01)
+                        continue
+                    self._rx_block(sock, rdr)
+                finally:
+                    self._rx_lease.release()
+            else:
+                # another thread holds the lease; its reads resolve our
+                # event, and the tick guards the lease hand-off race
+                ev.wait(self.FOLLOW_TICK)
+        with self._mu:
+            others = bool(self._pending)
+        if others:
+            self._rx_wake.set()  # hand off: wake the parked reader
 
     def _fail_conn(self, sock: socket.socket, cause: BaseException) -> None:
         """Tear down ``sock`` and fail every future still waiting on it.
@@ -402,6 +514,7 @@ class RemoteBackend(_RemoteCore):
             current = self._sock is sock
             if current:
                 self._sock = None
+                self._rdr = None
                 pending, self._pending = self._pending, {}
             else:
                 pending = {}
@@ -426,7 +539,9 @@ class RemoteBackend(_RemoteCore):
         with self._mu:
             self._closed = True
             sock, self._sock = self._sock, None
+            self._rdr = None
             pending, self._pending = self._pending, {}
+        self._rx_wake.set()  # unpark the reader so it can exit
         # in-flight requests fail typed instead of hanging or leaking;
         # fail-then-sweep ordering as in _fail_conn
         for fut, _ in pending.values():
@@ -489,10 +604,11 @@ class RemoteBackend(_RemoteCore):
                 # caller has been told ConnectionClosed — it must not be
                 # flushed onto a replacement connection later
                 return fut
-            self._send_buf += wire.encode_frame(msg_type, obj, rid)
+            wire.encode_frame_into(self._send_buf, msg_type, obj, rid)
             self._send_sock = sock
             big = len(self._send_buf) >= self.MAX_SEND_BUF
         fut._flush = self._flush_sends
+        fut._wait = self._wait_for
         if big:
             self._flush_sends()
         return fut

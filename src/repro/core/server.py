@@ -5,12 +5,27 @@ Backend Service, finally behind a real socket).
 monolithic ``BackendService`` or ``ShardedBackend`` — and serves it to
 concurrent ``RemoteBackend`` clients over TCP:
 
+  * **event-loop core**: one single-threaded ``selectors`` loop owns the
+    listener and every connection. Sockets are non-blocking; requests
+    are parsed straight out of each connection's ``recv_into`` buffer
+    and replies accumulate in a per-connection scatter-gather
+    ``SendQueue`` that leaves in one ``sendmsg`` per burst — block
+    payloads ride as their own segments, uncopied. No per-connection
+    reader threads, so a busy server spends its cycles on requests
+    instead of GIL hand-offs between dozens of parked readers.
+  * **fast ops inline, blockable ops pooled**: pure in-memory requests
+    (fetches, lookups, sync, stats) are dispatched inline on the loop —
+    no scheduling hop. Requests that may block (``begin`` group-commit
+    windows, ``commit`` WAL fsyncs, lease grants, checkpoint cycles) go
+    to a small worker pool and complete via a wakeup pipe back into the
+    loop, which then queues the reply — an fsync never stalls the loop,
+    and a slow commit cannot head-of-line block the reads pipelined
+    behind it on the same connection.
   * **pipelined connections** (wire v2): every request frame carries a
-    request id; a per-connection reader hands each request to a worker
-    pool and replies are sent *as handlers finish*, out of order if a
-    later request completes first. One connection therefore carries many
-    in-flight requests — the client multiplexes futures by id instead of
-    holding one pooled connection per outstanding call.
+    request id and replies are sent *as handlers finish*, out of order
+    if a later request completes first. One connection therefore
+    carries many in-flight requests — the client multiplexes futures by
+    id instead of holding one pooled connection per outstanding call.
   * **one client RPC per logical operation**: ``begin`` and the batch
     ops (``fetch_blocks`` / ``fetch_metas`` / ``lookup_many`` /
     ``sync_files``) against a ``ShardedBackend`` are a single frame —
@@ -31,9 +46,11 @@ concurrent ``RemoteBackend`` clients over TCP:
     O(tail), not O(history).
   * **pipelining backpressure**: each connection may have at most
     ``max_inflight_per_conn`` dispatched-but-unreplied blockable
-    requests; past the cap the reader stops draining the socket, so a
-    hostile client flooding ``begin``/``commit`` frames stalls in its
-    own TCP send path instead of growing the worker queue without bound.
+    requests; past the cap the loop deregisters the connection's read
+    event and stops parsing its buffer, so a hostile client flooding
+    ``begin``/``commit`` frames stalls in its own TCP send path instead
+    of growing the worker queue without bound. Completions re-arm the
+    read event and resume parsing the already-buffered frames.
   * **fenced file-id allocation**: instead of proxying the coordinator
     counter one id at a time, the server grants *range leases*
     ``(epoch, start, count)``. Each grant is WAL-logged durably before
@@ -41,9 +58,9 @@ concurrent ``RemoteBackend`` clients over TCP:
     the epoch (bumped on every restart) fences stale clients — a lease
     refresh carrying an old epoch gets ``StaleEpoch`` and must re-lease.
   * **clean shutdown**: ``shutdown(drain=True)`` (what the standalone
-    entry point does on SIGTERM/SIGINT) stops accepting, waits for
-    in-flight requests to finish and their replies to flush, fsyncs the
-    WAL, and only then tears the sockets down — no torn-tail noise for
+    entry point does on SIGTERM/SIGINT) stops accepting, lets the loop
+    finish in-flight requests and flush their replies, fsyncs the WAL,
+    and only then tears the sockets down — no torn-tail noise for
     examples or orchestrators that stop the process politely.
 
 Run standalone (the crash-recovery tests SIGKILL this process; SIGTERM
@@ -55,11 +72,13 @@ from __future__ import annotations
 
 import argparse
 import os
+import queue
+import selectors
 import signal
 import socket
 import sys
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from collections import deque
 from typing import Any, Dict, Optional, Set, Tuple
 
 from repro.core import wal as walmod
@@ -113,11 +132,68 @@ class FileIdAllocator:
             return self._next
 
 
+class _WorkerPool:
+    """Minimal fixed-size pool: ``submit`` enqueues ``fn(*args)`` with
+    no Future allocation — completion travels back to the event loop
+    through the server's own wakeup pipe, not a pool abstraction."""
+
+    def __init__(self, n: int, name: str = "faasfs-rpc"):
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._shut = False
+        self._threads = []
+        for i in range(n):
+            t = threading.Thread(
+                target=self._run, name=f"{name}-{i}", daemon=True
+            )
+            t.start()
+            self._threads.append(t)
+
+    def submit(self, fn, *args) -> None:
+        if self._shut:
+            raise RuntimeError("worker pool is shut down")
+        self._q.put((fn, args))
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, args = item
+            fn(*args)
+
+    def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
+        self._shut = True
+        for _ in self._threads:
+            self._q.put(None)
+        if wait:
+            for t in self._threads:
+                t.join(timeout=timeout)
+
+
+class _Conn:
+    """Per-connection event-loop state: the rolling read buffer, the
+    scatter-gather output queue, and the backpressure window."""
+
+    __slots__ = ("sock", "reader", "out", "inflight", "mask", "closed")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.reader = wire.FrameReader(sock)
+        self.out = wire.SendQueue()
+        self.inflight = 0    # dispatched-but-unreplied blockable requests
+        self.mask = 0        # currently registered selector events
+        self.closed = False
+
+
 class BackendServer:
     #: checkpoint trigger defaults: compact once the live segments exceed
     #: this many bytes (or this many appended records, whichever first)
     CHECKPOINT_BYTES_DEFAULT = 16 << 20
     CHECKPOINT_RECORDS_DEFAULT = 50_000
+
+    #: stop parsing/reading a connection whose unflushed replies exceed
+    #: this many bytes — flow control toward a slow-reading client
+    OUT_HIGH_WATER = 1 << 20
 
     def __init__(
         self,
@@ -177,26 +253,29 @@ class BackendServer:
         self._lsock.bind((host, port))
         self._lsock.listen(128)
         self.host, self.port = self._lsock.getsockname()
-        self._stop = threading.Event()
-        self._conns: Set[socket.socket] = set()
-        self._conns_mu = threading.Lock()
-        self._accept_thread: Optional[threading.Thread] = None
-        # request handlers run here so one connection can have many
-        # requests in flight; replies go out as handlers finish
-        self._workers = ThreadPoolExecutor(
-            max_workers=max_workers, thread_name_prefix="faasfs-rpc"
-        )
-        self._inflight = 0
-        self._inflight_mu = threading.Lock()
-        self._drained = threading.Condition(self._inflight_mu)
+
+        self._stop = threading.Event()    # begin shutdown: no new requests
+        self._exit = threading.Event()    # loop must terminate now
+        self._drained_evt = threading.Event()
+        self._conns: Set[_Conn] = set()
+        self._loop_thread: Optional[threading.Thread] = None
+        # blockable requests run here so one connection can have many in
+        # flight; completed replies hop back into the loop via the pipe
+        self._workers = _WorkerPool(max_workers)
+        self._completions: deque = deque()
+        self._inflight = 0               # dispatched blockable requests
+        self._wake_r, self._wake_w = os.pipe()
+        os.set_blocking(self._wake_r, False)
+        os.set_blocking(self._wake_w, False)
+        self._wal_closed = False
 
     # ------------------------------------------------------------------ #
     def start(self) -> "BackendServer":
         t = threading.Thread(
-            target=self._accept_loop, name="faasfs-accept", daemon=True
+            target=self._loop, name="faasfs-loop", daemon=True
         )
         t.start()
-        self._accept_thread = t
+        self._loop_thread = t
         if isinstance(self.wal, walmod.SegmentedWal) and (
             self.checkpoint_bytes or self.checkpoint_records
         ):
@@ -270,8 +349,9 @@ class BackendServer:
 
     def shutdown(self, drain: bool = False, drain_timeout_s: float = 10.0) -> None:
         """Stop the server. With ``drain=True``, in-flight requests are
-        allowed to finish (and their replies to be sent) and the WAL is
-        fsync'd before any socket is torn down — the clean-SIGTERM path."""
+        allowed to finish (and their replies to be flushed) and the WAL
+        is fsync'd before any socket is torn down — the clean-SIGTERM
+        path."""
         self._stop.set()
         # join the checkpoint trigger BEFORE touching the WAL: a tick
         # that already passed its _stop check must finish (or never
@@ -282,51 +362,268 @@ class BackendServer:
         ct = self._ckpt_thread
         if ct is not None and ct is not threading.current_thread():
             ct.join(timeout=drain_timeout_s)
-        try:
-            self._lsock.close()
-        except OSError:
-            pass
-        if drain:
-            with self._drained:
-                self._drained.wait_for(
-                    lambda: self._inflight == 0, timeout=drain_timeout_s
-                )
+        lt = self._loop_thread
+        self._wake()
+        if lt is None:
+            # never started: nothing in flight, just close the listener
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+        elif drain and lt.is_alive():
+            # the loop keeps running: it stops reading, finishes the
+            # dispatched requests, flushes every reply, then signals
+            self._drained_evt.wait(timeout=drain_timeout_s)
             if self.wal is not None:
                 try:
                     self.wal.sync()
                 except Exception:
                     pass
+        self._exit.set()
+        self._wake()
+        if lt is not None and lt is not threading.current_thread():
+            lt.join(timeout=drain_timeout_s)
+        if lt is None or not lt.is_alive():
+            for fd in (self._wake_r, self._wake_w):
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
         self._workers.shutdown(wait=drain)
-        with self._conns_mu:
-            conns = list(self._conns)
-        for c in conns:
-            try:
-                c.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-            try:
-                c.close()
-            except OSError:
-                pass
-        if self.wal is not None:
+        if self.wal is not None and not self._wal_closed:
             with self._ckpt_mu:  # let a mid-flight checkpoint finish
+                self._wal_closed = True
                 self.wal.close()
 
+    def _wake(self) -> None:
+        try:
+            os.write(self._wake_w, b"\0")
+        except OSError:
+            pass  # pipe full (wakeup already pending) or already closed
+
     # ------------------------------------------------------------------ #
-    def _accept_loop(self) -> None:
-        while not self._stop.is_set():
+    # the event loop
+    # ------------------------------------------------------------------ #
+    def _loop(self) -> None:
+        sel = selectors.DefaultSelector()
+        self._lsock.setblocking(False)
+        sel.register(self._lsock, selectors.EVENT_READ, "accept")
+        sel.register(self._wake_r, selectors.EVENT_READ, "wake")
+        listening = True
+        try:
+            while not self._exit.is_set():
+                try:
+                    events = sel.select()
+                except OSError:
+                    break
+                for key, mask in events:
+                    data = key.data
+                    if data == "accept":
+                        if listening:
+                            self._on_accept(sel)
+                    elif data == "wake":
+                        try:
+                            os.read(self._wake_r, 65536)
+                        except OSError:
+                            pass
+                    else:
+                        conn = data
+                        if conn.closed:
+                            continue
+                        if mask & selectors.EVENT_READ:
+                            self._on_readable(sel, conn)
+                        if mask & selectors.EVENT_WRITE and not conn.closed:
+                            self._pump_conn(sel, conn)
+                if self._completions:
+                    self._drain_completions(sel)
+                if self._stop.is_set():
+                    if listening:
+                        listening = False
+                        sel.unregister(self._lsock)
+                        try:
+                            self._lsock.close()
+                        except OSError:
+                            pass
+                        # no more request parsing: deregister reads
+                        for conn in list(self._conns):
+                            self._update_events(sel, conn)
+                    if self._inflight == 0 and all(
+                        c.out.size == 0 for c in self._conns
+                    ):
+                        self._drained_evt.set()
+        finally:
+            if listening:
+                try:
+                    sel.unregister(self._lsock)
+                except (KeyError, ValueError):
+                    pass
+                try:
+                    self._lsock.close()
+                except OSError:
+                    pass
+            for conn in list(self._conns):
+                self._close_conn(sel, conn)
+            sel.close()
+            self._drained_evt.set()
+
+    def _on_accept(self, sel) -> None:
+        while True:
             try:
                 sock, _ = self._lsock.accept()
+            except (BlockingIOError, InterruptedError):
+                return
             except OSError:
-                break
+                return
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            with self._conns_mu:
-                self._conns.add(sock)
-            threading.Thread(
-                target=self._serve_conn, args=(sock,),
-                name="faasfs-conn", daemon=True,
-            ).start()
+            sock.setblocking(False)
+            conn = _Conn(sock)
+            self._conns.add(conn)
+            conn.out.put_frame(wire.T_HELLO, self._hello(), 0)
+            self._pump_conn(sel, conn)
 
+    def _on_readable(self, sel, conn: _Conn) -> None:
+        try:
+            n = conn.reader.fill()
+        except OSError:
+            self._close_conn(sel, conn)
+            return
+        if n == 0:
+            self._close_conn(sel, conn)
+            return
+        if n is None:
+            return  # spurious wakeup
+        self._pump_conn(sel, conn)
+
+    def _pump_conn(self, sel, conn: _Conn) -> None:
+        """Parse buffered frames (respecting the backpressure window and
+        the output high-water mark), flush replies, re-arm events."""
+        while not conn.closed:
+            before = conn.reader.frames
+            if not self._stop.is_set():
+                self._parse_conn(sel, conn)
+            if conn.closed:
+                return
+            self._flush_conn(sel, conn)
+            if conn.closed:
+                return
+            if conn.reader.frames == before:
+                break  # no parse progress: wait for socket events
+            if conn.out.size >= self.OUT_HIGH_WATER:
+                break  # still clogged toward the client
+        if not conn.closed:
+            self._update_events(sel, conn)
+
+    def _parse_conn(self, sel, conn: _Conn) -> None:
+        cap = self.max_inflight_per_conn
+        reader = conn.reader
+        out = conn.out
+        while conn.inflight < cap and out.size < self.OUT_HIGH_WATER:
+            try:
+                frame = reader.next_frame()
+            except wire.WireError:
+                self._close_conn(sel, conn)  # malformed peer: drop it
+                return
+            if frame is None:
+                return
+            msg_type, req_id, obj = frame
+            if msg_type in self._SLOW_OPS:
+                conn.inflight += 1
+                self._inflight += 1
+                try:
+                    self._workers.submit(
+                        self._work_one, conn, msg_type, req_id, obj
+                    )
+                except RuntimeError:  # pool shut down mid-race
+                    conn.inflight -= 1
+                    self._inflight -= 1
+                    self._close_conn(sel, conn)
+                    return
+            else:
+                try:
+                    reply_type, reply = (
+                        wire.T_OK, self._dispatch(msg_type, obj)
+                    )
+                except Exception as e:  # backend errors travel as frames
+                    reply_type, reply = wire.T_ERR, wire.exception_to_obj(e)
+                out.put_frame(reply_type, reply, req_id)
+
+    def _work_one(self, conn: _Conn, msg_type: int, req_id: int,
+                  obj: Any) -> None:
+        # worker thread: compute, then hop back into the loop
+        try:
+            reply_type, reply = wire.T_OK, self._dispatch(msg_type, obj)
+        except Exception as e:
+            reply_type, reply = wire.T_ERR, wire.exception_to_obj(e)
+        self._completions.append((conn, reply_type, reply, req_id))
+        self._wake()
+
+    def _drain_completions(self, sel) -> None:
+        touched = set()
+        completions = self._completions
+        while completions:
+            try:
+                conn, reply_type, reply, req_id = completions.popleft()
+            except IndexError:
+                break
+            self._inflight -= 1
+            conn.inflight -= 1
+            if not conn.closed:
+                conn.out.put_frame(reply_type, reply, req_id)
+                touched.add(conn)
+        for conn in touched:
+            if not conn.closed:
+                # the freed window may unblock frames already buffered
+                self._pump_conn(sel, conn)
+
+    def _flush_conn(self, sel, conn: _Conn) -> None:
+        if conn.out.size == 0:
+            return
+        try:
+            conn.out.flush(conn.sock)
+        except OSError:
+            self._close_conn(sel, conn)
+
+    def _update_events(self, sel, conn: _Conn) -> None:
+        want_r = (
+            not self._stop.is_set()
+            and conn.inflight < self.max_inflight_per_conn
+            and conn.out.size < self.OUT_HIGH_WATER
+        )
+        want_w = conn.out.size > 0
+        mask = (selectors.EVENT_READ if want_r else 0) | (
+            selectors.EVENT_WRITE if want_w else 0
+        )
+        if mask == conn.mask:
+            return
+        try:
+            if conn.mask == 0:
+                sel.register(conn.sock, mask, conn)
+            elif mask == 0:
+                sel.unregister(conn.sock)
+            else:
+                sel.modify(conn.sock, mask, conn)
+        except (KeyError, ValueError, OSError):
+            self._close_conn(sel, conn)
+            return
+        conn.mask = mask
+
+    def _close_conn(self, sel, conn: _Conn) -> None:
+        if conn.closed:
+            return
+        conn.closed = True
+        if conn.mask:
+            try:
+                sel.unregister(conn.sock)
+            except (KeyError, ValueError, OSError):
+                pass
+            conn.mask = 0
+        self._conns.discard(conn)
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+
+    # ------------------------------------------------------------------ #
     def _hello(self) -> Dict[str, Any]:
         return {
             "server": "faasfs",
@@ -343,121 +640,19 @@ class BackendServer:
     #: WAL fsyncs, checkpoint cycles) run on the worker pool so they
     #: cannot head-of-line block the fast reads pipelined behind them on
     #: the same connection; everything else is pure in-memory work
-    #: handled inline by the connection reader — no scheduling hop, and
-    #: replies to a burst of buffered requests coalesce into one send
+    #: handled inline on the event loop — no scheduling hop, and replies
+    #: to a burst of buffered requests coalesce into one sendmsg
     _SLOW_OPS = frozenset(
         (wire.T_BEGIN, wire.T_COMMIT, wire.T_ALLOC_RANGE, wire.T_CHECKPOINT)
     )
 
-    def _serve_conn(self, sock: socket.socket) -> None:
-        send_mu = threading.Lock()
-        reader = wire.FrameReader(sock)
-        outbuf = bytearray()
-        # per-connection backpressure: dispatched-but-unreplied slow ops.
-        # While the count sits at the cap the reader simply stops pulling
-        # bytes off the socket, so the kernel's TCP window fills and the
-        # flood stalls in the CLIENT's send path — bounded worker-queue
-        # growth per connection, no matter how hostile the pipelining.
-        conn_inflight = [0]
-        conn_cv = threading.Condition()
-        try:
-            wire.send_frame(sock, wire.T_HELLO, self._hello())
-            while not self._stop.is_set():
-                # flush coalesced replies before we could block (either in
-                # recv or behind a slow op's queue) or grow without bound
-                if outbuf and (
-                    not reader.pending() or len(outbuf) >= (1 << 20)
-                ):
-                    with send_mu:
-                        sock.sendall(outbuf)
-                    outbuf = bytearray()
-                msg_type, req_id, obj = reader.recv_frame()
-                if msg_type in self._SLOW_OPS:
-                    if outbuf and conn_inflight[0] >= self.max_inflight_per_conn:
-                        # don't sit on computed replies while backpressure
-                        # stalls this reader
-                        with send_mu:
-                            sock.sendall(outbuf)
-                        outbuf = bytearray()
-                    with conn_cv:
-                        while (
-                            conn_inflight[0] >= self.max_inflight_per_conn
-                            and not self._stop.is_set()
-                        ):
-                            conn_cv.wait(0.05)
-                        conn_inflight[0] += 1
-                    with self._inflight_mu:
-                        if self._stop.is_set():
-                            break
-                        self._inflight += 1
-                    try:
-                        self._workers.submit(
-                            self._handle_one, sock, send_mu,
-                            msg_type, req_id, obj, conn_inflight, conn_cv,
-                        )
-                    except RuntimeError:  # pool shut down mid-race
-                        with self._drained:
-                            self._inflight -= 1
-                            self._drained.notify_all()
-                        with conn_cv:
-                            conn_inflight[0] -= 1
-                        break
-                    continue
-                try:
-                    reply_type, reply = wire.T_OK, self._dispatch(msg_type, obj)
-                except Exception as e:  # backend errors travel as frames
-                    reply_type, reply = wire.T_ERR, wire.exception_to_obj(e)
-                # coalesce: while more requests are already buffered the
-                # reply just accumulates; the loop top pays ONE send (and
-                # one client reader wakeup) for the whole burst
-                outbuf += wire.encode_frame(reply_type, reply, req_id)
-            if outbuf:  # stop flag raced the last inline reply: flush it
-                with send_mu:
-                    sock.sendall(outbuf)
-        except (wire.WireError, OSError):
-            pass  # peer went away / malformed peer: drop the connection
-        finally:
-            with self._conns_mu:
-                self._conns.discard(sock)
-            # in-flight handlers tolerate the close (send failures are
-            # swallowed); replies racing a dead peer are simply dropped
-            try:
-                sock.close()
-            except OSError:
-                pass
-
-    def _handle_one(
-        self,
-        sock: socket.socket,
-        send_mu: threading.Lock,
-        msg_type: int,
-        req_id: int,
-        obj: Any,
-        conn_inflight: Optional[list] = None,
-        conn_cv: Optional[threading.Condition] = None,
-    ) -> None:
-        try:
-            try:
-                reply_type, reply = wire.T_OK, self._dispatch(msg_type, obj)
-            except Exception as e:  # backend errors travel as frames
-                reply_type, reply = wire.T_ERR, wire.exception_to_obj(e)
-            try:
-                with send_mu:
-                    wire.send_frame(sock, reply_type, reply, req_id)
-            except OSError:
-                pass  # connection died while we were computing the reply
-        finally:
-            if conn_cv is not None:
-                # reply sent (or dropped): open the connection's window
-                with conn_cv:
-                    conn_inflight[0] -= 1
-                    conn_cv.notify_all()
-            with self._drained:
-                self._inflight -= 1
-                self._drained.notify_all()
-
     # ------------------------------------------------------------------ #
     def _dispatch(self, msg_type: int, obj: Any) -> Any:
+        # NOTE reply trees use *lists* around block payloads (not tuples):
+        # list elements pack incrementally, so a large bytes payload can
+        # spill into its own sendmsg segment — a tuple's ext envelope
+        # needs the packed length upfront and would force a copy. The
+        # client decoders accept either shape.
         be = self.backend
         if msg_type == wire.T_BEGIN:
             cached = obj["k"]
@@ -473,11 +668,11 @@ class BackendServer:
             )
         if msg_type == wire.T_FETCH_BLOCK:
             key, at_ts = obj
-            return tuple(be.fetch_block(tuple(key), at_ts))
+            return list(be.fetch_block(tuple(key), at_ts))
         if msg_type == wire.T_FETCH_BLOCKS:
             keys, at_ts = obj
             return [
-                tuple(e)
+                list(e)
                 for e in be.fetch_blocks([tuple(k) for k in keys], at_ts)
             ]
         if msg_type == wire.T_FETCH_META:
@@ -499,14 +694,14 @@ class BackendServer:
         if msg_type == wire.T_SYNC_FILE:
             fid, known = obj
             out = be.sync_file(fid, {tuple(k): v for k, v in known.items()})
-            return {k: tuple(v) for k, v in out.items()}
+            return {k: list(v) for k, v in out.items()}
         if msg_type == wire.T_SYNC_FILES:
             reqs = {
                 fid: {tuple(k): v for k, v in known.items()}
                 for fid, known in obj.items()
             }
             return {
-                fid: {k: tuple(v) for k, v in upd.items()}
+                fid: {k: list(v) for k, v in upd.items()}
                 for fid, upd in be.sync_files(reqs).items()
             }
         if msg_type == wire.T_ALLOC_RANGE:

@@ -88,6 +88,10 @@ MAX_BODY = 256 * 1024 * 1024
 
 _EXT_TUPLE = 1
 
+#: bytes payloads at least this large ride as their own scatter-gather
+#: segment in a SendQueue instead of being copied into the frame buffer
+SPILL_MIN = 2048
+
 
 class WireError(Exception):
     """Malformed frame / codec bytes, or a protocol violation."""
@@ -137,15 +141,7 @@ def _pack_into(obj: Any, out: bytearray) -> None:
         out += b
     elif isinstance(obj, (bytes, bytearray, memoryview)):
         b = bytes(obj)
-        n = len(b)
-        if n <= 0xFF:
-            out += bytes((0xC4, n))
-        elif n <= 0xFFFF:
-            out.append(0xC5)
-            out += struct.pack(">H", n)
-        else:
-            out.append(0xC6)
-            out += struct.pack(">I", n)
+        _pack_bin_header(len(b), out)
         out += b
     elif isinstance(obj, tuple):
         # ext type 1: payload is the packed element array
@@ -166,20 +162,23 @@ def _pack_into(obj: Any, out: bytearray) -> None:
     elif isinstance(obj, list):
         _pack_array(obj, out)
     elif isinstance(obj, dict):
-        n = len(obj)
-        if n <= 15:
-            out.append(0x80 | n)
-        elif n <= 0xFFFF:
-            out.append(0xDE)
-            out += struct.pack(">H", n)
-        else:
-            out.append(0xDF)
-            out += struct.pack(">I", n)
+        _pack_map_header(len(obj), out)
         for k, v in obj.items():
             _pack_into(k, out)
             _pack_into(v, out)
     else:
         raise WireError(f"unpackable type {type(obj).__name__}")
+
+
+def _pack_bin_header(n: int, out: bytearray) -> None:
+    if n <= 0xFF:
+        out += bytes((0xC4, n))
+    elif n <= 0xFFFF:
+        out.append(0xC5)
+        out += struct.pack(">H", n)
+    else:
+        out.append(0xC6)
+        out += struct.pack(">I", n)
 
 
 def _pack_int(v: int, out: bytearray) -> None:
@@ -218,8 +217,7 @@ def _pack_int(v: int, out: bytearray) -> None:
             raise WireError(f"int too small for wire: {v}")
 
 
-def _pack_array(seq, out: bytearray) -> None:
-    n = len(seq)
+def _pack_array_header(n: int, out: bytearray) -> None:
     if n <= 15:
         out.append(0x90 | n)
     elif n <= 0xFFFF:
@@ -228,6 +226,21 @@ def _pack_array(seq, out: bytearray) -> None:
     else:
         out.append(0xDD)
         out += struct.pack(">I", n)
+
+
+def _pack_map_header(n: int, out: bytearray) -> None:
+    if n <= 15:
+        out.append(0x80 | n)
+    elif n <= 0xFFFF:
+        out.append(0xDE)
+        out += struct.pack(">H", n)
+    else:
+        out.append(0xDF)
+        out += struct.pack(">I", n)
+
+
+def _pack_array(seq, out: bytearray) -> None:
+    _pack_array_header(len(seq), out)
     for item in seq:
         _pack_into(item, out)
 
@@ -246,7 +259,7 @@ def _need(buf, off: int, n: int) -> None:
         raise WireError("truncated codec bytes")
 
 
-def _unpack_from(buf, off: int) -> Tuple[Any, int]:
+def _unpack_from(buf, off: int, stats=None) -> Tuple[Any, int]:
     _need(buf, off, 1)
     tag = buf[off]
     off += 1
@@ -255,9 +268,9 @@ def _unpack_from(buf, off: int) -> Tuple[Any, int]:
     if tag >= 0xE0:                      # negative fixint
         return tag - 0x100, off
     if 0x80 <= tag <= 0x8F:              # fixmap
-        return _unpack_map(buf, off, tag & 0x0F)
+        return _unpack_map(buf, off, tag & 0x0F, stats)
     if 0x90 <= tag <= 0x9F:              # fixarray
-        return _unpack_list(buf, off, tag & 0x0F)
+        return _unpack_list(buf, off, tag & 0x0F, stats)
     if 0xA0 <= tag <= 0xBF:              # fixstr
         n = tag & 0x1F
         _need(buf, off, n)
@@ -271,6 +284,8 @@ def _unpack_from(buf, off: int) -> Tuple[Any, int]:
     if tag in (0xC4, 0xC5, 0xC6):        # bin
         n, off = _unpack_len(buf, off, tag - 0xC4)
         _need(buf, off, n)
+        if stats is not None:
+            stats[0] += n
         return bytes(buf[off : off + n]), off + n
     if tag in (0xC7, 0xC8, 0xC9):        # ext
         n, off = _unpack_len(buf, off, tag - 0xC7)
@@ -280,7 +295,7 @@ def _unpack_from(buf, off: int) -> Tuple[Any, int]:
         _need(buf, off, n)
         if ext_type != _EXT_TUPLE:
             raise WireError(f"unknown ext type {ext_type}")
-        inner, ioff = _unpack_from(buf, off)
+        inner, ioff = _unpack_from(buf, off, stats)
         if ioff != off + n or not isinstance(inner, list):
             raise WireError("malformed tuple ext payload")
         return tuple(inner), off + n
@@ -318,19 +333,19 @@ def _unpack_from(buf, off: int) -> Tuple[Any, int]:
     if tag == 0xDC:
         _need(buf, off, 2)
         n = struct.unpack_from(">H", buf, off)[0]
-        return _unpack_list(buf, off + 2, n)
+        return _unpack_list(buf, off + 2, n, stats)
     if tag == 0xDD:
         _need(buf, off, 4)
         n = struct.unpack_from(">I", buf, off)[0]
-        return _unpack_list(buf, off + 4, n)
+        return _unpack_list(buf, off + 4, n, stats)
     if tag == 0xDE:
         _need(buf, off, 2)
         n = struct.unpack_from(">H", buf, off)[0]
-        return _unpack_map(buf, off + 2, n)
+        return _unpack_map(buf, off + 2, n, stats)
     if tag == 0xDF:
         _need(buf, off, 4)
         n = struct.unpack_from(">I", buf, off)[0]
-        return _unpack_map(buf, off + 4, n)
+        return _unpack_map(buf, off + 4, n, stats)
     raise WireError(f"unknown codec tag 0x{tag:02x}")
 
 
@@ -345,19 +360,19 @@ def _unpack_len(buf, off: int, width_idx: int) -> Tuple[int, int]:
     return struct.unpack_from(">I", buf, off)[0], off + 4
 
 
-def _unpack_list(buf, off: int, n: int) -> Tuple[List[Any], int]:
+def _unpack_list(buf, off: int, n: int, stats=None) -> Tuple[List[Any], int]:
     out = []
     for _ in range(n):
-        v, off = _unpack_from(buf, off)
+        v, off = _unpack_from(buf, off, stats)
         out.append(v)
     return out, off
 
 
-def _unpack_map(buf, off: int, n: int) -> Tuple[Dict[Any, Any], int]:
+def _unpack_map(buf, off: int, n: int, stats=None) -> Tuple[Dict[Any, Any], int]:
     out: Dict[Any, Any] = {}
     for _ in range(n):
-        k, off = _unpack_from(buf, off)
-        v, off = _unpack_from(buf, off)
+        k, off = _unpack_from(buf, off, stats)
+        v, off = _unpack_from(buf, off, stats)
         out[k] = v
     return out, off
 
@@ -372,15 +387,33 @@ def unpack(data: bytes) -> Any:
 # --------------------------------------------------------------------------- #
 # frames
 # --------------------------------------------------------------------------- #
+_HDR_PAD = bytes(HEADER_LEN)
+
+
+def encode_frame_into(out: bytearray, msg_type: int, obj: Any,
+                      req_id: int = 0) -> int:
+    """Append one frame to ``out`` without intermediate allocations:
+    reserve the header, pack the body in place, then patch the header
+    with the measured body length. Returns the frame length."""
+    hdr_at = len(out)
+    out += _HDR_PAD
+    _pack_into(obj, out)
+    body_len = len(out) - hdr_at - HEADER_LEN
+    _HEADER.pack_into(out, hdr_at, MAGIC, VERSION, msg_type, req_id, body_len)
+    return HEADER_LEN + body_len
+
+
 def encode_frame(msg_type: int, obj: Any, req_id: int = 0) -> bytes:
-    body = pack(obj)
-    return _HEADER.pack(MAGIC, VERSION, msg_type, req_id, len(body)) + body
+    out = bytearray()
+    encode_frame_into(out, msg_type, obj, req_id)
+    return bytes(out)
 
 
-def decode_header(hdr: bytes) -> Tuple[int, int, int]:
+def decode_header(hdr, off: int = 0) -> Tuple[int, int, int]:
     """(msg_type, req_id, body_len); raises WireError on bad
-    magic/version."""
-    magic, version, msg_type, req_id, body_len = _HEADER.unpack(hdr)
+    magic/version. Accepts bytes or a memoryview, with an optional
+    offset, so callers can decode in place without slicing a copy."""
+    magic, version, msg_type, req_id, body_len = _HEADER.unpack_from(hdr, off)
     if magic != MAGIC:
         raise WireError(f"bad magic 0x{magic:02x}")
     if version != VERSION:
@@ -412,51 +445,232 @@ def recv_frame(sock) -> Tuple[int, int, Any]:
 
 
 class FrameReader:
-    """Buffered frame parser over a socket.
+    """Zero-copy buffered frame parser over a socket.
 
     Pipelined peers put many small frames on the wire back-to-back; one
-    ``recv`` here can pull dozens of them into the buffer, and the
-    parser then hands them out without another syscall (or another GIL
-    hand-off — on a busy multiplexed connection the scheduling churn,
-    not the copy, is what batching amortizes). ``pending()`` tells a
+    ``recv_into`` here can pull dozens of them into the rolling buffer,
+    and the parser then hands them out without another syscall (or
+    another GIL hand-off — on a busy multiplexed connection the
+    scheduling churn, not the copy, is what batching amortizes).
+
+    Frames are decoded *in place*: the header via ``decode_header`` on a
+    memoryview and the body via ``_unpack_from`` straight out of the
+    buffer, so the only per-frame copies are the payload ``bytes``
+    objects the decoded value tree actually hands out (a block payload
+    in a ``fetch_blocks`` reply is materialized exactly once, not
+    header-copy + body-copy + bin-copy as the old reader did).
+    ``frames`` / ``body_bytes`` / ``bytes_copied`` count that:
+    copies-per-frame == bytes_copied / body_bytes <= 1.
+
+    ``fill`` accepts recv flags (e.g. ``MSG_DONTWAIT``) and returns
+    ``None`` on would-block, which lets non-blocking event loops and
+    opportunistic drains share the same reader. ``pending()`` tells a
     server loop whether more complete frames are already buffered, which
     is the signal for coalescing replies before flushing."""
 
-    __slots__ = ("sock", "buf")
+    __slots__ = ("sock", "_buf", "_head", "_tail", "frames",
+                 "body_bytes", "_stats")
 
-    def __init__(self, sock):
+    INIT_BUF = 1 << 16
+    SHRINK_ABOVE = 4 << 20
+
+    def __init__(self, sock=None):
         self.sock = sock
-        self.buf = bytearray()
+        self._buf = bytearray(self.INIT_BUF)
+        self._head = 0
+        self._tail = 0
+        self.frames = 0
+        self.body_bytes = 0
+        self._stats = [0]
 
-    def _parse_one(self) -> Optional[Tuple[int, int, Any]]:
-        if len(self.buf) < HEADER_LEN:
+    @property
+    def bytes_copied(self) -> int:
+        """Payload (bin) bytes materialized out of the buffer."""
+        return self._stats[0]
+
+    def _reclaim(self) -> None:
+        buf = self._buf
+        avail = self._tail - self._head
+        if self._head:
+            buf[:avail] = buf[self._head:self._tail]
+            self._head, self._tail = 0, avail
+        if len(buf) - self._tail < (1 << 16):
+            buf += bytes(max(len(buf), 1 << 16))
+
+    def fill(self, flags: int = 0) -> Optional[int]:
+        """recv_into the buffer. Returns the byte count (0 == EOF) or
+        ``None`` if ``flags`` made the call would-block."""
+        if self._head == self._tail:
+            self._head = self._tail = 0
+            if len(self._buf) > self.SHRINK_ABOVE:
+                self._buf = bytearray(self.INIT_BUF)
+        if len(self._buf) - self._tail < 4096:
+            self._reclaim()
+        view = memoryview(self._buf)[self._tail:]
+        try:
+            n = self.sock.recv_into(view, 0, flags)
+        except (BlockingIOError, InterruptedError):
             return None
-        msg_type, req_id, body_len = decode_header(
-            bytes(self.buf[:HEADER_LEN])
-        )
-        end = HEADER_LEN + body_len
-        if len(self.buf) < end:
+        finally:
+            view.release()
+        self._tail += n
+        return n
+
+    def next_frame(self) -> Optional[Tuple[int, int, Any]]:
+        """Parse one complete frame from the buffer, or ``None`` if a
+        full frame has not arrived yet. No syscalls."""
+        head = self._head
+        avail = self._tail - head
+        if avail < HEADER_LEN:
             return None
-        body = bytes(self.buf[HEADER_LEN:end])
-        del self.buf[:end]
-        return msg_type, req_id, unpack(body)
+        mv = memoryview(self._buf)
+        try:
+            msg_type, req_id, body_len = decode_header(mv, head)
+            end = head + HEADER_LEN + body_len
+            if self._tail < end:
+                return None
+            obj, off = _unpack_from(mv[:end], head + HEADER_LEN, self._stats)
+            if off != end:
+                raise WireError(
+                    f"{end - off} trailing byte(s) after frame body"
+                )
+        finally:
+            mv.release()
+        self._head = end
+        if self._head == self._tail:
+            self._head = self._tail = 0
+        self.frames += 1
+        self.body_bytes += body_len
+        return msg_type, req_id, obj
 
     def recv_frame(self) -> Tuple[int, int, Any]:
         while True:
-            frame = self._parse_one()
+            frame = self.next_frame()
             if frame is not None:
                 return frame
-            chunk = self.sock.recv(1 << 20)
-            if not chunk:
+            if self.fill() == 0:
                 raise ConnectionClosed("socket closed")
-            self.buf += chunk
 
     def pending(self) -> bool:
         """A complete frame is already buffered (no syscall needed)."""
-        if len(self.buf) < HEADER_LEN:
+        avail = self._tail - self._head
+        if avail < HEADER_LEN:
             return False
-        _, _, body_len = decode_header(bytes(self.buf[:HEADER_LEN]))
-        return len(self.buf) >= HEADER_LEN + body_len
+        _, _, body_len = decode_header(self._buf, self._head)
+        return avail >= HEADER_LEN + body_len
+
+
+class SendQueue:
+    """Scatter-gather output queue for one connection.
+
+    Frames are encoded straight into a pooled ``bytearray`` (via the
+    same reserve-header / pack-body / patch-header scheme as
+    ``encode_frame_into``), except that large ``bytes`` payloads —
+    block data in ``fetch_blocks`` / ``begin`` replies — are NOT copied
+    into the buffer: the buffer is closed and the payload object itself
+    rides as its own segment. ``flush`` hands the segment list to
+    ``socket.sendmsg``, so a burst of replies leaves in one syscall
+    with zero copies of the block payloads, and partial sends on a
+    non-blocking socket resume at ``_off`` into the head segment."""
+
+    __slots__ = ("segs", "size", "_open", "_spare", "_off")
+
+    IOV_CAP = 64
+
+    def __init__(self):
+        self.segs: List[Any] = []
+        self.size = 0          # unsent bytes across all segments
+        self._open = None      # bytearray currently accepting encodes
+        self._spare = None     # drained buffer pooled for reuse
+        self._off = 0          # sent offset into segs[0]
+
+    def _cur(self) -> bytearray:
+        cur = self._open
+        if cur is None:
+            cur = self._spare if self._spare is not None else bytearray()
+            self._spare = None
+            self._open = cur
+            self.segs.append(cur)
+        return cur
+
+    def put_frame(self, msg_type: int, obj: Any, req_id: int = 0) -> None:
+        hdr_buf = self._cur()
+        hdr_at = len(hdr_buf)
+        hdr_buf += _HDR_PAD
+        self.size += HEADER_LEN
+        size0 = self.size
+        self._pack(obj)
+        _HEADER.pack_into(hdr_buf, hdr_at, MAGIC, VERSION, msg_type,
+                          req_id, self.size - size0)
+
+    def _pack(self, obj: Any) -> None:
+        if isinstance(obj, (bytes, bytearray, memoryview)) \
+                and len(obj) >= SPILL_MIN:
+            cur = self._cur()
+            n0 = len(cur)
+            _pack_bin_header(len(obj), cur)
+            payload = obj if type(obj) is bytes else bytes(obj)
+            self.size += len(cur) - n0 + len(payload)
+            self._open = None
+            self.segs.append(payload)
+        elif type(obj) is list:
+            cur = self._cur()
+            n0 = len(cur)
+            _pack_array_header(len(obj), cur)
+            self.size += len(cur) - n0
+            for item in obj:
+                self._pack(item)
+        elif type(obj) is dict:
+            cur = self._cur()
+            n0 = len(cur)
+            _pack_map_header(len(obj), cur)
+            self.size += len(cur) - n0
+            for k, v in obj.items():
+                self._pack(k)
+                self._pack(v)
+        else:
+            cur = self._cur()
+            n0 = len(cur)
+            _pack_into(obj, cur)
+            self.size += len(cur) - n0
+
+    def flush(self, sock) -> bool:
+        """Send as much as the socket accepts without blocking; returns
+        True when the queue fully drained."""
+        while self.size:
+            iov = []
+            off = self._off
+            for seg in self.segs[:self.IOV_CAP]:
+                iov.append(memoryview(seg)[off:] if off else seg)
+                off = 0
+            try:
+                n = sock.sendmsg(iov)
+            except (BlockingIOError, InterruptedError):
+                return False
+            finally:
+                for v in iov:
+                    if isinstance(v, memoryview):
+                        v.release()
+            if n <= 0:
+                return False
+            self.size -= n
+            self._advance(n)
+        return True
+
+    def _advance(self, n: int) -> None:
+        while n:
+            seg = self.segs[0]
+            rem = len(seg) - self._off
+            if n < rem:
+                self._off += n
+                return
+            n -= rem
+            self.segs.pop(0)
+            self._off = 0
+            if seg is self._open:
+                self._open = None
+                del seg[:]
+                self._spare = seg
 
 
 # --------------------------------------------------------------------------- #
@@ -499,9 +713,14 @@ def payload_from_obj(o: Dict[str, Any]):
 
 
 def begin_reply_to_obj(r) -> Dict[str, Any]:
+    # "u" values are lists, not tuples: a SendQueue packs lists
+    # incrementally, so a large pushed block rides as its own
+    # scatter-gather segment instead of being copied (tuples travel in
+    # an ext envelope whose length must be known upfront). The decoder
+    # accepts either shape.
     return {
         "rt": r.read_ts,
-        "u": {k: (ts, data) for k, (ts, data) in r.updates.items()},
+        "u": {k: [ts, data] for k, (ts, data) in r.updates.items()},
         "i": list(r.invalidations),
         "fi": list(r.file_invalidations),
     }

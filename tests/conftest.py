@@ -30,7 +30,8 @@ def backend_factory(request, tmp_path):
             return BackendService(**kwargs)
         if kind.startswith("sharded"):
             return ShardedBackend(n_shards=int(kind[len("sharded"):]), **kwargs)
-        # networked kinds: in-process threaded server, real socket, real WAL
+        # networked kinds: in-process event-loop server (selectors-based
+        # loop + worker pool for blockable ops), real socket, real WAL
         from repro.core.remote import RemoteBackend
         from repro.core.server import BackendServer
 

@@ -1,0 +1,189 @@
+"""Hostile framing: the event-loop server's rolling ``recv_into``
+buffer (and the client-side ``FrameReader``) must be correct for EVERY
+byte-boundary the kernel can produce — a frame dripped one byte at a
+time, frames straddling successive reads, hundreds of frames coalesced
+into one read, and multi-megabyte frames spanning many buffer refills.
+Parametrized over the monolithic and sharded server backends, since the
+reply shapes differ (single-shard vs coordinator trees)."""
+import socket
+import time
+
+import pytest
+
+from repro.core import wire
+from repro.core.backend import BackendService
+from repro.core.server import BackendServer
+from repro.core.sharded import ShardedBackend
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(params=["mono", "sharded2"])
+def server(request):
+    if request.param == "mono":
+        inner = BackendService(block_size=16)
+    else:
+        inner = ShardedBackend(n_shards=2, block_size=16)
+    srv = BackendServer(inner).start()
+    yield srv
+    srv.shutdown()
+
+
+def _connect(server) -> socket.socket:
+    sock = socket.create_connection(("127.0.0.1", server.port), timeout=10)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return sock
+
+
+def _handshake(sock) -> wire.FrameReader:
+    reader = wire.FrameReader(sock)
+    msg_type, _, hello = reader.recv_frame()
+    assert msg_type == wire.T_HELLO
+    assert hello["server"] == "faasfs"
+    return reader
+
+
+def test_byte_at_a_time_drip(server):
+    """A frame delivered one byte per segment must parse exactly once."""
+    sock = _connect(server)
+    try:
+        reader = _handshake(sock)
+        frame = wire.encode_frame(wire.T_LOOKUP, ("/nope", None), req_id=7)
+        for i in range(len(frame)):
+            sock.sendall(frame[i:i + 1])
+        msg_type, req_id, obj = reader.recv_frame()
+        assert (msg_type, req_id) == (wire.T_OK, 7)
+        assert tuple(obj)[1] is None  # (ver, fid): unbound path
+    finally:
+        sock.close()
+
+
+def test_frames_split_across_recv_boundaries(server):
+    """A burst of frames sent in chunk sizes chosen to straddle every
+    header/body boundary must yield exactly one reply per request."""
+    sock = _connect(server)
+    try:
+        reader = _handshake(sock)
+        burst = bytearray()
+        n = 40
+        for rid in range(1, n + 1):
+            wire.encode_frame_into(
+                burst, wire.T_LOOKUP, (f"/missing/{rid}", None), req_id=rid
+            )
+        # 7 coprime with the 12-byte header and with any frame length
+        # here: successive sends end mid-header and mid-body alike
+        for off in range(0, len(burst), 7):
+            sock.sendall(burst[off:off + 7])
+        seen = set()
+        for _ in range(n):
+            msg_type, req_id, obj = reader.recv_frame()
+            assert msg_type == wire.T_OK
+            seen.add(req_id)
+        assert seen == set(range(1, n + 1))
+    finally:
+        sock.close()
+
+
+def test_many_coalesced_frames_in_one_send(server):
+    """Hundreds of pipelined frames landing in ONE kernel read must all
+    be parsed from the same buffer fill and each answered exactly once."""
+    sock = _connect(server)
+    try:
+        reader = _handshake(sock)
+        burst = bytearray()
+        n = 200
+        for rid in range(1, n + 1):
+            wire.encode_frame_into(burst, wire.T_PING, None, req_id=rid)
+        sock.sendall(burst)
+        got = [reader.recv_frame() for _ in range(n)]
+        assert {rid for _, rid, _ in got} == set(range(1, n + 1))
+        assert all(t == wire.T_OK for t, _, _ in got)
+    finally:
+        sock.close()
+
+
+def test_large_frames_span_many_fills_both_directions(server):
+    """A multi-megabyte request (and its equally large reply) spans many
+    recv_into refills on both peers; payload bytes must round-trip
+    unchanged. lookup_many with thousands of long paths keeps this
+    backend-agnostic."""
+    sock = _connect(server)
+    try:
+        reader = _handshake(sock)
+        paths = [f"/bulk/{'x' * 200}/{i}" for i in range(8000)]  # ~1.7 MB
+        frame = wire.encode_frame(wire.T_LOOKUP_MANY, (paths, None), req_id=3)
+        assert len(frame) > 1 << 20
+        sock.sendall(frame)
+        msg_type, req_id, obj = reader.recv_frame()
+        assert (msg_type, req_id) == (wire.T_OK, 3)
+        assert len(obj) == len(paths)
+        assert all(tuple(e)[1] is None for e in obj)
+    finally:
+        sock.close()
+
+
+def test_garbage_magic_closes_connection(server):
+    """A byte stream that is not a frame must drop the connection, not
+    wedge the parser or crash the loop; the listener stays healthy."""
+    sock = _connect(server)
+    try:
+        _handshake(sock)
+        sock.sendall(b"\x00" * 64)
+        sock.settimeout(5)
+        # server closes on the framing violation: recv drains to EOF
+        while True:
+            if sock.recv(4096) == b"":
+                break
+    finally:
+        sock.close()
+    # a fresh connection still works — one bad client costs one socket
+    sock2 = _connect(server)
+    try:
+        reader = _handshake(sock2)
+        sock2.sendall(wire.encode_frame(wire.T_PING, None, req_id=1))
+        assert reader.recv_frame()[0] == wire.T_OK
+    finally:
+        sock2.close()
+
+
+def test_oversize_body_len_rejected(server):
+    """A header advertising a body over MAX_BODY must be refused before
+    any allocation of that size is attempted."""
+    sock = _connect(server)
+    try:
+        _handshake(sock)
+        hdr = bytearray(wire.encode_frame(wire.T_PING, None, req_id=1))
+        # patch body_len (header bytes 8:12) to MAX_BODY + 1, keeping
+        # magic/version/type/req_id valid
+        bad = wire.MAX_BODY + 1
+        hdr[8:12] = bad.to_bytes(4, "big")
+        sock.sendall(hdr)
+        sock.settimeout(5)
+        while True:
+            if sock.recv(4096) == b"":
+                break
+    finally:
+        sock.close()
+
+
+def test_drip_interleaved_with_whole_frames(server):
+    """Alternating dripped and whole frames on one connection: parser
+    state from a partial frame must not leak into the next."""
+    sock = _connect(server)
+    try:
+        reader = _handshake(sock)
+        for rid in (1, 2, 3):
+            frame = wire.encode_frame(
+                wire.T_LOOKUP, (f"/p{rid}", None), req_id=rid
+            )
+            if rid % 2:
+                half = len(frame) // 2
+                sock.sendall(frame[:half])
+                time.sleep(0.01)
+                sock.sendall(frame[half:])
+            else:
+                sock.sendall(frame)
+            msg_type, req_id, _ = reader.recv_frame()
+            assert (msg_type, req_id) == (wire.T_OK, rid)
+    finally:
+        sock.close()

@@ -360,6 +360,73 @@ class _CountingBackend:
         return self.inner.fetch_blocks(keys, at_ts)
 
 
+class _WalkCountingBackend:
+    """Transparent proxy counting namespace/meta round trips."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.lookup_calls = 0
+        self.lookup_many_calls = 0
+        self.fetch_meta_calls = 0
+        self.fetch_metas_calls = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def lookup(self, path, at_ts=None):
+        self.lookup_calls += 1
+        return self.inner.lookup(path, at_ts)
+
+    def lookup_many(self, paths, at_ts=None):
+        self.lookup_many_calls += 1
+        return self.inner.lookup_many(paths, at_ts)
+
+    def fetch_meta(self, fid, at_ts=None):
+        self.fetch_meta_calls += 1
+        return self.inner.fetch_meta(fid, at_ts)
+
+    def fetch_metas(self, fids, at_ts=None):
+        self.fetch_metas_calls += 1
+        return self.inner.fetch_metas(fids, at_ts)
+
+    def reset(self):
+        self.lookup_calls = self.lookup_many_calls = 0
+        self.fetch_meta_calls = self.fetch_metas_calls = 0
+
+
+def test_deep_path_walk_is_one_lookup_many_rpc():
+    """Resolving a depth-d path is ONE lookup_many + ONE fetch_metas
+    round trip, not O(d) scalar lookups — the VFS prefetches the whole
+    ancestry per path-taking operation."""
+    be = _WalkCountingBackend(BackendService(block_size=16))
+    deep = "/mnt/tsfs/a/b/c/d/e/leaf"
+    writer = LocalServer(be)
+    txn = writer.begin()
+    fs = FaaSFS(txn)
+    fd = fs.open(deep, O_CREAT | O_RDWR)
+    fs.pwrite(fd, b"payload", 0)
+    txn.commit()
+
+    cold = LocalServer(be)  # fresh client: nothing resolved yet
+    txn = cold.begin()
+    fs = FaaSFS(txn)
+    be.reset()
+    st = fs.stat(deep)
+    assert st["st_size"] == 7
+    assert be.lookup_many_calls == 1   # the whole 6-component walk
+    assert be.lookup_calls == 0        # ... and not one scalar lookup
+    assert be.fetch_metas_calls == 1   # one batched kind/meta probe
+    assert be.fetch_meta_calls == 0
+
+    # a second operation on the same ancestry is fully cache-served
+    be.reset()
+    fd = fs.open(deep, O_RDONLY)
+    assert fs.pread(fd, 7, 0) == b"payload"
+    assert be.lookup_many_calls + be.lookup_calls == 0
+    assert be.fetch_metas_calls + be.fetch_meta_calls == 0
+    txn.commit()
+
+
 def test_preadv_is_one_fetch_blocks_rpc():
     be = _CountingBackend(BackendService(block_size=16))
     writer = LocalServer(be)

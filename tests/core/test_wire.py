@@ -225,6 +225,99 @@ def test_stale_epoch_maps():
 
 
 # --------------------------------------------------------------------------- #
+# zero-copy hot path: encode_frame_into, in-place header decode, the
+# FrameReader copy counter, and SendQueue scatter-gather identity
+# --------------------------------------------------------------------------- #
+def test_encode_frame_into_matches_encode_frame():
+    obj = {"k": [1, b"abc" * 100, ("t", None)], "n": 7}
+    out = bytearray(b"prefix")  # appends after existing bytes
+    n = wire.encode_frame_into(out, wire.T_OK, obj, req_id=42)
+    assert bytes(out[6:]) == wire.encode_frame(wire.T_OK, obj, req_id=42)
+    assert n == len(out) - 6
+
+
+def test_decode_header_accepts_memoryview_at_offset():
+    frame = wire.encode_frame(wire.T_PING, None, req_id=9)
+    padded = b"\xff" * 5 + frame
+    mv = memoryview(padded)
+    assert wire.decode_header(mv, 5) == wire.decode_header(frame[:wire.HEADER_LEN])
+
+
+def _socketpair_reader(payload_frames):
+    a, b = __import__("socket").socketpair()
+    for f in payload_frames:
+        a.sendall(f)
+    a.close()
+    return b, wire.FrameReader(b)
+
+
+def test_frame_reader_counts_one_copy_per_bin_payload():
+    """The counter that proves the zero-copy claim: decoding a frame
+    whose body is one large bin copies exactly its payload bytes ONCE
+    (header and envelope are decoded in place from the rolling buffer)."""
+    payload = bytes(range(256)) * 64  # 16 KiB
+    frame = wire.encode_frame(wire.T_OK, payload, req_id=1)
+    sock, reader = _socketpair_reader([frame])
+    try:
+        msg_type, rid, obj = reader.recv_frame()
+        assert (msg_type, rid, obj) == (wire.T_OK, 1, payload)
+        assert reader.frames == 1
+        assert reader.body_bytes == len(frame) - wire.HEADER_LEN
+        assert reader.bytes_copied == len(payload)  # exactly one copy
+    finally:
+        sock.close()
+
+
+def test_frame_reader_copy_counter_across_coalesced_frames():
+    payloads = [bytes([i]) * (1000 + i) for i in range(5)]
+    frames = [
+        wire.encode_frame(wire.T_OK, p, req_id=i)
+        for i, p in enumerate(payloads)
+    ]
+    sock, reader = _socketpair_reader(frames)
+    try:
+        for i, p in enumerate(payloads):
+            assert reader.recv_frame() == (wire.T_OK, i, p)
+        assert reader.frames == len(payloads)
+        assert reader.bytes_copied == sum(len(p) for p in payloads)
+    finally:
+        sock.close()
+
+
+def test_send_queue_bytes_identical_to_encode_frame():
+    """SendQueue's incremental packing (including large-payload spill
+    segments) must emit byte-for-byte what encode_frame produces."""
+    import socket as _socket
+
+    small = b"tiny"
+    big = b"B" * (wire.SPILL_MIN * 3)  # rides as its own iov segment
+    msgs = [
+        (wire.T_OK, [1, small, None], 1),
+        (wire.T_OK, big, 2),
+        (wire.T_OK, {"u": [big, small], "n": 5}, 3),
+        (wire.T_OK, [[0, big], [1, big]], 4),
+    ]
+    q = wire.SendQueue()
+    for t, obj, rid in msgs:
+        q.put_frame(t, obj, rid)
+    a, b = _socket.socketpair()
+    try:
+        while q.size:
+            q.flush(a)
+        a.close()
+        got = bytearray()
+        while True:
+            chunk = b.recv(1 << 20)
+            if not chunk:
+                break
+            got += chunk
+        want = b"".join(wire.encode_frame(t, o, r) for t, o, r in msgs)
+        assert bytes(got) == want
+    finally:
+        b.close()
+
+
+# --------------------------------------------------------------------------- #
 # property-based round trips (hypothesis, optional dependency — guarded so
 # the handcrafted tests above still run without it)
 # --------------------------------------------------------------------------- #
