@@ -102,7 +102,7 @@ class BackendFuture:
     common serial RPC then completes with zero extra thread wakeups
     instead of hopping through a dedicated reader thread."""
 
-    __slots__ = ("_event", "_value", "_error", "_flush", "_wait")
+    __slots__ = ("_event", "_value", "_error", "_flush", "_wait", "_obs")
 
     def __init__(self) -> None:
         self._event = threading.Event()
@@ -110,6 +110,7 @@ class BackendFuture:
         self._error: Optional[BaseException] = None
         self._flush: Optional[Any] = None
         self._wait: Optional[Any] = None
+        self._obs: Optional[Any] = None  # transport-stamped (t0_us, op, trace)
 
     def _ensure_sent(self) -> None:
         flush, self._flush = self._flush, None

@@ -47,6 +47,7 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from repro.core import obs
 from repro.core.api import BackendAPI, CommitReply
 from repro.core.blockstore import BlockStore, FileMeta
 from repro.core.types import (
@@ -62,6 +63,23 @@ from repro.core.types import (
     WriteRecord,
     normalize_meta_update,
 )
+
+# Abort-cause counters, pre-bound at import time (obs contract: label
+# resolution never happens on the commit hot path).
+_ABORT_CAUSE = {
+    tag: obs.REGISTRY.counter(
+        "faasfs_aborts_total", labels=("cause",),
+        help="OCC validation failures by conflicting item kind",
+    ).labels(tag)
+    for tag in ("block", "name", "meta", "predicate")
+}
+_GROUP_BATCH = obs.REGISTRY.histogram(
+    "faasfs_wal_group_batch", buckets=obs.SIZE_BUCKETS, unit="txns",
+    help="payloads per group-commit batch (one fsync each)",
+).labels()
+_COMMITS = obs.REGISTRY.counter(
+    "faasfs_commits_total", help="committed transactions",
+).labels()
 
 
 @dataclass
@@ -199,6 +217,7 @@ class _GroupCommitter:
         try:
             with be.commit_lock:
                 be.stats.group_batches += 1
+                _GROUP_BATCH.observe(len(batch))
                 committed: List[_Pending] = []
                 for p in batch:
                     try:
@@ -446,6 +465,7 @@ class BackendService(BackendAPI):
         if durable:
             self._durable_barrier(lsn)
         self.stats.commits += 1
+        _COMMITS.inc()
         # Registration is visibility: it must not precede durability. The
         # non-durable path (group committer / 2PC coordinator) registers
         # itself after ITS barrier, while still holding the commit lock.
@@ -461,15 +481,27 @@ class BackendService(BackendAPI):
         2PC coordinator, which counts one abort per transaction, not per
         failing shard — opts out)."""
         bad: List = []
+        detail: List[Dict] = []
+
+        def _explain(tag, key, winner):
+            # conflict explainability: which shard rejected the item and
+            # which commit ts won the race (obs.py / docs/observability.md)
+            detail.append({"tag": tag, "key": key,
+                           "shard": self.shard_id, "winner": winner})
+
         # 1. block read validation (observed version still current)
         for r in payload.reads:
             self.stats.validation_checks += 1
-            if self.store.block_version(r.key) != r.version:
+            cur = self.store.block_version(r.key)
+            if cur != r.version:
                 bad.append(("block", r.key))
+                _explain("block", r.key, cur)
         # 2. name resolution validation
         for path, ver in payload.name_reads.items():
-            if self.store.name_version(path) != ver:
+            cur = self.store.name_version(path)
+            if cur != ver:
                 bad.append(("name", path))
+                _explain("name", path, cur)
         # 3. metadata (length) version validation
         for fid, ver in payload.meta_reads.items():
             try:
@@ -478,19 +510,24 @@ class BackendService(BackendAPI):
                 cur_ver = -1
             if cur_ver != ver:
                 bad.append(("meta", fid))
+                _explain("meta", fid, cur_ver)
         # 4. length predicates (paper §4.2: reads assert file length)
         for pred in payload.predicates:
             try:
-                _, meta = self.store.meta(pred.file_id)
+                mver, meta = self.store.meta(pred.file_id)
                 length = meta.length if meta.exists else -1
             except Exception:
-                length = -1
+                mver, length = -1, -1
             if not pred.holds(length):
                 bad.append(("predicate", pred))
+                _explain("predicate", pred.file_id, mver)
         if bad:
             if record_abort:
                 self.stats.aborts += 1
-            raise Conflict(f"validation failed on {len(bad)} item(s)", bad)
+            for tag, _ in bad:
+                _ABORT_CAUSE[tag].inc()
+            raise Conflict(f"validation failed on {len(bad)} item(s)", bad,
+                           detail=detail)
 
     def apply_locked(self, payload: TxnPayload, ts: Timestamp) -> Touched:
         """Apply the write set at ``ts``; caller holds the commit lock.

@@ -47,12 +47,22 @@ import threading
 from contextlib import contextmanager
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
-from repro.core import wire
+from repro.core import obs, wire
 from repro.core.api import BackendAPI, BackendFuture, CommitReply
 from repro.core.blockstore import FileMeta
 from repro.core.types import BlockKey, CachePolicy, FileId, Timestamp
 
 DEFAULT_LEASE = 64
+
+# client-side metrics, pre-bound at import time (see core/obs.py)
+_RPC_US = obs.REGISTRY.histogram(
+    "faasfs_client_rpc_us", unit="us",
+    help="submit-to-reply latency per RPC",
+).labels()
+_STRAYS = obs.REGISTRY.counter(
+    "faasfs_client_stray_replies_total",
+    help="unknown/duplicate reply ids dropped",
+).labels()
 
 #: ops submit() can put on the wire without blocking; everything else
 #: (alloc_file_id with its lease state, stats, ...) falls back to inline
@@ -317,6 +327,17 @@ class _RemoteCore(BackendAPI):
         cycle; returns its summary ``{seg, bytes, segments_removed}``."""
         return self._call(wire.T_CHECKPOINT, None)
 
+    def trace_dump(self, clear: bool = False) -> Dict[str, Any]:
+        """Admin op: drain the server's span ring + slow-op log —
+        ``{"spans": [...], "slow": [...]}`` (see core/obs.py)."""
+        return self._call(wire.T_TRACE_DUMP, {"clear": bool(clear)})
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Server-side metrics registry snapshot, riding on T_STATS as a
+        forward-compatible extra key (old clients just ignore it)."""
+        s = self.stats
+        return getattr(s, "extra", {}).get("metrics", {})
+
 
 class RemoteBackend(_RemoteCore):
     """Multiplexed, pipelined transport (the default).
@@ -360,6 +381,10 @@ class RemoteBackend(_RemoteCore):
         self._pending: Dict[int, Tuple[BackendFuture, _Decoder]] = {}
         self.stray_replies = 0   # unknown/duplicate request ids observed
         self.flushes = 0         # coalesced sends actually performed
+        self.lease_completions = 0   # replies read by a waiting caller
+        self.parked_completions = 0  # replies read by the parked reader
+        self._rdr_base = 0       # bytes_copied carried over dead readers
+        self._frames_base = 0    # frame count carried over dead readers
         # eager dial: surfaces connection/handshake errors at construction
         with self._mu:
             self._connect_locked()
@@ -385,15 +410,32 @@ class RemoteBackend(_RemoteCore):
     # ------------------------------------------------------------------ #
     # receive path (always under the reader lease)
     # ------------------------------------------------------------------ #
-    def _dispatch_reply(self, msg_type: int, req_id: int, obj: Any) -> None:
+    def _dispatch_reply(self, msg_type: int, req_id: int, obj: Any,
+                        parked: bool = False) -> None:
         with self._mu:
             entry = self._pending.pop(req_id, None)
         if entry is None:
             # unknown or already-answered id: never mis-deliver — count
             # it and keep the stream (framing is intact)
             self.stray_replies += 1
+            _STRAYS.inc()
             return
         fut, decode = entry
+        if parked:
+            self.parked_completions += 1
+        else:
+            self.lease_completions += 1
+        ob = fut._obs
+        if ob is not None:
+            fut._obs = None
+            t0, opname, trace = ob
+            dur = obs.now_us() - t0
+            _RPC_US.observe(dur)
+            if trace is not None:
+                obs.SPANS.record(
+                    f"rpc.{opname}", "client", trace[0], trace[1],
+                    t0, dur, parent_id=trace[2],
+                )
         if msg_type == wire.T_ERR:
             fut.set_exception(wire.exception_from_obj(obj))
         elif msg_type == wire.T_OK:
@@ -406,16 +448,16 @@ class RemoteBackend(_RemoteCore):
                 wire.WireError(f"unexpected reply type 0x{msg_type:02x}")
             )
 
-    def _rx_block(self, sock, rdr) -> bool:
+    def _rx_block(self, sock, rdr, parked: bool = False) -> bool:
         """Blocking read of at least one frame, then drain whatever else
         is already buffered — one recv resolves a whole reply burst."""
         try:
-            self._dispatch_reply(*rdr.recv_frame())
+            self._dispatch_reply(*rdr.recv_frame(), parked=parked)
             while True:
                 frame = rdr.next_frame()
                 if frame is None:
                     return True
-                self._dispatch_reply(*frame)
+                self._dispatch_reply(*frame, parked=parked)
         except (wire.WireError, OSError) as e:
             self._fail_conn(sock, e)
             return False
@@ -432,7 +474,7 @@ class RemoteBackend(_RemoteCore):
                     if n == 0:
                         raise wire.ConnectionClosed("socket closed")
                     continue
-                self._dispatch_reply(*frame)
+                self._dispatch_reply(*frame, parked=True)
         except (wire.WireError, OSError) as e:
             self._fail_conn(sock, e)
 
@@ -457,7 +499,7 @@ class RemoteBackend(_RemoteCore):
                 if sock is None or rdr is None:
                     return
                 if has_pending:
-                    if not self._rx_block(sock, rdr):
+                    if not self._rx_block(sock, rdr, parked=True):
                         return
                     # loop: re-check for still-pending requests
                 else:
@@ -513,6 +555,9 @@ class RemoteBackend(_RemoteCore):
         with self._mu:
             current = self._sock is sock
             if current:
+                if self._rdr is not None:
+                    self._rdr_base += self._rdr.bytes_copied
+                    self._frames_base += self._rdr.frames
                 self._sock = None
                 self._rdr = None
                 pending, self._pending = self._pending, {}
@@ -539,6 +584,9 @@ class RemoteBackend(_RemoteCore):
         with self._mu:
             self._closed = True
             sock, self._sock = self._sock, None
+            if self._rdr is not None:
+                self._rdr_base += self._rdr.bytes_copied
+                self._frames_base += self._rdr.frames
             self._rdr = None
             pending, self._pending = self._pending, {}
         self._rx_wake.set()  # unpark the reader so it can exit
@@ -561,6 +609,30 @@ class RemoteBackend(_RemoteCore):
         reader = self._reader
         if reader is not None and reader is not threading.current_thread():
             reader.join(timeout=1.0)
+
+    def connection_stats(self) -> Dict[str, Any]:
+        """Public transport-health snapshot (tests and benchmarks assert
+        on this instead of reaching into private fields)."""
+        with self._mu:
+            rdr = self._rdr
+            pending = len(self._pending)
+            connected = self._sock is not None
+            bytes_copied = self._rdr_base + (rdr.bytes_copied if rdr else 0)
+            frames = self._frames_base + (rdr.frames if rdr else 0)
+        return {
+            "rpcs": self.rpcs,
+            # _handshake counts every dial including the first; redials
+            # is what a health check actually wants
+            "redials": max(0, self.reconnects - 1),
+            "stray_replies": self.stray_replies,
+            "flushes": self.flushes,
+            "bytes_copied": bytes_copied,
+            "frames": frames,
+            "lease_completions": self.lease_completions,
+            "parked_completions": self.parked_completions,
+            "pending": pending,
+            "connected": connected,
+        }
 
     # ------------------------------------------------------------------ #
     # the pipeline
@@ -596,6 +668,19 @@ class RemoteBackend(_RemoteCore):
             self._next_id += 1
             self._pending[rid] = (fut, decode)
         self.rpcs += 1
+        # trace context rides the frame (16-byte envelope, FLAG_TRACE);
+        # untraced requests stay byte-identical to the v2 wire format
+        ctx = obs.current_trace()
+        if ctx is not None:
+            span_id = obs.new_span_id()
+            trace: Optional[Tuple[int, int]] = (ctx[0], span_id)
+            span3: Optional[Tuple[int, int, int]] = (ctx[0], span_id, ctx[1])
+        else:
+            trace = None
+            span3 = None
+        fut._obs = (
+            obs.now_us(), wire.MSG_NAMES.get(msg_type, hex(msg_type)), span3,
+        )
         with self._send_mu:
             if fut.done():
                 # the connection died between registration and here and
@@ -604,7 +689,7 @@ class RemoteBackend(_RemoteCore):
                 # caller has been told ConnectionClosed — it must not be
                 # flushed onto a replacement connection later
                 return fut
-            wire.encode_frame_into(self._send_buf, msg_type, obj, rid)
+            wire.encode_frame_into(self._send_buf, msg_type, obj, rid, trace)
             self._send_sock = sock
             big = len(self._send_buf) >= self.MAX_SEND_BUF
         fut._flush = self._flush_sends

@@ -47,11 +47,29 @@ from __future__ import annotations
 import random
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, List, Optional
 
+from repro.core import obs
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS
 from repro.core.types import Conflict, TxnStateError
+
+# warm-container cache health, sampled per invocation epilogue (not hot)
+_CACHE_GAUGES = {
+    k: obs.REGISTRY.gauge(
+        f"faasfs_client_cache_{k}",
+        help=f"LocalServer block cache {k} (latest runtime sample)",
+    ).labels()
+    for k in ("hits", "misses", "evictions", "size")
+}
+
+
+def _abort_reasons_of(c: Conflict) -> List[Dict[str, Any]]:
+    """Structured explanation of one Conflict: prefer the server-side
+    ``detail`` (tag/key/shard/winner); fall back to the legacy keys."""
+    if getattr(c, "detail", None):
+        return [dict(d) for d in c.detail]
+    return [{"tag": tag, "key": key} for tag, key in (c.keys or [])]
 
 
 @dataclass
@@ -63,6 +81,11 @@ class InvocationStats:
     commit_ts: int = 0
     wall_s: float = 0.0
     read_only: bool = False
+    #: one entry per abort: {"tag", "key", "shard"?, "winner"?} dicts
+    #: explaining WHAT conflicted (paper §3.3's restart loop, made visible)
+    abort_reasons: List[Dict[str, Any]] = field(default_factory=list)
+    #: trace id (nonzero when the runtime ran with tracing on)
+    trace_id: int = 0
 
 
 @dataclass
@@ -75,6 +98,13 @@ class RuntimeStats:
     read_only_invocations: int = 0
     retries_exhausted: int = 0
     wall_s: float = 0.0
+    #: abort count by conflicting item kind ("block"/"name"/"meta"/...)
+    abort_reasons: Dict[str, int] = field(default_factory=dict)
+
+    def _count_aborts(self, reasons: List[Dict[str, Any]]) -> None:
+        for r in reasons:
+            tag = str(r.get("tag", "unknown"))
+            self.abort_reasons[tag] = self.abort_reasons.get(tag, 0) + 1
 
 
 class FaaSFunction:
@@ -136,6 +166,7 @@ class FunctionRuntime:
         max_backoff_s: float = 0.01,
         strict_paths: bool = False,
         seed: Optional[int] = None,
+        trace: bool = False,
     ):
         self.local = local
         self.mount = mount
@@ -143,6 +174,7 @@ class FunctionRuntime:
         self.backoff_s = backoff_s
         self.max_backoff_s = max_backoff_s
         self.strict_paths = strict_paths
+        self.trace = trace
         self.stats = RuntimeStats()
         self._rng = random.Random(seed)
 
@@ -200,59 +232,117 @@ class FunctionRuntime:
 
         t0 = time.perf_counter()
         self.stats.invocations += 1
+        # one trace id spans the WHOLE invocation, Conflict restarts
+        # included — every retry attempt renders on the same Perfetto
+        # timeline (see docs/observability.md)
+        trace_prev: Any = None
+        trace_ctx: Any = None
+        inv_t0 = 0
+        name = getattr(body, "__name__", "faas_function")
+        if self.trace:
+            trace_ctx = (obs.new_trace_id(), obs.new_span_id())
+            trace_prev = obs.set_trace(trace_ctx)
+            inv_t0 = obs.now_us()
+            if stats:
+                stats.trace_id = trace_ctx[0]
+        try:
+            return self._invoke_loop(
+                body, faas, args, kwargs, ro, inferred, max_retries,
+                stats, t0, name,
+            )
+        finally:
+            if self.trace:
+                obs.SPANS.record(
+                    f"invoke.{name}", "runtime", trace_ctx[0], trace_ctx[1],
+                    inv_t0, obs.now_us() - inv_t0,
+                )
+                obs.set_trace(trace_prev)
+            # warm-container cache health: sampled once per invocation,
+            # never on the block fetch path
+            cs = self.local.cache_stats()
+            for k, g in _CACHE_GAUGES.items():
+                g.set(cs.get(k, 0))
+
+    def _invoke_loop(
+        self, body, faas, args, kwargs, ro, inferred, max_retries,
+        stats, t0, name,
+    ) -> Any:
         last: Optional[Conflict] = None
         attempt = 0
         while attempt < max_retries:
-            txn = self.local.begin(read_only=ro)
-            fs = FaaSFS(txn, mount=self.mount, strict=self.strict_paths)
-            self.stats.attempts += 1
-            if stats:
-                stats.attempts += 1
-                stats.read_only = ro
-            try:
-                result = body(fs, *args, **kwargs)
-            except TxnStateError:
-                txn.abort()
-                if inferred:
-                    # the read-only inference was wrong (the function
-                    # wrote this time): restart read-write, pin as writer
-                    faas._demote()  # type: ignore[union-attr]
-                    ro = inferred = False
-                    continue
-                raise
-            except Conflict as c:
-                # functions normally surface conflicts at commit, but a
-                # mid-body Conflict (e.g. from a nested commit) retries too
-                txn.abort()
-                last = c
-                attempt += 1
-                continue
-            except BaseException:
-                txn.abort()
-                raise
-            try:
-                ts = txn.commit()
-            except Conflict as c:
-                last = c
-                self.stats.aborts += 1
+            with obs.span("invoke.attempt", "runtime", args={"n": attempt}):
+                txn = self.local.begin(read_only=ro)
+                fs = FaaSFS(txn, mount=self.mount, strict=self.strict_paths)
+                self.stats.attempts += 1
                 if stats:
-                    stats.aborts += 1
-                attempt += 1
-                self._sleep(attempt)
-                continue
-            wall = time.perf_counter() - t0
-            self.stats.wall_s += wall
-            if ro:
-                self.stats.read_only_invocations += 1
-            if stats:
-                stats.commit_ts = ts
-                stats.wall_s = wall
-            if faas is not None:
-                faas._observe(ro, txn.committed_payload.has_effects())
-            return result
+                    stats.attempts += 1
+                    stats.read_only = ro
+                try:
+                    result = body(fs, *args, **kwargs)
+                except TxnStateError:
+                    txn.abort()
+                    if inferred:
+                        # the read-only inference was wrong (the function
+                        # wrote this time): restart read-write, pin writer
+                        faas._demote()  # type: ignore[union-attr]
+                        ro = inferred = False
+                        continue
+                    raise
+                except Conflict as c:
+                    # functions normally surface conflicts at commit, but a
+                    # mid-body Conflict (e.g. a nested commit) retries too
+                    txn.abort()
+                    last = c
+                    self._note_abort(c, stats, name)
+                    attempt += 1
+                    continue
+                except BaseException:
+                    txn.abort()
+                    raise
+                try:
+                    ts = txn.commit()
+                except Conflict as c:
+                    last = c
+                    self.stats.aborts += 1
+                    if stats:
+                        stats.aborts += 1
+                    self._note_abort(c, stats, name)
+                    attempt += 1
+                    self._sleep(attempt)
+                    continue
+                wall = time.perf_counter() - t0
+                self.stats.wall_s += wall
+                if ro:
+                    self.stats.read_only_invocations += 1
+                if stats:
+                    stats.commit_ts = ts
+                    stats.wall_s = wall
+                if faas is not None:
+                    faas._observe(ro, txn.committed_payload.has_effects())
+                return result
         self.stats.retries_exhausted += 1
         self.stats.wall_s += time.perf_counter() - t0
         raise Conflict(
             f"function failed to commit after {max_retries} attempts: {last}",
             last.keys if last else [],
+            detail=getattr(last, "detail", None) if last else None,
+        )
+
+    def _note_abort(self, c: Conflict, stats: Optional[InvocationStats],
+                    name: str) -> None:
+        """Fold one Conflict's explanation into the per-invocation and
+        aggregate stats, and log it against the active trace."""
+        reasons = _abort_reasons_of(c)
+        if stats:
+            stats.abort_reasons.extend(reasons)
+        self.stats._count_aborts(reasons)
+        ctx = obs.current_trace()
+        obs.SLOW_OPS.record(
+            f"abort.{name}", 0,
+            detail="; ".join(
+                f"{r.get('tag')}:{r.get('key')}"
+                + (f"@shard{r['shard']}" if "shard" in r else "")
+                for r in reasons[:4]
+            ),
+            trace_id=ctx[0] if ctx else 0,
         )

@@ -81,15 +81,56 @@ import threading
 from collections import deque
 from typing import Any, Dict, Optional, Set, Tuple
 
+from repro.core import obs
 from repro.core import wal as walmod
 from repro.core import wire
 from repro.core.api import BackendAPI
 from repro.core.backend import BackendService
 from repro.core.sharded import ShardedBackend
-from repro.core.types import CachePolicy
+from repro.core.types import CachePolicy, Conflict
 
 #: cap on a single lease grant (a greedy client cannot drain the id space)
 MAX_LEASE = 1 << 16
+
+# ---------------------------------------------------------------------------
+# server metrics (see core/obs.py and docs/observability.md). All label
+# children are pre-bound here, at import time, keyed by msg type: the
+# per-request work is a dict[int] lookup + one locked increment — no
+# string joins, no allocation.
+# ---------------------------------------------------------------------------
+_OP_NAMES = {
+    t: n for t, n in wire.MSG_NAMES.items()
+    if t not in (wire.T_HELLO, wire.T_OK, wire.T_ERR)
+}
+_REQS = {
+    t: obs.REGISTRY.counter(
+        "faasfs_server_requests_total", labels=("op",),
+        help="requests dispatched, by op",
+    ).labels(n)
+    for t, n in _OP_NAMES.items()
+}
+_EXEC_US = {
+    t: obs.REGISTRY.histogram(
+        "faasfs_server_exec_us", labels=("op",), unit="us",
+        help="handler execution time (inline or worker), by op",
+    ).labels(n)
+    for t, n in _OP_NAMES.items()
+}
+_QWAIT_US = {
+    t: obs.REGISTRY.histogram(
+        "faasfs_server_queue_wait_us", labels=("op",), unit="us",
+        help="parse-to-worker-start wait for pooled (blockable) ops",
+    ).labels(n)
+    for t, n in _OP_NAMES.items()
+}
+_BYTES_IN = obs.REGISTRY.counter(
+    "faasfs_server_bytes_in_total", unit="bytes",
+    help="bytes received across all connections",
+).labels()
+_BYTES_OUT = obs.REGISTRY.counter(
+    "faasfs_server_bytes_out_total", unit="bytes",
+    help="bytes flushed across all connections",
+).labels()
 
 
 class FileIdAllocator:
@@ -207,8 +248,11 @@ class BackendServer:
         checkpoint_bytes: Optional[int] = None,
         checkpoint_records: Optional[int] = None,
         checkpoint_interval_s: float = 0.25,
+        slow_op_us: int = 50_000,
     ):
         self.backend = backend
+        self.metrics = obs.REGISTRY
+        self.slow_op_us = slow_op_us
         self.wal = None  # WriteAheadLog (legacy file) | SegmentedWal (dir)
         self.recovery: Optional[Dict[str, int]] = None
         self.max_inflight_per_conn = max(1, int(max_inflight_per_conn))
@@ -268,6 +312,22 @@ class BackendServer:
         os.set_blocking(self._wake_r, False)
         os.set_blocking(self._wake_w, False)
         self._wal_closed = False
+        # live-state gauges: callback-backed, sampled only at scrape time
+        # (zero hot-path cost). With several servers in one process the
+        # process-global registry reflects the most recent one.
+        self.metrics.gauge_fn(
+            "faasfs_server_conns", lambda: len(self._conns),
+            help="open client connections",
+        )
+        self.metrics.gauge_fn(
+            "faasfs_server_inflight", lambda: self._inflight,
+            help="dispatched-but-unreplied blockable requests",
+        )
+        self.metrics.gauge_fn(
+            "faasfs_server_sendq_bytes",
+            lambda: sum(c.out.size for c in list(self._conns)),
+            unit="bytes", help="unflushed reply bytes across connections",
+        )
 
     # ------------------------------------------------------------------ #
     def start(self) -> "BackendServer":
@@ -337,10 +397,9 @@ class BackendServer:
                 # say so instead of failing silently.
                 self.checkpoint_failures += 1
                 delay = min(max(delay, 0.05) * 2, 30.0)
-                print(
-                    f"faasfs: checkpoint cycle failed ({e!r}); "
-                    f"retrying in {delay:.1f}s",
-                    file=sys.stderr, flush=True,
+                obs.LOG.warn(
+                    "checkpoint_failed", error=repr(e), retry_in_s=delay,
+                    failures=self.checkpoint_failures,
                 )
 
     def serve_forever(self) -> None:
@@ -492,6 +551,7 @@ class BackendServer:
             return
         if n is None:
             return  # spurious wakeup
+        _BYTES_IN.inc(n)
         self._pump_conn(sel, conn)
 
     def _pump_conn(self, sel, conn: _Conn) -> None:
@@ -526,12 +586,16 @@ class BackendServer:
             if frame is None:
                 return
             msg_type, req_id, obj = frame
+            ctr = _REQS.get(msg_type)
+            if ctr is not None:
+                ctr.inc()
             if msg_type in self._SLOW_OPS:
                 conn.inflight += 1
                 self._inflight += 1
                 try:
                     self._workers.submit(
-                        self._work_one, conn, msg_type, req_id, obj
+                        self._work_one, conn, msg_type, req_id, obj,
+                        obs.now_us(), reader.last_trace,
                     )
                 except RuntimeError:  # pool shut down mid-race
                     conn.inflight -= 1
@@ -539,30 +603,81 @@ class BackendServer:
                     self._close_conn(sel, conn)
                     return
             else:
+                t0 = obs.now_us()
                 try:
                     reply_type, reply = (
                         wire.T_OK, self._dispatch(msg_type, obj)
                     )
                 except Exception as e:  # backend errors travel as frames
                     reply_type, reply = wire.T_ERR, wire.exception_to_obj(e)
+                dur = obs.now_us() - t0
+                h = _EXEC_US.get(msg_type)
+                if h is not None:
+                    h.observe(dur)
+                trace = reader.last_trace
+                if trace is not None:
+                    obs.SPANS.record(
+                        f"server.exec.{_OP_NAMES.get(msg_type, msg_type)}",
+                        "server", trace[0], obs.new_span_id(), t0, dur,
+                        parent_id=trace[1],
+                    )
                 out.put_frame(reply_type, reply, req_id)
 
     def _work_one(self, conn: _Conn, msg_type: int, req_id: int,
-                  obj: Any) -> None:
-        # worker thread: compute, then hop back into the loop
+                  obj: Any, t_enq: int, trace) -> None:
+        # worker thread: compute, then hop back into the loop. The trace
+        # context (propagated on the request frame) is installed for the
+        # duration so nested spans — the WAL fsync — land in the same
+        # timeline, under this op's span.
+        op = _OP_NAMES.get(msg_type, str(msg_type))
+        t0 = obs.now_us()
+        _QWAIT_US[msg_type].observe(t0 - t_enq)
+        span_id = 0
+        prev = None
+        if trace is not None:
+            span_id = obs.new_span_id()
+            obs.SPANS.record(f"server.queue.{op}", "server", trace[0],
+                             obs.new_span_id(), t_enq, t0 - t_enq,
+                             parent_id=trace[1])
+            prev = obs.set_trace((trace[0], span_id))
+        aborted = None
         try:
             reply_type, reply = wire.T_OK, self._dispatch(msg_type, obj)
         except Exception as e:
+            if isinstance(e, Conflict):
+                aborted = e
             reply_type, reply = wire.T_ERR, wire.exception_to_obj(e)
-        self._completions.append((conn, reply_type, reply, req_id))
+        finally:
+            if trace is not None:
+                obs.set_trace(prev)
+        dur = obs.now_us() - t0
+        _EXEC_US[msg_type].observe(dur)
+        if trace is not None:
+            obs.SPANS.record(f"server.exec.{op}", "server", trace[0],
+                             span_id, t0, dur, parent_id=trace[1])
+        if aborted is not None:
+            obs.SLOW_OPS.record(
+                f"abort.{op}", dur, detail=str(aborted),
+                trace_id=trace[0] if trace else 0,
+            )
+        elif dur >= self.slow_op_us:
+            obs.SLOW_OPS.record(
+                f"slow.{op}", dur, trace_id=trace[0] if trace else 0,
+            )
+            obs.LOG.warn("slow_op", op=op, dur_us=dur,
+                         trace=f"{trace[0]:016x}" if trace else "-")
+        self._completions.append((conn, reply_type, reply, req_id, trace))
         self._wake()
 
     def _drain_completions(self, sel) -> None:
         touched = set()
+        traced = []
         completions = self._completions
+        t0 = obs.now_us()
         while completions:
             try:
-                conn, reply_type, reply, req_id = completions.popleft()
+                conn, reply_type, reply, req_id, trace = \
+                    completions.popleft()
             except IndexError:
                 break
             self._inflight -= 1
@@ -570,18 +685,30 @@ class BackendServer:
             if not conn.closed:
                 conn.out.put_frame(reply_type, reply, req_id)
                 touched.add(conn)
+                if trace is not None:
+                    traced.append(trace)
         for conn in touched:
             if not conn.closed:
                 # the freed window may unblock frames already buffered
                 self._pump_conn(sel, conn)
+        if traced:
+            # one reply-flush span per traced completion in the burst
+            dur = obs.now_us() - t0
+            for trace in traced:
+                obs.SPANS.record("server.flush", "server", trace[0],
+                                 obs.new_span_id(), t0, dur,
+                                 parent_id=trace[1])
 
     def _flush_conn(self, sel, conn: _Conn) -> None:
         if conn.out.size == 0:
             return
+        before = conn.out.size
         try:
             conn.out.flush(conn.sock)
         except OSError:
             self._close_conn(sel, conn)
+            return
+        _BYTES_OUT.inc(before - conn.out.size)
 
     def _update_events(self, sel, conn: _Conn) -> None:
         want_r = (
@@ -710,7 +837,19 @@ class BackendServer:
         if msg_type == wire.T_CHECKPOINT:
             return dict(self.run_checkpoint())
         if msg_type == wire.T_STATS:
-            return wire.stats_to_obj(be.stats)
+            # the metrics snapshot rides as an extra key: new-enough
+            # clients surface it (RemoteBackend.metrics_snapshot), old
+            # ones keep it on stats.extra (wire.stats_from_obj is
+            # forward-compatible)
+            d = wire.stats_to_obj(be.stats)
+            d["metrics"] = self.metrics.snapshot()
+            return d
+        if msg_type == wire.T_TRACE_DUMP:
+            clear = bool(obj.get("clear")) if isinstance(obj, dict) else False
+            return {
+                "spans": obs.SPANS.spans(clear=clear),
+                "slow": obs.SLOW_OPS.entries(clear=clear),
+            }
         if msg_type == wire.T_LATEST_TS:
             return be.latest_ts
         if msg_type == wire.T_PING:
@@ -769,8 +908,19 @@ def main(argv=None) -> None:
     p.add_argument("--max-inflight", type=int, default=64,
                    help="per-connection cap on dispatched-but-unreplied "
                         "blockable requests (pipelining backpressure)")
+    p.add_argument("--log-level", default="info",
+                   choices=("debug", "info", "warn", "error", "off"),
+                   help="structured key=value stderr log level (the "
+                        "LISTENING/SHUTDOWN stdout protocol lines are "
+                        "unaffected)")
+    p.add_argument("--metrics-port", type=int, default=None,
+                   help="expose the metrics registry as Prometheus text "
+                        "on this HTTP port (0 = ephemeral)")
+    p.add_argument("--slow-op-us", type=int, default=50_000,
+                   help="ops slower than this land in the slow-op log")
     args = p.parse_args(argv)
 
+    obs.LOG.set_level(args.log_level)
     backend = make_backend(
         args.shards, args.block_size, args.policy,
         versions_kept=args.versions_kept,
@@ -783,7 +933,12 @@ def main(argv=None) -> None:
         checkpoint_bytes=args.checkpoint_bytes,
         checkpoint_records=args.checkpoint_records,
         checkpoint_interval_s=args.checkpoint_interval,
+        slow_op_us=args.slow_op_us,
     )
+    metrics_srv = None
+    if args.metrics_port is not None:
+        metrics_srv = obs.serve_metrics(args.metrics_port, server.metrics)
+        obs.LOG.info("metrics_listening", port=metrics_srv.server_port)
 
     def _graceful(signum, frame):  # noqa: ARG001 - signal handler shape
         # wake serve_forever; the drain + WAL flush happen below, in the
@@ -799,6 +954,8 @@ def main(argv=None) -> None:
           f"recovered={recovered} ckpt_seg={ckpt_seg}", flush=True)
     server.serve_forever()
     server.shutdown(drain=True)
+    if metrics_srv is not None:
+        metrics_srv.shutdown()
     print("SHUTDOWN clean", flush=True)
 
 

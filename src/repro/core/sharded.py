@@ -64,6 +64,7 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.core import obs
 from repro.core.api import BackendAPI, CommitReply
 from repro.core.backend import (
     BackendService,
@@ -82,6 +83,20 @@ from repro.core.types import (
 )
 
 SyncVector = Tuple[Timestamp, ...]
+
+# 2PC coordinator metrics, pre-bound at import time (see core/obs.py)
+_2PC_FANOUT = obs.REGISTRY.histogram(
+    "faasfs_2pc_fanout", buckets=obs.SIZE_BUCKETS, unit="shards",
+    help="participant shards per cross-shard commit",
+).labels()
+_2PC_LOCK_WAIT = obs.REGISTRY.histogram(
+    "faasfs_2pc_lock_wait_us", unit="us",
+    help="time to acquire all participant commit locks",
+).labels()
+_2PC_ABORTS = obs.REGISTRY.counter(
+    "faasfs_aborts_total", labels=("cause",),
+    help="OCC validation failures by conflicting item kind",
+).labels("2pc")
 
 
 @dataclass
@@ -471,8 +486,11 @@ class ShardedBackend(BackendAPI):
 
     def _commit_2pc(self, parts: Dict[int, TxnPayload]) -> CommitReply:
         order = sorted(parts)
+        _2PC_FANOUT.observe(len(order))
+        t_lock = obs.now_us()
         for s in order:
             self.shards[s].commit_lock.acquire()
+        _2PC_LOCK_WAIT.observe(obs.now_us() - t_lock)
         try:
             # ---- phase 1: per-shard OCC validation (prepare). In-process
             # validation is pure-Python work the GIL serializes anyway, so
@@ -486,11 +504,17 @@ class ShardedBackend(BackendAPI):
                     errors[s] = e
             if errors:
                 self.coord_stats.cross_aborts += 1
+                _2PC_ABORTS.inc()
                 keys: List = []
+                detail: List = []
                 for e in errors.values():
                     keys.extend(e.keys)
+                    # each shard's validate_locked already stamped its
+                    # own shard id on the detail entries
+                    detail.extend(e.detail)
                 raise Conflict(
-                    f"2pc validation failed on {len(errors)} shard(s)", keys
+                    f"2pc validation failed on {len(errors)} shard(s)", keys,
+                    detail=detail,
                 )
 
             eff = [s for s in order if parts[s].has_effects()]

@@ -66,12 +66,20 @@ SyncTimestamp = object  # Timestamp | Tuple[Timestamp, ...]
 
 
 class Conflict(Exception):
-    """Raised when OCC validation fails at commit; the function must retry."""
+    """Raised when OCC validation fails at commit; the function must retry.
 
-    def __init__(self, reason: str, keys: Optional[List] = None):
+    ``keys`` is the legacy ``(tag, item)`` list. ``detail`` is the
+    explainability enrichment (PR 7): one dict per conflicting item —
+    ``{"tag", "key", "shard", "winner"}`` — naming the shard that
+    rejected the item and the commit timestamp of the write that won
+    the race. Both round-trip over the wire."""
+
+    def __init__(self, reason: str, keys: Optional[List] = None,
+                 detail: Optional[List[Dict]] = None):
         super().__init__(reason)
         self.reason = reason
         self.keys = keys or []
+        self.detail = detail or []
 
 
 class NotFound(Exception):

@@ -80,7 +80,25 @@ import threading
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core import wire
+from repro.core import obs, wire
+
+# WAL metrics, pre-bound at import time (see core/obs.py)
+_FSYNC_US = obs.REGISTRY.histogram(
+    "faasfs_wal_fsync_us", unit="us",
+    help="durability-barrier fsync latency",
+).labels()
+_CKPT_US = obs.REGISTRY.histogram(
+    "faasfs_wal_ckpt_us", unit="us",
+    help="checkpoint cycle duration (capture+serialize+install+compact)",
+).labels()
+_CKPT_BYTES = obs.REGISTRY.counter(
+    "faasfs_wal_ckpt_bytes_total", unit="bytes",
+    help="checkpoint bytes written",
+).labels()
+_SEG_BYTES = obs.REGISTRY.counter(
+    "faasfs_wal_segment_bytes_total", unit="bytes",
+    help="log bytes appended",
+).labels()
 
 _REC_HDR = struct.Struct(">II")
 
@@ -146,6 +164,7 @@ class WriteAheadLog:
                 raise WalFailed(f"log {self.path} write failed: {e}") from e
             self._end += len(frame)
             self.appends += 1
+            _SEG_BYTES.inc(len(frame))
             return self._end
 
     def sync(self, lsn: Optional[int] = None) -> None:
@@ -171,7 +190,10 @@ class WriteAheadLog:
             with self._mu:
                 end = self._end
             try:
-                self._fsync(self._f.fileno())
+                t0 = obs.now_us()
+                with obs.span("wal.fsync", "wal"):
+                    self._fsync(self._f.fileno())
+                _FSYNC_US.observe(obs.now_us() - t0)
             except OSError as e:
                 # Poison BEFORE releasing _sync_mu: concurrent syncers
                 # queued behind this fsync must not retry it against a
@@ -554,6 +576,7 @@ def checkpoint_backend(
     be deleted without ever shrinking the recoverable fid floor. A grant
     racing past the rotation lands its record in the new (kept) segment.
     """
+    t0 = obs.now_us()
     with backend.freeze():
         covered = wal.rotate()
         state = backend.export_snapshot()
@@ -568,9 +591,12 @@ def checkpoint_backend(
                 os.unlink(old)
             except FileNotFoundError:
                 pass
+    ckpt_bytes = os.path.getsize(path)
+    _CKPT_BYTES.inc(ckpt_bytes)
+    _CKPT_US.observe(obs.now_us() - t0)
     return {
         "seg": covered,
-        "bytes": os.path.getsize(path),
+        "bytes": ckpt_bytes,
         "segments_removed": removed,
     }
 

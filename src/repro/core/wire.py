@@ -14,8 +14,17 @@ make them unhashable.
 
 **Frames** — every message on the socket is ``header || body`` (wire v2):
 
-    header = MAGIC(1) | VERSION(1) | MSG_TYPE(1) | pad(1)
+    header = MAGIC(1) | VERSION(1) | MSG_TYPE(1) | FLAGS(1)
            | REQUEST_ID(4, BE) | BODY_LEN(4, BE)
+
+The FLAGS byte (the v2 pad byte, always 0 until now, so untraced
+traffic is byte-identical) carries ``FLAG_TRACE``: when set, a 16-byte
+trace envelope ``TRACE_ID(8, BE) | SPAN_ID(8, BE)`` sits between the
+header and the body (``BODY_LEN`` still counts only the codec body).
+That is how a client propagates its sampling decision and trace
+context to the server — the flag IS the sampled bit — so server-side
+spans (queue wait, worker exec, WAL fsync) land in the same Perfetto
+timeline as the client RPC that caused them. See ``core/obs.py``.
 
 A peer that sees a wrong magic or an unsupported version drops the
 connection instead of guessing. The message-type byte selects the RPC
@@ -35,6 +44,7 @@ lets ``Conflict`` (with its keys, including ``LengthPredicate``),
 """
 from __future__ import annotations
 
+import dataclasses
 import struct
 from dataclasses import asdict
 from typing import Any, Dict, List, Optional, Tuple
@@ -55,8 +65,14 @@ from repro.core.types import (
 # --------------------------------------------------------------------------- #
 MAGIC = 0xF5
 VERSION = 3  # v3: fetch_meta(s) replies carry (ver, length, exists, kind, mtime_ts)
-_HEADER = struct.Struct(">BBBxII")
+_HEADER = struct.Struct(">BBBBII")
 HEADER_LEN = _HEADER.size
+
+#: header FLAGS bit: a 16-byte (trace_id, span_id) envelope follows the
+#: header; the frame is part of a sampled trace
+FLAG_TRACE = 0x01
+_TRACE = struct.Struct(">QQ")
+TRACE_LEN = _TRACE.size
 
 # responses
 T_HELLO = 0x01
@@ -82,6 +98,23 @@ T_SYNC_FILES = 0x23
 # admin (v3): force a WAL checkpoint + compaction cycle; replies with the
 # summary {seg, bytes, segments_removed}
 T_CHECKPOINT = 0x24
+# admin: dump the server's span ring buffer + slow-op log
+# ({"spans": [...], "slow": [...]}); body {"clear": bool}
+T_TRACE_DUMP = 0x25
+
+#: human-readable op names for metrics/span labels (obs.py consumers
+#: pre-bind label children from this table at import time)
+MSG_NAMES = {
+    T_HELLO: "hello", T_OK: "ok", T_ERR: "err",
+    T_BEGIN: "begin", T_SYNC_FILE: "sync_file",
+    T_FETCH_BLOCK: "fetch_block", T_FETCH_META: "fetch_meta",
+    T_LOOKUP: "lookup", T_LISTDIR: "listdir", T_COMMIT: "commit",
+    T_ALLOC_RANGE: "alloc_range", T_STATS: "stats",
+    T_LATEST_TS: "latest_ts", T_PING: "ping",
+    T_FETCH_BLOCKS: "fetch_blocks", T_FETCH_METAS: "fetch_metas",
+    T_LOOKUP_MANY: "lookup_many", T_SYNC_FILES: "sync_files",
+    T_CHECKPOINT: "checkpoint", T_TRACE_DUMP: "trace_dump",
+}
 
 #: max body we will accept from a peer (a frame claiming more is corrupt)
 MAX_BODY = 256 * 1024 * 1024
@@ -391,36 +424,53 @@ _HDR_PAD = bytes(HEADER_LEN)
 
 
 def encode_frame_into(out: bytearray, msg_type: int, obj: Any,
-                      req_id: int = 0) -> int:
+                      req_id: int = 0,
+                      trace: Optional[Tuple[int, int]] = None) -> int:
     """Append one frame to ``out`` without intermediate allocations:
     reserve the header, pack the body in place, then patch the header
-    with the measured body length. Returns the frame length."""
+    with the measured body length. ``trace`` attaches a sampled
+    ``(trace_id, span_id)`` envelope. Returns the frame length."""
     hdr_at = len(out)
     out += _HDR_PAD
+    flags = 0
+    if trace is not None:
+        out += _TRACE.pack(trace[0], trace[1])
+        flags = FLAG_TRACE
+    body_at = len(out)
     _pack_into(obj, out)
-    body_len = len(out) - hdr_at - HEADER_LEN
-    _HEADER.pack_into(out, hdr_at, MAGIC, VERSION, msg_type, req_id, body_len)
-    return HEADER_LEN + body_len
+    body_len = len(out) - body_at
+    _HEADER.pack_into(out, hdr_at, MAGIC, VERSION, msg_type, flags,
+                      req_id, body_len)
+    return len(out) - hdr_at
 
 
-def encode_frame(msg_type: int, obj: Any, req_id: int = 0) -> bytes:
+def encode_frame(msg_type: int, obj: Any, req_id: int = 0,
+                 trace: Optional[Tuple[int, int]] = None) -> bytes:
     out = bytearray()
-    encode_frame_into(out, msg_type, obj, req_id)
+    encode_frame_into(out, msg_type, obj, req_id, trace)
     return bytes(out)
 
 
-def decode_header(hdr, off: int = 0) -> Tuple[int, int, int]:
-    """(msg_type, req_id, body_len); raises WireError on bad
+def decode_header_ex(hdr, off: int = 0) -> Tuple[int, int, int, int]:
+    """(msg_type, req_id, body_len, flags); raises WireError on bad
     magic/version. Accepts bytes or a memoryview, with an optional
     offset, so callers can decode in place without slicing a copy."""
-    magic, version, msg_type, req_id, body_len = _HEADER.unpack_from(hdr, off)
+    magic, version, msg_type, flags, req_id, body_len = \
+        _HEADER.unpack_from(hdr, off)
     if magic != MAGIC:
         raise WireError(f"bad magic 0x{magic:02x}")
     if version != VERSION:
         raise WireError(f"unsupported wire version {version}")
     if body_len > MAX_BODY:
         raise WireError(f"frame body too large ({body_len} bytes)")
-    return msg_type, req_id, body_len
+    return msg_type, req_id, body_len, flags
+
+
+def decode_header(hdr, off: int = 0) -> Tuple[int, int, int]:
+    """(msg_type, req_id, body_len) — the v2-shaped view; flags (and
+    the trace envelope they announce) are handled by the callers that
+    opt in via ``decode_header_ex``."""
+    return decode_header_ex(hdr, off)[:3]
 
 
 def _recv_exact(sock, n: int) -> bytes:
@@ -439,7 +489,10 @@ def send_frame(sock, msg_type: int, obj: Any, req_id: int = 0) -> None:
 
 
 def recv_frame(sock) -> Tuple[int, int, Any]:
-    msg_type, req_id, body_len = decode_header(_recv_exact(sock, HEADER_LEN))
+    msg_type, req_id, body_len, flags = \
+        decode_header_ex(_recv_exact(sock, HEADER_LEN))
+    if flags & FLAG_TRACE:
+        _recv_exact(sock, TRACE_LEN)
     body = _recv_exact(sock, body_len) if body_len else b""
     return msg_type, req_id, unpack(body)
 
@@ -469,7 +522,7 @@ class FrameReader:
     is the signal for coalescing replies before flushing."""
 
     __slots__ = ("sock", "_buf", "_head", "_tail", "frames",
-                 "body_bytes", "_stats")
+                 "body_bytes", "_stats", "last_trace")
 
     INIT_BUF = 1 << 16
     SHRINK_ABOVE = 4 << 20
@@ -482,6 +535,8 @@ class FrameReader:
         self.frames = 0
         self.body_bytes = 0
         self._stats = [0]
+        #: (trace_id, span_id) from the last frame's envelope, or None
+        self.last_trace: Optional[Tuple[int, int]] = None
 
     @property
     def bytes_copied(self) -> int:
@@ -525,17 +580,25 @@ class FrameReader:
             return None
         mv = memoryview(self._buf)
         try:
-            msg_type, req_id, body_len = decode_header(mv, head)
-            end = head + HEADER_LEN + body_len
+            msg_type, req_id, body_len, flags = decode_header_ex(mv, head)
+            body_at = head + HEADER_LEN
+            trace = None
+            if flags & FLAG_TRACE:
+                if avail < HEADER_LEN + TRACE_LEN:
+                    return None
+                trace = _TRACE.unpack_from(mv, body_at)
+                body_at += TRACE_LEN
+            end = body_at + body_len
             if self._tail < end:
                 return None
-            obj, off = _unpack_from(mv[:end], head + HEADER_LEN, self._stats)
+            obj, off = _unpack_from(mv[:end], body_at, self._stats)
             if off != end:
                 raise WireError(
                     f"{end - off} trailing byte(s) after frame body"
                 )
         finally:
             mv.release()
+        self.last_trace = trace
         self._head = end
         if self._head == self._tail:
             self._head = self._tail = 0
@@ -556,8 +619,11 @@ class FrameReader:
         avail = self._tail - self._head
         if avail < HEADER_LEN:
             return False
-        _, _, body_len = decode_header(self._buf, self._head)
-        return avail >= HEADER_LEN + body_len
+        _, _, body_len, flags = decode_header_ex(self._buf, self._head)
+        need = HEADER_LEN + body_len
+        if flags & FLAG_TRACE:
+            need += TRACE_LEN
+        return avail >= need
 
 
 class SendQueue:
@@ -600,7 +666,7 @@ class SendQueue:
         self.size += HEADER_LEN
         size0 = self.size
         self._pack(obj)
-        _HEADER.pack_into(hdr_buf, hdr_at, MAGIC, VERSION, msg_type,
+        _HEADER.pack_into(hdr_buf, hdr_at, MAGIC, VERSION, msg_type, 0,
                           req_id, self.size - size0)
 
     def _pack(self, obj: Any) -> None:
@@ -771,13 +837,27 @@ def metas_from_obj(obj) -> List[Any]:
 
 
 def stats_to_obj(stats) -> Dict[str, Any]:
-    return asdict(stats)
+    d = asdict(stats)
+    extra = getattr(stats, "extra", None)
+    if extra:
+        d.update(extra)
+    return d
 
 
 def stats_from_obj(o: Dict[str, Any]):
+    """Forward-compatible: keys a newer server sends that this client's
+    ``BackendStats`` does not know are kept on ``stats.extra`` (and
+    ``stats_to_obj`` merges them back), instead of crashing the scrape.
+    That is what lets an old client read a new server's T_STATS reply —
+    e.g. the ``metrics`` registry snapshot rides as an extra key."""
     from repro.core.backend import BackendStats
 
-    return BackendStats(**o)
+    known = {f.name for f in dataclasses.fields(BackendStats)}
+    s = BackendStats(**{k: v for k, v in o.items() if k in known})
+    extra = {k: v for k, v in o.items() if k not in known}
+    if extra:
+        s.extra = extra
+    return s
 
 
 # --------------------------------------------------------------------------- #
@@ -808,10 +888,27 @@ def _conflict_keys_from_obj(obj) -> List[Any]:
     return out
 
 
+def _conflict_detail_to_obj(detail) -> List[Any]:
+    # explainability entries are flat dicts of wire-safe scalars/tuples
+    # ({"tag","key","shard","winner"}); pass through with a repr guard
+    out: List[Any] = []
+    for d in detail:
+        try:
+            out.append({str(k): v if isinstance(
+                v, (int, str, tuple, bytes, type(None))) else repr(v)
+                for k, v in d.items()})
+        except AttributeError:
+            out.append({"tag": "opaque", "key": repr(d)})
+    return out
+
+
 def exception_to_obj(exc: BaseException) -> Dict[str, Any]:
     extra = None
     if isinstance(exc, Conflict):
         extra = _conflict_keys_to_obj(exc.keys)
+        detail = getattr(exc, "detail", None)
+        if detail:
+            extra = {"k": extra, "d": _conflict_detail_to_obj(detail)}
     return {"t": type(exc).__name__, "m": str(exc), "x": extra}
 
 
@@ -821,7 +918,16 @@ def exception_from_obj(o: Dict[str, Any]) -> BaseException:
 
     etype, msg, extra = o["t"], o["m"], o["x"]
     if etype == "Conflict":
-        return Conflict(msg, _conflict_keys_from_obj(extra or []))
+        detail = None
+        if isinstance(extra, dict):        # enriched envelope (PR 7+)
+            detail = [
+                {k: tuple(v) if isinstance(v, list) else v
+                 for k, v in d.items()}
+                for d in extra.get("d") or []
+            ]
+            extra = extra.get("k")
+        return Conflict(msg, _conflict_keys_from_obj(extra or []),
+                        detail=detail)
     table = {
         "NotFound": NotFound,
         "Exists": Exists,

@@ -1,0 +1,246 @@
+"""End-to-end observability acceptance (over the real wire).
+
+The headline invariant: ONE traced ``FunctionRuntime`` invocation that
+aborts once on a ``Conflict`` and then commits exports a single
+Chrome-trace JSON in which BOTH attempts — client RPCs, server
+queue/exec spans, and the WAL fsyncs — hang off one trace id, and the
+abort explains itself (conflicting key + shard) in
+``InvocationStats.abort_reasons``."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import urllib.request
+from pathlib import Path
+
+import pytest
+
+from repro.core import obs
+from repro.core.client import LocalServer
+from repro.core.posix import O_CREAT, O_RDWR
+from repro.core.runtime import FunctionRuntime, InvocationStats
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+
+@pytest.fixture
+def remote_backend(backend_factory):
+    if not backend_factory.kind.startswith("remote"):
+        pytest.skip("observability acceptance runs over the real wire")
+    return backend_factory(block_size=16)
+
+
+def _ancestors(span, by_id):
+    seen = set()
+    cur = span
+    while True:
+        pa = cur.get("pa", 0)
+        if not pa or pa in seen:
+            return seen
+        seen.add(pa)
+        cur = by_id.get(pa)
+        if cur is None:
+            return seen
+
+
+def test_traced_conflict_restart_renders_one_timeline(
+    remote_backend, backend_factory, tmp_path
+):
+    rb = remote_backend
+    rt = FunctionRuntime(LocalServer(rb), trace=True)
+    other = FunctionRuntime(LocalServer(rb))
+
+    @rt.function
+    def setup(fs):
+        fd = fs.open("/mnt/tsfs/ctr", O_CREAT | O_RDWR)
+        fs.pwrite(fd, (0).to_bytes(8, "little"), 0)
+
+    setup()
+
+    fired = {"done": False}
+
+    @rt.function
+    def bump(fs):
+        fd = fs.open("/mnt/tsfs/ctr", O_RDWR)
+        n = int.from_bytes(fs.pread(fd, 8, 0), "little")
+        if not fired["done"]:
+            fired["done"] = True
+
+            @other.function
+            def interfere(fs2):
+                fd2 = fs2.open("/mnt/tsfs/ctr", O_RDWR)
+                m = int.from_bytes(fs2.pread(fd2, 8, 0), "little")
+                fs2.pwrite(fd2, (m + 100).to_bytes(8, "little"), 0)
+
+            interfere()  # commits between our read and our commit
+        fs.pwrite(fd, (n + 1).to_bytes(8, "little"), 0)
+
+    stats = InvocationStats()
+    bump(stats=stats)
+    assert stats.attempts == 2 and stats.aborts == 1
+    assert stats.trace_id != 0
+
+    # -- conflict explainability ------------------------------------- #
+    assert stats.abort_reasons, "the abort must explain itself"
+    r = stats.abort_reasons[0]
+    assert r["tag"] in ("block", "meta", "name", "predicate")
+    assert "key" in r
+    # server-side enrichment: WHICH shard's validation lost, and to whom
+    assert "shard" in r and "winner" in r
+    if backend_factory.kind == "remote-sharded2":
+        assert 0 <= r["shard"] < 2
+    assert rt.stats.abort_reasons.get(r["tag"], 0) >= 1
+
+    # -- one timeline, both attempts --------------------------------- #
+    # in-process server: client and server spans share the ring, exactly
+    # what the single-file Perfetto export wants
+    spans = obs.SPANS.spans(trace_id=stats.trace_id)
+    by_id = {s["sp"]: s for s in spans}
+    names = {s["n"] for s in spans}
+    assert "invoke.bump" in names
+    assert any(n.startswith("rpc.") for n in names)
+    assert any(n.startswith("server.exec.") for n in names)
+    assert "wal.fsync" in names
+
+    root = next(s for s in spans if s["n"] == "invoke.bump")
+    attempts = sorted(
+        (s for s in spans
+         if s["n"] == "invoke.attempt" and s["pa"] == root["sp"]),
+        key=lambda s: s["ar"]["n"],
+    )
+    assert [a["ar"]["n"] for a in attempts] == [0, 1]
+
+    for a in attempts:  # BOTH attempts carry the full client->WAL chain
+        rpc = [s for s in spans if s["n"].startswith("rpc.")
+               and a["sp"] in _ancestors(s, by_id)]
+        execs = [s for s in spans if s["n"].startswith("server.")
+                 and a["sp"] in _ancestors(s, by_id)]
+        fsyncs = [s for s in spans if s["n"] == "wal.fsync"
+                  and a["sp"] in _ancestors(s, by_id)]
+        assert rpc and execs and fsyncs, (a["ar"], sorted(names))
+
+    # -- single Chrome-trace JSON artifact --------------------------- #
+    out = tmp_path / "trace.json"
+    obs.write_chrome_trace(str(out), spans)
+    doc = json.loads(out.read_text())
+    events = doc["traceEvents"]
+    assert {e["name"] for e in events} == names
+    tids = {e["args"]["trace_id"] for e in events}
+    assert tids == {f"{stats.trace_id:016x}"}  # ONE trace id end to end
+    assert all(e["ph"] == "X" and e["dur"] >= 1 for e in events)
+
+
+def test_trace_dump_and_metrics_ride_the_wire(remote_backend):
+    rb = remote_backend
+    local = LocalServer(rb)
+    t = local.begin()
+    fid = t.create("/obsfile")
+    t.write(fid, 0, b"y" * 16)
+    t.commit()
+
+    # server metrics snapshot rides T_STATS as a forward-compatible key
+    snap = rb.metrics_snapshot()
+    assert snap["faasfs_server_requests_total"]["type"] == "counter"
+    reqs = snap["faasfs_server_requests_total"]["values"]
+    assert reqs.get("op=commit", 0) >= 1
+    hist = snap["faasfs_server_exec_us"]["values"]["op=commit"]
+    assert hist["count"] >= 1 and hist["count"] == sum(hist["counts"])
+    assert snap["faasfs_wal_fsync_us"]["values"][""]["count"] >= 1
+    # ...while the classic stats fields still parse
+    assert rb.stats.commits >= 1
+
+    # traced RPC -> T_TRACE_DUMP returns its server-side spans
+    tid = obs.new_trace_id()
+    prev = obs.set_trace((tid, 1))
+    try:
+        rb.ping()
+    finally:
+        obs.set_trace(prev)
+    dump = rb.trace_dump()
+    assert isinstance(dump["slow"], list)
+    mine = [s for s in dump["spans"] if s["tr"] == tid]
+    assert any(s["n"] == "server.exec.ping" for s in mine)
+
+
+def test_connection_stats_public_surface(remote_backend):
+    rb = remote_backend
+    rb.ping()
+    before = rb.connection_stats()
+    assert before["connected"] and before["pending"] == 0
+    assert before["rpcs"] >= 1 and before["redials"] == 0
+    assert before["frames"] >= 1
+    # zero-copy accounting is exposed without reaching into FrameReader
+    assert before["bytes_copied"] >= 0
+    # a blocking serial RPC completes on the caller (reader-lease path)
+    rb.ping()
+    after = rb.connection_stats()
+    assert after["rpcs"] == before["rpcs"] + 1
+    # every reply frame completed a future or was counted stray (the
+    # hello is read before the FrameReader exists, so it's not in frames)
+    assert (after["lease_completions"] + after["parked_completions"]
+            == after["frames"] - after["stray_replies"])
+    assert after["lease_completions"] > 0
+
+
+def test_metrics_port_cli_serves_prometheus(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.server",
+         "--wal", str(tmp_path / "w.wal"), "--block-size", "16",
+         "--metrics-port", "0", "--log-level", "info"],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        env=env,
+        cwd=str(REPO_ROOT),
+        text=True,
+    )
+    try:
+        # the structured log announces the ephemeral scrape port on
+        # stderr before the stdout protocol line (skim past any
+        # interpreter warnings that may precede it)
+        mport = None
+        for _ in range(50):
+            mline = proc.stderr.readline()
+            if not mline:
+                break
+            if "event=metrics_listening" in mline:
+                mport = int(mline.split("port=")[1].split()[0])
+                break
+        assert mport is not None, "no metrics_listening log line"
+        line = proc.stdout.readline()
+        assert line.startswith("LISTENING")
+        port = int(line.split()[1])
+
+        from repro.core.remote import RemoteBackend
+
+        rb = RemoteBackend("127.0.0.1", port)
+        rb.ping()
+        rb.close()
+        body = None
+        for attempt in range(3):
+            try:
+                body = urllib.request.urlopen(
+                    f"http://127.0.0.1:{mport}/metrics", timeout=10
+                ).read().decode()
+                break
+            except OSError:
+                if attempt == 2:
+                    raise
+                time.sleep(0.5)
+        assert "# TYPE faasfs_server_requests_total counter" in body
+        assert 'faasfs_server_requests_total{op="ping"}' in body
+        assert "faasfs_server_conns 0" in body  # gauge sampled at scrape
+
+        proc.send_signal(signal.SIGTERM)
+        out, err = proc.communicate(timeout=30)
+        assert proc.returncode == 0, err
+        assert "SHUTDOWN clean" in out
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)

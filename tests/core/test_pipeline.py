@@ -108,9 +108,9 @@ def test_unknown_and_duplicate_request_ids_are_dropped_not_misdelivered():
     rb = RemoteBackend("127.0.0.1", srv.port)
     assert rb.submit_frame(wire.T_LATEST_TS, None).result(timeout=5) == "real"
     deadline = time.time() + 5
-    while rb.stray_replies < 2 and time.time() < deadline:
+    while rb.connection_stats()["stray_replies"] < 2 and time.time() < deadline:
         time.sleep(0.01)
-    assert rb.stray_replies == 2             # bogus + duplicate, counted
+    assert rb.connection_stats()["stray_replies"] == 2  # bogus + dupe, counted
     # stream framing survived: the next call round-trips normally
     assert rb.submit_frame(wire.T_LATEST_TS, None).result(timeout=5) == "second"
     rb.close()
@@ -181,7 +181,8 @@ def test_close_fails_inflight_futures_with_typed_connection_closed():
     caller.join(timeout=5)
     assert not caller.is_alive()
     assert isinstance(blocked_result.get("e"), wire.ConnectionClosed)
-    assert rb._sock is None and not rb._pending      # nothing leaked
+    cs = rb.connection_stats()
+    assert not cs["connected"] and cs["pending"] == 0   # nothing leaked
     assert rb._reader is not None
     rb._reader.join(timeout=2)
     assert not rb._reader.is_alive()                 # reader wound down

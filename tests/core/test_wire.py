@@ -407,3 +407,122 @@ if st is not None:
     def test_property_lookup_many_reply_roundtrip(reply):
         wired = wire.unpack(wire.pack([tuple(e) for e in reply]))
         assert [tuple(e) for e in wired] == reply
+
+
+# ------------------------------------------------------------------------- #
+# trace envelope (wire v3 FLAGS byte)
+# ------------------------------------------------------------------------- #
+def test_untraced_frame_has_zero_flags_byte():
+    # the FLAGS byte took over the old pad byte: untraced traffic must
+    # stay byte-identical to the pre-trace wire format
+    buf = wire.encode_frame(wire.T_PING, None, req_id=7)
+    assert buf[3] == 0
+    assert wire.decode_header(buf) == (wire.T_PING, 7, len(buf) - wire.HEADER_LEN)
+
+
+def test_traced_frame_roundtrip_and_last_trace():
+    trace = (0x1234_5678_9ABC_DEF1, 0x0FED_CBA9_8765_4321)
+    buf = wire.encode_frame(wire.T_COMMIT, {"x": 1}, req_id=9, trace=trace)
+    assert buf[3] & wire.FLAG_TRACE
+    mt, rid, blen, flags = wire.decode_header_ex(buf)
+    assert (mt, rid, flags) == (wire.T_COMMIT, 9, wire.FLAG_TRACE)
+    # BODY_LEN excludes the envelope
+    assert len(buf) == wire.HEADER_LEN + wire.TRACE_LEN + blen
+
+    class _Sock:
+        def __init__(self, data):
+            self.data = memoryview(bytes(data))
+
+        def recv_into(self, b, nbytes=0, flags=0):
+            n = min(len(b), len(self.data))
+            b[:n] = self.data[:n]
+            self.data = self.data[n:]
+            return n
+
+    rdr = wire.FrameReader(_Sock(buf))
+    assert rdr.last_trace is None
+    assert rdr.recv_frame() == (wire.T_COMMIT, 9, {"x": 1})
+    assert rdr.last_trace == trace
+    # an untraced frame clears it again
+    rdr2 = wire.FrameReader(_Sock(wire.encode_frame(wire.T_PING, None)))
+    rdr2.recv_frame()
+    assert rdr2.last_trace is None
+
+
+def test_traced_frame_interleaves_with_untraced_in_one_buffer():
+    t = (11, 22)
+    blob = (wire.encode_frame(wire.T_PING, None, req_id=1)
+            + wire.encode_frame(wire.T_LOOKUP, "/a", req_id=2, trace=t)
+            + wire.encode_frame(wire.T_PING, None, req_id=3))
+
+    class _Sock:
+        def __init__(self, data):
+            self.data = memoryview(bytes(data))
+
+        def recv_into(self, b, nbytes=0, flags=0):
+            n = min(len(b), len(self.data))
+            b[:n] = self.data[:n]
+            self.data = self.data[n:]
+            return n
+
+    rdr = wire.FrameReader(_Sock(blob))
+    assert rdr.recv_frame()[1] == 1 and rdr.last_trace is None
+    assert rdr.recv_frame()[1] == 2 and rdr.last_trace == t
+    assert rdr.recv_frame()[1] == 3 and rdr.last_trace is None
+
+
+# ------------------------------------------------------------------------- #
+# stats forward compatibility (unknown keys round-trip)
+# ------------------------------------------------------------------------- #
+def test_stats_unknown_keys_roundtrip():
+    from repro.core.backend import BackendStats
+
+    obj = wire.stats_to_obj(BackendStats(commits=3, aborts=1))
+    # a future server adds keys this client build doesn't know about
+    obj["metrics"] = {"faasfs_commits_total": {"type": "counter"}}
+    obj["frobnication_index"] = 42
+
+    s = wire.stats_from_obj(obj)
+    assert s.commits == 3 and s.aborts == 1
+    assert s.extra["frobnication_index"] == 42
+    assert "faasfs_commits_total" in s.extra["metrics"]
+    # ...and they survive re-encoding (proxy/forwarder scenario)
+    back = wire.stats_to_obj(s)
+    assert back["frobnication_index"] == 42
+    assert back["commits"] == 3
+
+
+def test_stats_without_unknown_keys_has_empty_extra():
+    from repro.core.backend import BackendStats
+
+    s = wire.stats_from_obj(wire.stats_to_obj(BackendStats(begins=5)))
+    assert s.begins == 5
+    assert getattr(s, "extra", {}) == {}
+
+
+# ------------------------------------------------------------------------- #
+# conflict explainability on the wire
+# ------------------------------------------------------------------------- #
+def test_conflict_detail_roundtrips_and_keys_stay_legacy_shaped():
+    detail = [
+        {"tag": "block", "key": (7, 0), "shard": 1, "winner": 42},
+        {"tag": "name", "key": "/a/b", "shard": 0, "winner": 40},
+    ]
+    c = Conflict("validation failed", [("block", (7, 0)), ("name", "/a/b")],
+                 detail=detail)
+    err = wire.exception_to_obj(c)
+    back = wire.exception_from_obj(err)
+    assert isinstance(back, Conflict)
+    # legacy consumers: keys keep their (tag, key) 2-tuple shape
+    assert [(t, k) for t, k in back.keys] == [("block", (7, 0)), ("name", "/a/b")]
+    assert back.detail[0]["shard"] == 1 and back.detail[0]["winner"] == 42
+    assert back.detail[1]["tag"] == "name" and back.detail[1]["key"] == "/a/b"
+
+
+def test_conflict_legacy_list_extra_still_accepted():
+    # an old server sends the pre-detail extra: a bare keys list
+    c = Conflict("old-style", [("meta", 9)])
+    err = wire.exception_to_obj(c)
+    assert isinstance(err["x"], list)  # no detail -> legacy wire shape
+    back = wire.exception_from_obj(err)
+    assert back.keys == [("meta", 9)] and back.detail == []
