@@ -16,6 +16,15 @@ equality check:
   cancels and the bound is absolute, independent of the baseline. This
   is the instrumentation-overhead gate: observability must stay cheap
   enough to leave on.
+- ``ABS_MIN`` metrics are same-run ratios gated as absolute *floors*.
+  These are the shard-process scaling gates: commit throughput at 2
+  shard processes must beat 1 process by the floor, and 4 must still
+  improve on 2 — measured back to back, so machine speed cancels.
+
+The same gate script serves every bench artifact (``BENCH_remote.json``,
+``BENCH_sharded.json``): metrics absent from both the baseline and the
+current artifact are skipped, so each artifact is only held to the
+metrics it actually carries.
 
 A metric missing from the current run fails (a silently dropped row is
 how a gate rots); a metric missing from the *baseline* is skipped, so
@@ -50,6 +59,9 @@ LOWER_BETTER = {
 HIGHER_BETTER = {
     "remote_tps_socket",
     "remote_reads_pipelined",
+    "sharded_proc_tps_p1",
+    "sharded_proc_tps_p2",
+    "sharded_proc_tps_p4",
 }
 EXACT = {
     "remote_fetch_batch_rpcs",
@@ -62,6 +74,15 @@ ABS_MAX = {
     "remote_seq_metrics_overhead_ratio": 1.15,
     "remote_seq_overhead_ratio": 1.5,
 }
+#: same-run scaling ratios: absolute floors. Commit service time is
+#: GIL-released durable-media wait, so shard processes overlap it even
+#: on one core; measured ~1.74x at 2 procs and ~1.36x going 2 -> 4.
+#: The floors leave room for CI ratio noise while still failing if the
+#: cluster path stops scaling with processes.
+ABS_MIN = {
+    "sharded_proc_speedup_s2_vs_s1": 1.6,
+    "sharded_proc_speedup_s4_vs_s2": 1.1,
+}
 
 
 def _load(path: str) -> Dict[str, float]:
@@ -72,21 +93,29 @@ def _load(path: str) -> Dict[str, float]:
 
 def check(baseline: Dict[str, float], current: Dict[str, float]):
     """Yield (metric, base, cur, verdict, detail) for every gated metric."""
-    for metric in sorted(LOWER_BETTER | HIGHER_BETTER | EXACT | set(ABS_MAX)):
+    gated = LOWER_BETTER | HIGHER_BETTER | EXACT | set(ABS_MAX) | set(ABS_MIN)
+    for metric in sorted(gated):
         base = baseline.get(metric)
         cur = current.get(metric)
-        if metric in ABS_MAX:
-            # same-run ratio: gate the current value absolutely; only an
-            # artifact from a pre-instrumentation bench may omit it
+        if metric in ABS_MAX or metric in ABS_MIN:
+            # same-run ratio: gate the current value absolutely; an
+            # artifact from a bench that never emitted the row (e.g. the
+            # other suite's artifact) may omit it from both sides
             if cur is None:
                 if base is None:
                     yield metric, None, None, "skip", "not in either artifact"
                 else:
                     yield metric, base, None, "FAIL", "missing from current run"
                 continue
-            limit = ABS_MAX[metric]
-            ok = cur <= limit
-            yield metric, base, cur, ("ok" if ok else "FAIL"), f"<= {limit:g} (absolute)"
+            if metric in ABS_MAX:
+                limit = ABS_MAX[metric]
+                ok = cur <= limit
+                detail = f"<= {limit:g} (absolute)"
+            else:
+                limit = ABS_MIN[metric]
+                ok = cur >= limit
+                detail = f">= {limit:g} (absolute)"
+            yield metric, base, cur, ("ok" if ok else "FAIL"), detail
             continue
         if base is None:
             yield metric, None, cur, "skip", "not in baseline"

@@ -77,10 +77,15 @@ class CommitReply:
                          block, so the client can write committed data
                          through into its cache with the exact version
                          that commit validation will later compare.
+    ``slot_ts``        — per-slot commit timestamps the commit advanced
+                         (sharded backends only; empty elsewhere). A
+                         cluster coordinator proxying the commit uses
+                         these to advance its applied-vector view.
     """
 
     ts: SyncTimestamp
     block_versions: Dict[BlockKey, Timestamp] = field(default_factory=dict)
+    slot_ts: Dict[int, Timestamp] = field(default_factory=dict)
 
 
 class BackendFuture:

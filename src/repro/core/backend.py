@@ -316,9 +316,13 @@ class BackendService(BackendAPI):
 
     def _durable_barrier(self, lsn=None) -> None:
         """Make everything appended so far durable before acking: real
-        WAL fsync when attached, else the simulated service time."""
+        WAL fsync when attached, else the simulated service time. An
+        explicitly configured service time ALSO applies on top of a real
+        WAL — benchmarks use it to model slower durable media than the
+        local disk while still exercising the real log path."""
         if self.wal is not None:
             self.wal.sync(lsn)
+            self._service()
         else:
             self._service()
 

@@ -246,14 +246,23 @@ class MetricsRegistry:
         return self._family(name, "gauge", labels, Gauge, unit, help)
 
     def gauge_fn(self, name: str, fn: Callable[[], float], unit: str = "",
-                 help: str = "") -> Gauge:
-        """Register (or rebind) an unlabeled callback gauge."""
-        fam = self._family(name, "gauge", (), Gauge, unit, help)
+                 help: str = "", labels=(), label_values=()) -> Gauge:
+        """Register (or rebind) a callback gauge. With ``labels`` /
+        ``label_values`` the callback binds to that label child, so
+        several processes' gauges (e.g. per-listen-address server
+        gauges) can land in one scraped registry without colliding."""
+        fam = self._family(name, "gauge", labels, Gauge, unit, help)
+        key = tuple(label_values)
+        if len(key) != len(fam.label_names):
+            raise ValueError(
+                f"{name}: expected {len(fam.label_names)} label "
+                f"value(s), got {len(key)}"
+            )
         with fam._lock:
-            g = fam._children.get(())
+            g = fam._children.get(key)
             if g is None:
                 g = Gauge(fn)
-                fam._children[()] = g
+                fam._children[key] = g
             else:
                 g._fn = fn
         return g
@@ -346,6 +355,26 @@ def serve_metrics(port: int, registry: "MetricsRegistry",
                          daemon=True)
     t.start()
     return srv
+
+
+# --------------------------------------------------------------------------- #
+# crash points (failpoints for durability tests)
+# --------------------------------------------------------------------------- #
+#: names armed via ``--crash-at``: when execution passes a matching
+#: ``crash_point(name)`` the process SIGKILLs itself — no atexit, no
+#: flush, exactly the failure the WAL recovery path must survive
+CRASH_POINTS: set = set()
+
+
+def crash_point(name: str) -> None:
+    """Die (SIGKILL, not an exception) if ``name`` is armed. Placed at
+    2PC marker boundaries and migration steps so recovery tests can
+    prove exactly-once application across every torn state."""
+    if name in CRASH_POINTS:
+        import os
+        import signal
+
+        os.kill(os.getpid(), signal.SIGKILL)
 
 
 # --------------------------------------------------------------------------- #

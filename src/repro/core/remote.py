@@ -76,11 +76,13 @@ class _RemoteCore(BackendAPI):
     frame exchange)."""
 
     def __init__(self, host: str, port: int, lease_size: int = DEFAULT_LEASE,
-                 connect_timeout_s: float = 10.0):
+                 connect_timeout_s: float = 10.0,
+                 admin_token: Optional[str] = None):
         self.host = host
         self.port = port
         self.lease_size = lease_size
         self.connect_timeout_s = connect_timeout_s
+        self.admin_token = admin_token
         self._hello: Optional[Dict] = None
         self._alloc_mu = threading.Lock()
         self._lease_epoch = 0
@@ -125,6 +127,21 @@ class _RemoteCore(BackendAPI):
         # mux client dials under its state lock — an unbounded hello
         # read would block every other caller, close() included)
         self._handshake(sock)
+        if self.admin_token is not None:
+            # authenticate synchronously on every (re)dial, still under
+            # the connect timeout: auth is per-connection server state,
+            # so a transparent reconnect must re-establish it before any
+            # admin-gated frame can be pipelined behind it
+            try:
+                wire.send_frame(sock, wire.T_AUTH,
+                                {"token": self.admin_token}, 0)
+                reply_type, _, reply = wire.recv_frame(sock)
+            except BaseException:
+                sock.close()
+                raise
+            if reply_type == wire.T_ERR:
+                sock.close()
+                raise wire.exception_from_obj(reply)
         sock.settimeout(None)
         return sock
 
@@ -365,8 +382,10 @@ class RemoteBackend(_RemoteCore):
     FOLLOW_TICK = 0.05
 
     def __init__(self, host: str, port: int, lease_size: int = DEFAULT_LEASE,
-                 connect_timeout_s: float = 10.0):
-        super().__init__(host, port, lease_size, connect_timeout_s)
+                 connect_timeout_s: float = 10.0,
+                 admin_token: Optional[str] = None):
+        super().__init__(host, port, lease_size, connect_timeout_s,
+                         admin_token=admin_token)
         self._mu = threading.Lock()          # conn state + pending table
         self._send_mu = threading.Lock()     # guards the send buffer
         self._write_mu = threading.Lock()    # serializes socket writes
@@ -610,6 +629,15 @@ class RemoteBackend(_RemoteCore):
         if reader is not None and reader is not threading.current_thread():
             reader.join(timeout=1.0)
 
+    def mapv_seen(self) -> Optional[int]:
+        """Highest ShardMap version any reply frame on the current
+        connection has advertised (FLAG_MAPV envelope), or None. The
+        cluster client compares this against its cached map to notice
+        rebalances passively, without a StaleShardMap bounce."""
+        with self._mu:
+            rdr = self._rdr
+            return rdr.last_mapv if rdr is not None else None
+
     def connection_stats(self) -> Dict[str, Any]:
         """Public transport-health snapshot (tests and benchmarks assert
         on this instead of reaching into private fields)."""
@@ -731,8 +759,10 @@ class PooledRemoteBackend(_RemoteCore):
     growing the pool."""
 
     def __init__(self, host: str, port: int, lease_size: int = DEFAULT_LEASE,
-                 connect_timeout_s: float = 10.0):
-        super().__init__(host, port, lease_size, connect_timeout_s)
+                 connect_timeout_s: float = 10.0,
+                 admin_token: Optional[str] = None):
+        super().__init__(host, port, lease_size, connect_timeout_s,
+                         admin_token=admin_token)
         self._pool: List[socket.socket] = []
         self._pool_mu = threading.Lock()
         with self._pool_mu:

@@ -71,6 +71,7 @@ exits cleanly)::
 from __future__ import annotations
 
 import argparse
+import hmac
 import os
 import queue
 import selectors
@@ -79,7 +80,7 @@ import socket
 import sys
 import threading
 from collections import deque
-from typing import Any, Dict, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core import obs
 from repro.core import wal as walmod
@@ -215,7 +216,8 @@ class _Conn:
     """Per-connection event-loop state: the rolling read buffer, the
     scatter-gather output queue, and the backpressure window."""
 
-    __slots__ = ("sock", "reader", "out", "inflight", "mask", "closed")
+    __slots__ = ("sock", "reader", "out", "inflight", "mask", "closed",
+                 "authed")
 
     def __init__(self, sock: socket.socket):
         self.sock = sock
@@ -224,6 +226,7 @@ class _Conn:
         self.inflight = 0    # dispatched-but-unreplied blockable requests
         self.mask = 0        # currently registered selector events
         self.closed = False
+        self.authed = False  # passed T_AUTH with the server's admin token
 
 
 class BackendServer:
@@ -249,10 +252,14 @@ class BackendServer:
         checkpoint_records: Optional[int] = None,
         checkpoint_interval_s: float = 0.25,
         slow_op_us: int = 50_000,
+        admin_token: Optional[str] = None,
+        resolve_addr: Optional[Tuple[str, int]] = None,
     ):
         self.backend = backend
         self.metrics = obs.REGISTRY
         self.slow_op_us = slow_op_us
+        self.admin_token = admin_token
+        self._resolve_addr = resolve_addr
         self.wal = None  # WriteAheadLog (legacy file) | SegmentedWal (dir)
         self.recovery: Optional[Dict[str, int]] = None
         self.max_inflight_per_conn = max(1, int(max_inflight_per_conn))
@@ -289,6 +296,9 @@ class BackendServer:
             self.wal.sync()
             self._ckpt_appends = self.wal.appends
             backend.set_wal(self.wal)  # type: ignore[attr-defined]
+            if hasattr(backend, "finish_recovery"):
+                # re-pin in-doubt prepares' slot locks before serving
+                backend.finish_recovery()
         self.epoch = epoch
         self.allocator = FileIdAllocator(self.wal, epoch, next_fid)
 
@@ -306,6 +316,11 @@ class BackendServer:
         # blockable requests run here so one connection can have many in
         # flight; completed replies hop back into the loop via the pipe
         self._workers = _WorkerPool(max_workers)
+        # lock-RELEASING cluster ops (2PC decide, migration drop/abort)
+        # get their own lane: if every general worker is parked inside a
+        # prepare waiting on a slot lock, the decide that would release
+        # it must still find a thread to run on
+        self._release_workers = _WorkerPool(2, name="faasfs-release")
         self._completions: deque = deque()
         self._inflight = 0               # dispatched blockable requests
         self._wake_r, self._wake_w = os.pipe()
@@ -313,20 +328,25 @@ class BackendServer:
         os.set_blocking(self._wake_w, False)
         self._wal_closed = False
         # live-state gauges: callback-backed, sampled only at scrape time
-        # (zero hot-path cost). With several servers in one process the
-        # process-global registry reflects the most recent one.
+        # (zero hot-path cost). Labeled by listen address so several
+        # servers — in one process, or scraped/merged into one registry
+        # from many shard processes — never collide on one child.
+        addr = (f"{self.host}:{self.port}",)
         self.metrics.gauge_fn(
             "faasfs_server_conns", lambda: len(self._conns),
             help="open client connections",
+            labels=("addr",), label_values=addr,
         )
         self.metrics.gauge_fn(
             "faasfs_server_inflight", lambda: self._inflight,
             help="dispatched-but-unreplied blockable requests",
+            labels=("addr",), label_values=addr,
         )
         self.metrics.gauge_fn(
             "faasfs_server_sendq_bytes",
             lambda: sum(c.out.size for c in list(self._conns)),
             unit="bytes", help="unflushed reply bytes across connections",
+            labels=("addr",), label_values=addr,
         )
 
     # ------------------------------------------------------------------ #
@@ -344,7 +364,50 @@ class BackendServer:
             )
             ct.start()
             self._ckpt_thread = ct
+        if self._resolve_addr is not None and getattr(
+            self.backend, "in_doubt", lambda: []
+        )():
+            rt = threading.Thread(
+                target=self._resolve_loop, name="faasfs-resolve", daemon=True
+            )
+            rt.start()
         return self
+
+    def _resolve_loop(self) -> None:
+        """Termination protocol for in-doubt 2PC participants: ask the
+        coordinator (T_RESOLVE) for each recovered-but-undecided txid
+        until every one is settled. The coordinator may independently
+        push T_DECIDE at its own startup — decide() is idempotent, so
+        both paths racing is fine."""
+        backoff = 0.05
+        while not self._stop.is_set():
+            pending = self.backend.in_doubt()
+            if not pending:
+                return
+            try:
+                sock = socket.create_connection(self._resolve_addr, timeout=5)
+                try:
+                    wire.recv_frame(sock)  # hello
+                    rid = 1
+                    for txid in pending:
+                        wire.send_frame(
+                            sock, wire.T_RESOLVE, {"txid": list(txid)}, rid
+                        )
+                        mt, _, reply = wire.recv_frame(sock)
+                        rid += 1
+                        if mt != wire.T_OK:
+                            continue
+                        verdict = reply.get("d")
+                        if verdict in ("c", "a"):
+                            self.backend.decide(tuple(txid), verdict == "c")
+                        # "pending": coordinator still deciding — retry
+                finally:
+                    sock.close()
+            except OSError:
+                pass  # coordinator not up yet: retry
+            if self._stop.wait(backoff):
+                return
+            backoff = min(backoff * 2, 2.0)
 
     # ------------------------------------------------------------------ #
     # checkpoint + compaction (the admin op and the background trigger)
@@ -449,6 +512,7 @@ class BackendServer:
                 except OSError:
                     pass
         self._workers.shutdown(wait=drain)
+        self._release_workers.shutdown(wait=drain)
         if self.wal is not None and not self._wal_closed:
             with self._ckpt_mu:  # let a mid-flight checkpoint finish
                 self._wal_closed = True
@@ -537,7 +601,8 @@ class BackendServer:
             sock.setblocking(False)
             conn = _Conn(sock)
             self._conns.add(conn)
-            conn.out.put_frame(wire.T_HELLO, self._hello(), 0)
+            conn.out.put_frame(wire.T_HELLO, self._hello(), 0,
+                               mapv=self.reply_mapv())
             self._pump_conn(sel, conn)
 
     def _on_readable(self, sel, conn: _Conn) -> None:
@@ -589,11 +654,49 @@ class BackendServer:
             ctr = _REQS.get(msg_type)
             if ctr is not None:
                 ctr.inc()
+            if msg_type == wire.T_AUTH:
+                # handled inline (needs the connection, which _dispatch
+                # never sees). With no --admin-token configured, auth is
+                # a benign no-op: everything is allowed anyway.
+                token = obj.get("token") if isinstance(obj, dict) else None
+                if self.admin_token is not None and not (
+                    isinstance(token, str)
+                    and hmac.compare_digest(token, self.admin_token)
+                ):
+                    out.put_frame(
+                        wire.T_ERR,
+                        wire.exception_to_obj(
+                            wire.PermissionDenied("bad admin token")),
+                        req_id, mapv=self.reply_mapv(),
+                    )
+                else:
+                    conn.authed = True
+                    out.put_frame(wire.T_OK, {"authed": True}, req_id,
+                                  mapv=self.reply_mapv())
+                continue
+            if (
+                self.admin_token is not None
+                and not conn.authed
+                and msg_type in self._ADMIN_OPS
+            ):
+                op = _OP_NAMES.get(msg_type, str(msg_type))
+                out.put_frame(
+                    wire.T_ERR,
+                    wire.exception_to_obj(wire.PermissionDenied(
+                        f"{op} requires admin auth (T_AUTH with the "
+                        "server's --admin-token)")),
+                    req_id, mapv=self.reply_mapv(),
+                )
+                continue
             if msg_type in self._SLOW_OPS:
+                pool = (
+                    self._release_workers
+                    if msg_type in self._RELEASE_OPS else self._workers
+                )
                 conn.inflight += 1
                 self._inflight += 1
                 try:
-                    self._workers.submit(
+                    pool.submit(
                         self._work_one, conn, msg_type, req_id, obj,
                         obs.now_us(), reader.last_trace,
                     )
@@ -621,7 +724,8 @@ class BackendServer:
                         "server", trace[0], obs.new_span_id(), t0, dur,
                         parent_id=trace[1],
                     )
-                out.put_frame(reply_type, reply, req_id)
+                out.put_frame(reply_type, reply, req_id,
+                              mapv=self.reply_mapv())
 
     def _work_one(self, conn: _Conn, msg_type: int, req_id: int,
                   obj: Any, t_enq: int, trace) -> None:
@@ -683,7 +787,8 @@ class BackendServer:
             self._inflight -= 1
             conn.inflight -= 1
             if not conn.closed:
-                conn.out.put_frame(reply_type, reply, req_id)
+                conn.out.put_frame(reply_type, reply, req_id,
+                                   mapv=self.reply_mapv())
                 touched.add(conn)
                 if trace is not None:
                     traced.append(trace)
@@ -763,15 +868,45 @@ class BackendServer:
             "epoch": self.epoch,
         }
 
+    def reply_mapv(self) -> Optional[int]:
+        """ShardMap version advertised on every reply frame (FLAG_MAPV
+        envelope). None on a plain backend server; the cluster
+        coordinator overrides this with its live map version so clients
+        learn about rebalances passively, epoch-style."""
+        return None
+
     #: requests that may block (commit-lock waits, group-commit windows,
     #: WAL fsyncs, checkpoint cycles) run on the worker pool so they
     #: cannot head-of-line block the fast reads pipelined behind them on
     #: the same connection; everything else is pure in-memory work
     #: handled inline on the event loop — no scheduling hop, and replies
     #: to a burst of buffered requests coalesce into one sendmsg
-    _SLOW_OPS = frozenset(
-        (wire.T_BEGIN, wire.T_COMMIT, wire.T_ALLOC_RANGE, wire.T_CHECKPOINT)
+    _SLOW_OPS = frozenset((
+        wire.T_BEGIN, wire.T_COMMIT, wire.T_ALLOC_RANGE, wire.T_CHECKPOINT,
+        wire.T_PREPARE, wire.T_DECIDE, wire.T_SHARD_STATUS,
+        wire.T_MIG_EXPORT, wire.T_MIG_IMPORT, wire.T_MIG_DROP,
+        wire.T_MIG_ABORT, wire.T_REBALANCE,
+    ))
+
+    #: ops that RELEASE slot commit locks taken by an earlier request
+    #: (2PC decide; migration drop/abort). They run on a dedicated lane
+    #: — see _release_workers — so a prepare-saturated general pool can
+    #: never deadlock the decide that would unblock it.
+    _RELEASE_OPS = frozenset(
+        (wire.T_DECIDE, wire.T_MIG_DROP, wire.T_MIG_ABORT)
     )
+
+    #: admin-gated requests: when the server was started with
+    #: --admin-token, these require a prior successful T_AUTH on the
+    #: same connection. Checkpoint/trace-dump are operator tools; the
+    #: 2PC and migration verbs are coordinator-only — an unauthenticated
+    #: client must not be able to hold slot locks or move slot state.
+    _ADMIN_OPS = frozenset((
+        wire.T_CHECKPOINT, wire.T_TRACE_DUMP, wire.T_REBALANCE,
+        wire.T_PREPARE, wire.T_DECIDE,
+        wire.T_MIG_EXPORT, wire.T_MIG_IMPORT, wire.T_MIG_DROP,
+        wire.T_MIG_ABORT,
+    ))
 
     # ------------------------------------------------------------------ #
     def _dispatch(self, msg_type: int, obj: Any) -> Any:
@@ -854,6 +989,30 @@ class BackendServer:
             return be.latest_ts
         if msg_type == wire.T_PING:
             return None
+        if msg_type == wire.T_PREPARE:
+            ts_map = be.prepare(
+                tuple(obj["txid"]),
+                {int(s): wire.payload_from_obj(p)
+                 for s, p in obj["parts"].items()},
+            )
+            return {"ts": {int(s): t for s, t in ts_map.items()}}
+        if msg_type == wire.T_DECIDE:
+            ts_map = be.decide(tuple(obj["txid"]), bool(obj["c"]))
+            return {"ts": {int(s): t for s, t in ts_map.items()}}
+        if msg_type == wire.T_SHARD_STATUS:
+            dig = bool(obj.get("digests")) if isinstance(obj, dict) else False
+            return be.shard_status(dig)
+        if msg_type == wire.T_MIG_EXPORT:
+            return {"states": be.mig_export([int(s) for s in obj["slots"]])}
+        if msg_type == wire.T_MIG_IMPORT:
+            be.mig_import([(int(s), st) for s, st in obj["states"]])
+            return {"ok": True}
+        if msg_type == wire.T_MIG_DROP:
+            be.mig_drop([int(s) for s in obj["slots"]])
+            return {"ok": True}
+        if msg_type == wire.T_MIG_ABORT:
+            be.mig_abort([int(s) for s in obj["slots"]])
+            return {"ok": True}
         raise wire.WireError(f"unknown request type 0x{msg_type:02x}")
 
 
@@ -867,16 +1026,25 @@ def make_backend(
     policy: str,
     versions_kept: int = 16,
     group_commit_window_s: float = 0.0,
+    slots: Optional[List[int]] = None,
+    n_slots: Optional[int] = None,
+    name_by_parent: bool = False,
+    commit_service_s: float = 0.0,
 ) -> BackendAPI:
     kwargs = dict(
         block_size=block_size,
         policy=CachePolicy(policy),
         versions_kept=versions_kept,
         group_commit_window_s=group_commit_window_s,
+        commit_service_s=commit_service_s,
     )
-    if n_shards <= 0:
+    if n_shards <= 0 and slots is None and n_slots is None:
         return BackendService(**kwargs)
-    return ShardedBackend(n_shards=n_shards, **kwargs)
+    return ShardedBackend(
+        n_shards=n_shards if n_shards > 0 else 1,
+        slots=slots, n_slots=n_slots, name_by_parent=name_by_parent,
+        **kwargs,
+    )
 
 
 def main(argv=None) -> None:
@@ -918,13 +1086,47 @@ def main(argv=None) -> None:
                         "on this HTTP port (0 = ephemeral)")
     p.add_argument("--slow-op-us", type=int, default=50_000,
                    help="ops slower than this land in the slow-op log")
+    p.add_argument("--slots", default=None,
+                   help="comma-separated slot list this server owns "
+                        "(cluster member mode; implies a sharded backend)")
+    p.add_argument("--n-slots", type=int, default=None,
+                   help="total slots in the cluster's partition space "
+                        "(sync-vector width; fixed for the cluster's life)")
+    p.add_argument("--admin-token", default=None,
+                   help="shared secret gating admin + cluster-internal ops"
+                        " (checkpoint, trace dump, 2PC, migration); unset ="
+                        " open access")
+    p.add_argument("--name-by-parent", action="store_true",
+                   help="hash directory-entry keys by parent directory so"
+                        " one dir's entries colocate on one slot")
+    p.add_argument("--coordinator", default=None,
+                   help="host:port of the cluster coordinator, used to "
+                        "resolve in-doubt 2PC txids after a crash restart")
+    p.add_argument("--commit-service", type=float, default=0.0,
+                   help="simulated per-commit service time in seconds "
+                        "(benchmarks only)")
+    p.add_argument("--crash-at", default=None,
+                   help="failpoint name: SIGKILL this process the moment "
+                        "the named crash point is reached (tests only)")
     args = p.parse_args(argv)
 
     obs.LOG.set_level(args.log_level)
+    if args.crash_at:
+        obs.CRASH_POINTS.add(args.crash_at)
+    slots = None
+    if args.slots is not None:
+        slots = [int(s) for s in args.slots.split(",") if s != ""]
+    resolve_addr = None
+    if args.coordinator:
+        chost, _, cport = args.coordinator.rpartition(":")
+        resolve_addr = (chost, int(cport))
     backend = make_backend(
         args.shards, args.block_size, args.policy,
         versions_kept=args.versions_kept,
         group_commit_window_s=args.group_window,
+        slots=slots, n_slots=args.n_slots,
+        name_by_parent=args.name_by_parent,
+        commit_service_s=args.commit_service,
     )
     server = BackendServer(
         backend, host=args.host, port=args.port,
@@ -934,6 +1136,8 @@ def main(argv=None) -> None:
         checkpoint_records=args.checkpoint_records,
         checkpoint_interval_s=args.checkpoint_interval,
         slow_op_us=args.slow_op_us,
+        admin_token=args.admin_token,
+        resolve_addr=resolve_addr,
     )
     metrics_srv = None
     if args.metrics_port is not None:

@@ -58,6 +58,34 @@ completed the record).
                                 record for all participants, so recovery
                                 replays it on all shards or none.
 
+Cluster records (distributed 2PC + live rebalancing, ``core/cluster.py``):
+
+  ``("prep", txid, [(slot, ts, effects), ...])``
+                              — participant prepare marker: the slots
+                                voted yes and reserved ``ts``; fsync'd
+                                BEFORE the vote leaves the process.
+  ``("dec", txid, "c"|"a")``  — participant decision marker: commit
+                                applies the matching prep's effects on
+                                replay, abort discards them. A prep with
+                                no dec is *in-doubt* and resolves against
+                                the coordinator's decision log.
+  ``("xdec", txid)``          — coordinator decision record: the txn is
+                                committed (fsync'd before any participant
+                                is told to commit; absence = presumed
+                                abort).
+  ``("cmap", map_obj)``       — coordinator ShardMap change (version
+                                bump), durable before clients see it.
+  ``("mig-start", slots, from_addr, to_addr)``
+                              — coordinator migration intent; a
+                                mig-start without a following cmap rolls
+                                forward iff the target imported.
+  ``("mig-in", [(slot, state), ...])``
+                              — participant imported these slot states
+                                (it owns them from here on).
+  ``("mig-out", [slot, ...])``
+                              — participant dropped these slots after a
+                                completed migration.
+
 ``effects`` is the durable projection of a ``TxnPayload`` — writes
 (block key + patch list), metadata updates, and namespace updates;
 reads/predicates are validation-time-only and are not logged. Replaying
@@ -303,6 +331,14 @@ def replay(backend, records) -> Dict[str, int]:
         elif kind in ("c", "x"):
             backend.replay_record(rec)
             commits += 1
+        elif kind in ("prep", "dec", "xdec", "cmap", "mig-start",
+                      "mig-in", "mig-out"):
+            # cluster markers (distributed 2PC, migration): the backend
+            # owns their semantics; only decided prepares count as
+            # replayed commits
+            backend.replay_record(rec)
+            if kind == "dec" and rec[2] == "c":
+                commits += 1
         else:
             raise ValueError(f"unknown WAL record kind {kind!r}")
     if hasattr(backend, "bump_fid_floor"):

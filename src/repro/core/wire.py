@@ -74,6 +74,14 @@ FLAG_TRACE = 0x01
 _TRACE = struct.Struct(">QQ")
 TRACE_LEN = _TRACE.size
 
+#: header FLAGS bit: a 4-byte BE shard-map version envelope follows the
+#: header (after the trace envelope when both are set). Cluster
+#: coordinators stamp it on every reply, epoch-style, so a client
+#: learns its routing map went stale without an extra round trip.
+FLAG_MAPV = 0x02
+_MAPV = struct.Struct(">I")
+MAPV_LEN = _MAPV.size
+
 # responses
 T_HELLO = 0x01
 T_OK = 0x02
@@ -101,6 +109,25 @@ T_CHECKPOINT = 0x24
 # admin: dump the server's span ring buffer + slow-op log
 # ({"spans": [...], "slow": [...]}); body {"clear": bool}
 T_TRACE_DUMP = 0x25
+# cluster (v3 shard scale-out) -------------------------------------------
+# authenticate the connection for admin ops; body {"token": str}
+T_AUTH = 0x26
+# fetch the coordinator's current versioned ShardMap; body {}
+T_SHARDMAP = 0x27
+# 2PC participant ops (coordinator -> shard server)
+T_PREPARE = 0x28
+T_DECIDE = 0x29
+# in-doubt resolution (shard server -> coordinator); body {"txid": [e, n]}
+T_RESOLVE = 0x2A
+# live rebalancing (coordinator -> shard server)
+T_MIG_EXPORT = 0x2B
+T_MIG_IMPORT = 0x2C
+T_MIG_DROP = 0x2D
+T_MIG_ABORT = 0x2E
+# admin: trigger a slot migration on the coordinator
+T_REBALANCE = 0x2F
+# shard status probe: owned slots, applied ts, in-doubt txids, digests
+T_SHARD_STATUS = 0x30
 
 #: human-readable op names for metrics/span labels (obs.py consumers
 #: pre-bind label children from this table at import time)
@@ -114,6 +141,11 @@ MSG_NAMES = {
     T_FETCH_BLOCKS: "fetch_blocks", T_FETCH_METAS: "fetch_metas",
     T_LOOKUP_MANY: "lookup_many", T_SYNC_FILES: "sync_files",
     T_CHECKPOINT: "checkpoint", T_TRACE_DUMP: "trace_dump",
+    T_AUTH: "auth", T_SHARDMAP: "shardmap",
+    T_PREPARE: "prepare", T_DECIDE: "decide", T_RESOLVE: "resolve",
+    T_MIG_EXPORT: "mig_export", T_MIG_IMPORT: "mig_import",
+    T_MIG_DROP: "mig_drop", T_MIG_ABORT: "mig_abort",
+    T_REBALANCE: "rebalance", T_SHARD_STATUS: "shard_status",
 }
 
 #: max body we will accept from a peer (a frame claiming more is corrupt)
@@ -137,6 +169,19 @@ class ConnectionClosed(WireError):
 class StaleEpoch(Exception):
     """A fenced request carried an epoch older than the server's current
     one (the server restarted since the client's lease was granted)."""
+
+
+class StaleShardMap(Exception):
+    """The request was routed with an out-of-date ShardMap: the target
+    no longer owns the key range (slot migrated or frozen). The client
+    must refetch the map from the coordinator and retry — the cluster
+    analogue of ``StaleEpoch``."""
+
+
+class PermissionDenied(Exception):
+    """An admin-gated op (checkpoint, trace dump, rebalance, 2PC
+    participant ops) was attempted on a connection that has not
+    authenticated with the server's ``--admin-token``."""
 
 
 class RemoteError(Exception):
@@ -493,6 +538,8 @@ def recv_frame(sock) -> Tuple[int, int, Any]:
         decode_header_ex(_recv_exact(sock, HEADER_LEN))
     if flags & FLAG_TRACE:
         _recv_exact(sock, TRACE_LEN)
+    if flags & FLAG_MAPV:
+        _recv_exact(sock, MAPV_LEN)
     body = _recv_exact(sock, body_len) if body_len else b""
     return msg_type, req_id, unpack(body)
 
@@ -522,7 +569,7 @@ class FrameReader:
     is the signal for coalescing replies before flushing."""
 
     __slots__ = ("sock", "_buf", "_head", "_tail", "frames",
-                 "body_bytes", "_stats", "last_trace")
+                 "body_bytes", "_stats", "last_trace", "last_mapv")
 
     INIT_BUF = 1 << 16
     SHRINK_ABOVE = 4 << 20
@@ -537,6 +584,8 @@ class FrameReader:
         self._stats = [0]
         #: (trace_id, span_id) from the last frame's envelope, or None
         self.last_trace: Optional[Tuple[int, int]] = None
+        #: highest shard-map version any frame has advertised, or None
+        self.last_mapv: Optional[int] = None
 
     @property
     def bytes_copied(self) -> int:
@@ -582,12 +631,18 @@ class FrameReader:
         try:
             msg_type, req_id, body_len, flags = decode_header_ex(mv, head)
             body_at = head + HEADER_LEN
+            env_len = (TRACE_LEN if flags & FLAG_TRACE else 0) \
+                + (MAPV_LEN if flags & FLAG_MAPV else 0)
+            if avail < HEADER_LEN + env_len:
+                return None
             trace = None
             if flags & FLAG_TRACE:
-                if avail < HEADER_LEN + TRACE_LEN:
-                    return None
                 trace = _TRACE.unpack_from(mv, body_at)
                 body_at += TRACE_LEN
+            mapv = None
+            if flags & FLAG_MAPV:
+                mapv = _MAPV.unpack_from(mv, body_at)[0]
+                body_at += MAPV_LEN
             end = body_at + body_len
             if self._tail < end:
                 return None
@@ -599,6 +654,9 @@ class FrameReader:
         finally:
             mv.release()
         self.last_trace = trace
+        if mapv is not None and (self.last_mapv is None
+                                 or mapv > self.last_mapv):
+            self.last_mapv = mapv
         self._head = end
         if self._head == self._tail:
             self._head = self._tail = 0
@@ -623,6 +681,8 @@ class FrameReader:
         need = HEADER_LEN + body_len
         if flags & FLAG_TRACE:
             need += TRACE_LEN
+        if flags & FLAG_MAPV:
+            need += MAPV_LEN
         return avail >= need
 
 
@@ -659,14 +719,20 @@ class SendQueue:
             self.segs.append(cur)
         return cur
 
-    def put_frame(self, msg_type: int, obj: Any, req_id: int = 0) -> None:
+    def put_frame(self, msg_type: int, obj: Any, req_id: int = 0,
+                  mapv: Optional[int] = None) -> None:
         hdr_buf = self._cur()
         hdr_at = len(hdr_buf)
         hdr_buf += _HDR_PAD
         self.size += HEADER_LEN
+        flags = 0
+        if mapv is not None:
+            hdr_buf += _MAPV.pack(mapv)
+            self.size += MAPV_LEN
+            flags = FLAG_MAPV
         size0 = self.size
         self._pack(obj)
-        _HEADER.pack_into(hdr_buf, hdr_at, MAGIC, VERSION, msg_type, 0,
+        _HEADER.pack_into(hdr_buf, hdr_at, MAGIC, VERSION, msg_type, flags,
                           req_id, self.size - size0)
 
     def _pack(self, obj: Any) -> None:
@@ -804,14 +870,22 @@ def begin_reply_from_obj(o: Dict[str, Any]):
 
 
 def commit_reply_to_obj(r) -> Dict[str, Any]:
-    return {"ts": r.ts, "bv": dict(r.block_versions)}
+    o = {"ts": r.ts, "bv": dict(r.block_versions)}
+    slot_ts = getattr(r, "slot_ts", None)
+    if slot_ts:
+        # per-slot commit timestamps, so a cluster coordinator proxying
+        # the commit can advance its applied-vector floor (absent for
+        # plain backends — old clients never see the key)
+        o["st"] = dict(slot_ts)
+    return o
 
 
 def commit_reply_from_obj(o: Dict[str, Any]):
     from repro.core.api import CommitReply
 
     return CommitReply(
-        ts=o["ts"], block_versions={tuple(k): v for k, v in o["bv"].items()}
+        ts=o["ts"], block_versions={tuple(k): v for k, v in o["bv"].items()},
+        slot_ts={int(k): v for k, v in (o.get("st") or {}).items()},
     )
 
 
@@ -934,6 +1008,8 @@ def exception_from_obj(o: Dict[str, Any]) -> BaseException:
         "TxnStateError": TxnStateError,
         "SnapshotTooOld": SnapshotTooOld,
         "StaleEpoch": StaleEpoch,
+        "StaleShardMap": StaleShardMap,
+        "PermissionDenied": PermissionDenied,
         # a poisoned durable log: the commit was NOT acked and the server
         # will fail every further commit until it restarts and recovers
         "WalFailed": WalFailed,

@@ -17,6 +17,7 @@ BACKEND_KINDS = (
     "sharded4",
     "remote-mono",
     "remote-sharded2",
+    "sharded-proc",
 )
 
 
@@ -24,12 +25,33 @@ BACKEND_KINDS = (
 def backend_factory(request, tmp_path):
     kind = request.param
     live = []  # (server, client) pairs to tear down
+    clusters = []  # ClusterHarness instances (sharded-proc kind)
 
     def make(**kwargs):
         if kind == "mono":
             return BackendService(**kwargs)
-        if kind.startswith("sharded"):
+        if kind.startswith("sharded2") or kind.startswith("sharded4"):
             return ShardedBackend(n_shards=int(kind[len("sharded"):]), **kwargs)
+        if kind == "sharded-proc":
+            # the full elastic topology: 2 real shard server processes
+            # (own event loops + segmented WALs) behind a coordinator
+            # process, cross-server commits running durable-marker 2PC
+            from repro.core.cluster import ClusterBackend, ClusterHarness
+
+            policy = kwargs.pop("policy", None)
+            h = ClusterHarness(
+                str(tmp_path / f"cluster-{len(clusters)}"),
+                n_servers=2,
+                n_slots=4,
+                block_size=kwargs.pop("block_size", 4096),
+                policy=policy.value if policy is not None else "invalidate",
+                checkpoint_records=400,
+            ).start()
+            assert not kwargs, f"sharded-proc kind can't plumb {kwargs}"
+            clusters.append(h)
+            client = h.client()
+            live.append((None, client))
+            return client
         # networked kinds: in-process event-loop server (selectors-based
         # loop + worker pool for blockable ops), real socket, real WAL
         from repro.core.remote import RemoteBackend
@@ -56,4 +78,7 @@ def backend_factory(request, tmp_path):
     yield make
     for server, client in live:
         client.close()
-        server.shutdown()
+        if server is not None:
+            server.shutdown()
+    for h in clusters:
+        h.stop()

@@ -1,0 +1,306 @@
+"""Elastic shard-cluster acceptance: versioned ShardMap routing, admin
+auth, parent-dir name colocation, and LIVE rebalancing with transparent
+client retry — all over real coordinator + shard server processes."""
+import threading
+
+import pytest
+
+from repro.core import obs, wire
+from repro.core.client import LocalServer
+from repro.core.cluster import ClusterHarness, slot_of_name
+from repro.core.remote import RemoteBackend
+from repro.core.wire import PermissionDenied, StaleShardMap
+
+
+@pytest.fixture(scope="module")
+def cluster(tmp_path_factory):
+    h = ClusterHarness(
+        str(tmp_path_factory.mktemp("cluster")),
+        n_servers=2, n_slots=4, block_size=64,
+    ).start()
+    yield h
+    h.stop()
+
+
+def test_hello_carries_map_and_replies_advertise_version(cluster):
+    cb = cluster.client()
+    try:
+        m = cb.shard_map
+        assert m["n_slots"] == 4 and len(m["addrs"]) == 2
+        assert sorted(set(m["slots"])) == [0, 1]
+        # every coordinator reply frame carries the FLAG_MAPV envelope;
+        # after any RPC the client's reader has seen the current version
+        cb.ping()
+        assert cb.coord.mapv_seen() == m["v"]
+    finally:
+        cb.close()
+
+
+def test_cluster_commit_routes_across_processes(cluster):
+    cb = cluster.client()
+    try:
+        ls = LocalServer(cb)
+        t = ls.begin()
+        fids = [t.create(f"/route/f{i}") for i in range(8)]
+        for i, fid in enumerate(fids):
+            t.write(fid, 0, bytes([i]) * 100)
+        t.commit()
+        # fids span slots owned by both server processes
+        assert {cb.slot_of_fid(f) % 2 for f in fids} == {0, 1}
+        t2 = ls.begin()
+        for i, fid in enumerate(fids):
+            assert t2.read(fid, 0, 100) == bytes([i]) * 100
+        t2.commit()
+        # the cross-server 2PC path was actually taken
+        assert cb.stats.commits >= 2
+    finally:
+        cb.close()
+
+
+def test_admin_ops_gated_by_token(cluster):
+    noauth = cluster.client(admin=False)
+    try:
+        ls = LocalServer(noauth)
+        t = ls.begin()
+        fid = t.create("/auth/ok")
+        t.write(fid, 0, b"d" * 10)
+        t.commit()  # data ops never need the token
+        with pytest.raises(PermissionDenied):
+            noauth.checkpoint()
+        with pytest.raises(PermissionDenied):
+            noauth.rebalance([0], 0)
+    finally:
+        noauth.close()
+    authed = cluster.client(admin=True)
+    try:
+        assert "seg" in authed.checkpoint()
+    finally:
+        authed.close()
+
+
+def test_shard_server_admin_ops_gated_too(cluster):
+    port = cluster.shard_ports[0]
+    rb = RemoteBackend("127.0.0.1", port)  # no token
+    try:
+        rb.ping()
+        with pytest.raises(PermissionDenied):
+            rb.checkpoint()
+        # cluster-control verbs are admin ops as well: an unauthed
+        # client must not be able to fence or strip a shard
+        with pytest.raises(PermissionDenied):
+            rb._call(wire.T_MIG_DROP, {"slots": [0]})
+        with pytest.raises(PermissionDenied):
+            rb._call(wire.T_DECIDE, {"txid": [1, 1], "c": False})
+    finally:
+        rb.close()
+    rb = RemoteBackend("127.0.0.1", port, admin_token=cluster.admin_token)
+    try:
+        assert "seg" in rb.checkpoint()
+    finally:
+        rb.close()
+
+
+def test_bad_admin_token_rejected_at_auth(cluster):
+    # the dial sends T_AUTH synchronously; a wrong token kills the
+    # connection before any other frame can ride it
+    with pytest.raises(PermissionDenied):
+        RemoteBackend(
+            "127.0.0.1", cluster.shard_ports[0], admin_token="wrong-secret"
+        )
+
+
+def test_name_colocation_by_parent_dir():
+    # flag off: sibling entries hash independently (spread expected)
+    paths = [f"/colo/dir/entry-{i}" for i in range(16)]
+    spread = {slot_of_name(p, 4, by_parent=False) for p in paths}
+    assert len(spread) > 1
+    # flag on: one parent -> one slot, for every sibling
+    colocated = {slot_of_name(p, 4, by_parent=True) for p in paths}
+    assert len(colocated) == 1
+    # different parents still spread
+    assert len({
+        slot_of_name(f"/colo/d{i}/x", 4, by_parent=True) for i in range(16)
+    }) > 1
+    # root-level entries hash the root itself
+    assert slot_of_name("/top", 4, by_parent=True) == \
+        slot_of_name("/", 4, by_parent=True)
+
+
+def test_name_by_parent_flag_rides_the_map(tmp_path):
+    h = ClusterHarness(
+        str(tmp_path / "colo"), n_servers=2, n_slots=4, block_size=64,
+        name_by_parent=True,
+    ).start()
+    try:
+        cb = h.client()
+        assert cb.shard_map["flags"]["name_by_parent"] is True
+        ls = LocalServer(cb)
+        t = ls.begin()
+        for i in range(6):
+            t.create(f"/one-dir/f{i}")
+        t.commit()
+        t2 = ls.begin()
+        names = t2.readdir("/one-dir")
+        t2.commit()
+        assert len(names) == 6
+        # all sibling entries landed on the SAME slot
+        assert len({cb.slot_of_name(f"/one-dir/f{i}")
+                    for i in range(6)}) == 1
+        cb.close()
+    finally:
+        h.stop()
+
+
+def test_live_rebalance_is_transparent_to_a_stale_client(cluster):
+    writer = cluster.client()
+    admin = cluster.client()
+    try:
+        ls = LocalServer(writer)
+        t = ls.begin()
+        fids = [t.create(f"/move/f{i}") for i in range(8)]
+        for i, fid in enumerate(fids):
+            t.write(fid, 0, bytes([i + 1]) * 40)
+        t.commit()
+        moved = sorted({writer.slot_of_fid(f) for f in fids
+                        if cluster_owner(admin, f) == 1})
+        v0 = admin.shard_map["v"]
+        out = admin.rebalance(moved, 0)  # server 1's slots -> server 0
+        assert out["v"] > v0
+        # `writer` still holds the old map; its direct reads hit the old
+        # owner, get StaleShardMap, refetch, and retry — caller sees
+        # nothing but correct data
+        t2 = ls.begin()
+        for i, fid in enumerate(fids):
+            assert t2.read(fid, 0, 40) == bytes([i + 1]) * 40
+        t2.commit()
+        assert writer.map_refreshes >= 1
+        assert writer.shard_map["v"] == out["v"]
+        # writes to the moved range land on the new owner
+        t3 = ls.begin()
+        for fid in fids:
+            t3.write(fid, 0, b"m" * 40)
+        t3.commit()
+        st = shard_status(cluster, 0)
+        assert set(moved) <= set(st["slots"])
+        # move them back so the module-scoped cluster stays symmetric
+        admin.rebalance(moved, 1)
+    finally:
+        writer.close()
+        admin.close()
+
+
+def test_rebalance_under_concurrent_writers(cluster):
+    admin = cluster.client()
+    clients = [cluster.client() for _ in range(2)]
+    errors = []
+    committed = [[] for _ in clients]
+
+    def run(ci):
+        try:
+            ls = LocalServer(clients[ci])
+            t = ls.begin()
+            fid = t.create(f"/churn/w{ci}")
+            t.commit()
+            for n in range(12):
+                t = ls.begin()
+                t.write(fid, 0, n.to_bytes(4, "big") * 10)
+                t.commit()
+                committed[ci].append((fid, n))
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(len(clients))]
+    try:
+        for th in threads:
+            th.start()
+        # bounce slot 3 between owners while the writers run
+        admin.rebalance([3], 0)
+        admin.rebalance([3], 1)
+        for th in threads:
+            th.join(timeout=60)
+        assert not errors, errors
+        # every acked write is the one visible: last committed value wins
+        reader = cluster.client()
+        try:
+            ls = LocalServer(reader)
+            t = ls.begin()
+            for ci in range(len(clients)):
+                fid, last = committed[ci][-1]
+                assert t.read(fid, 0, 40) == last.to_bytes(4, "big") * 10
+            t.commit()
+        finally:
+            reader.close()
+    finally:
+        admin.close()
+        for c in clients:
+            c.close()
+
+
+def test_rebalance_rejects_bad_targets(cluster):
+    admin = cluster.client()
+    try:
+        with pytest.raises(ValueError):
+            admin.rebalance([0], 7)
+        with pytest.raises(ValueError):
+            admin.rebalance([99], 0)
+    finally:
+        admin.close()
+
+
+def test_frozen_slot_answers_stale_shard_map(tmp_path):
+    from repro.core.sharded import ShardedBackend
+
+    be = ShardedBackend(n_shards=2, block_size=64)
+    be.mig_export([1])  # freeze slot 1 (locks held)
+    try:
+        with pytest.raises(StaleShardMap):
+            be.fetch_blocks([((1), 0)])  # fid 1 -> slot 1
+    finally:
+        be.mig_abort([1])
+    be.fetch_blocks([(1, 0)])  # thawed again
+
+
+def test_server_gauges_labeled_by_listen_address(tmp_path):
+    """Regression: two servers in one process must not fight over one
+    gauge child — each listen address gets its own labeled series."""
+    from repro.core.backend import BackendService
+    from repro.core.server import BackendServer
+
+    s1 = BackendServer(BackendService(block_size=64),
+                       wal_path=str(tmp_path / "w1")).start()
+    s2 = BackendServer(BackendService(block_size=64),
+                       wal_path=str(tmp_path / "w2")).start()
+    c1 = c2 = None
+    try:
+        c1 = RemoteBackend("127.0.0.1", s1.port)
+        c2 = RemoteBackend("127.0.0.1", s2.port)
+        c1.ping()
+        c2.ping()
+        snap = obs.REGISTRY.snapshot()
+        conns = snap["faasfs_server_conns"]["values"]
+        k1, k2 = (f"addr=127.0.0.1:{s.port}" for s in (s1, s2))
+        assert k1 in conns and k2 in conns
+        assert conns[k1] >= 1 and conns[k2] >= 1
+    finally:
+        for c in (c1, c2):
+            if c is not None:
+                c.close()
+        s1.shutdown()
+        s2.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------------- #
+def cluster_owner(client, fid) -> int:
+    return client.shard_map["slots"][client.slot_of_fid(fid)]
+
+
+def shard_status(h: ClusterHarness, i: int, digests: bool = False):
+    rb = RemoteBackend("127.0.0.1", h.shard_ports[i],
+                       admin_token=h.admin_token)
+    try:
+        return rb._call(wire.T_SHARD_STATUS, {"digests": digests})
+    finally:
+        rb.close()

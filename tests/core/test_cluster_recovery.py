@@ -1,0 +1,270 @@
+"""Exactly-once across SIGKILL at every 2PC marker boundary and
+mid-rebalance.
+
+The property, for a cross-server commit racing a crash of ANY single
+process (participant shard, coordinator) at ANY marker boundary
+(after prepare-fsync, before the decision, after the decision but
+before the ack):
+
+  * if the client got an ack, the commit is applied on EVERY touched
+    shard after recovery — exactly once (digest-proven);
+  * if the client got an error, the outcome is still ATOMIC: either
+    applied everywhere (decision was already durable) or nowhere —
+    never a torn mix;
+  * replaying the same WALs again (a second clean restart) changes
+    nothing: per-slot content digests are stable.
+
+Mid-rebalance crashes must additionally never lose the moved slots:
+the coordinator rolls the migration forward iff the target durably
+imported, else back, and a slot is always owned by exactly one live
+server once recovery settles."""
+import time
+
+import pytest
+
+from repro.core import wire
+from repro.core.client import LocalServer
+from repro.core.cluster import ClusterHarness
+from repro.core.remote import RemoteBackend
+
+OLD, NEW = b"\x11", b"\x22"
+SIZE = 48
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    h = ClusterHarness(
+        str(tmp_path / "c"), n_servers=2, n_slots=4, block_size=64,
+    ).start()
+    yield h
+    h.stop()
+
+
+# --------------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------------- #
+def shard_status(h, i, digests=False):
+    rb = RemoteBackend("127.0.0.1", h.shard_ports[i],
+                       admin_token=h.admin_token)
+    try:
+        return rb._call(wire.T_SHARD_STATUS, {"digests": digests})
+    finally:
+        rb.close()
+
+
+def settle(h, timeout_s=15.0):
+    """Wait until no shard reports an in-doubt txn or a frozen slot —
+    only then is it safe to take lock-acquiring digests."""
+    deadline = time.monotonic() + timeout_s
+    while True:
+        sts = [shard_status(h, i) for i in range(h.n_servers)]
+        if all(not st["in_doubt"] and not st["frozen"] for st in sts):
+            return sts
+        if time.monotonic() > deadline:
+            raise AssertionError(f"cluster did not settle: {sts}")
+        time.sleep(0.1)
+
+
+def slot_digests(h):
+    out = {}
+    for i in range(h.n_servers):
+        st = shard_status(h, i, digests=True)
+        for s, d in st["digests"].items():
+            assert s not in out, f"slot {s} owned by two servers"
+            out[int(s)] = d
+    return out
+
+
+def baseline(h):
+    """One committed file per slot (fids 1..4 cover slots 1,2,3,0),
+    written via a cross-server commit."""
+    cb = h.client()
+    ls = LocalServer(cb)
+    t = ls.begin()
+    fids = [t.create(f"/p/f{i}") for i in range(4)]
+    for fid in fids:
+        t.write(fid, 0, OLD * SIZE)
+    t.commit()
+    assert {cb.shard_map["slots"][cb.slot_of_fid(f)] for f in fids} == {0, 1}
+    return cb, fids
+
+
+def attempt_cross_commit(cb, fids):
+    """Try to flip every file OLD -> NEW in ONE cross-server commit;
+    report whether the commit was acked."""
+    ls = LocalServer(cb)
+    try:
+        t = ls.begin()
+        for fid in fids:
+            t.write(fid, 0, NEW * SIZE)
+        t.commit()
+        return True
+    except Exception:
+        return False
+
+
+def read_states(h, fids):
+    cb = h.client()
+    try:
+        ls = LocalServer(cb)
+        t = ls.begin()
+        datas = [t.read(fid, 0, SIZE) for fid in fids]
+        t.commit()
+        return datas
+    finally:
+        cb.close()
+
+
+def assert_atomic_outcome(h, fids, acked):
+    datas = read_states(h, fids)
+    tags = {bytes(d[:1]) for d in datas}
+    assert len(tags) == 1, f"TORN cross-shard commit: {tags}"
+    if acked:
+        assert tags == {NEW}, "acked commit lost after crash recovery"
+    else:
+        assert tags <= {OLD, NEW}, f"corrupt state: {tags}"
+    return tags
+
+
+def assert_replay_stable(h):
+    """Digests before and after ANOTHER clean restart of every shard
+    must match: replay applies each acked commit exactly once."""
+    settle(h)
+    before = slot_digests(h)
+    for i in range(h.n_servers):
+        h.restart_shard(i)
+    settle(h)
+    after = slot_digests(h)
+    assert after == before, "WAL replay is not idempotent"
+
+
+# --------------------------------------------------------------------------- #
+# participant crashes, one per marker boundary
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("point,expect_acked,expect_applied", [
+    # killed after fsyncing its prepare marker, before voting yes: the
+    # coordinator aborts; the recovered participant resolves -> abort
+    ("prep-logged", False, False),
+    # killed after fsyncing its dec marker, before applying: the
+    # decision was durable on both sides -> acked, applied by replay
+    ("dec-logged", True, True),
+    # killed after applying, before the decide ack reached the
+    # coordinator: replay re-applies into fresh state, exactly once
+    ("dec-applied", True, True),
+])
+def test_participant_sigkill_at_marker(cluster, point, expect_acked,
+                                       expect_applied):
+    cb, fids = baseline(cluster)
+    cluster.restart_shard(1, crash_at=point)
+    acked = attempt_cross_commit(cb, fids)
+    assert acked is expect_acked, f"{point}: acked={acked}"
+    cluster.wait_shard_dead(1)
+    cluster.restart_shard(1)  # clean: replay + in-doubt resolution
+    settle(cluster)
+    tags = assert_atomic_outcome(cluster, fids, acked)
+    assert (tags == {NEW}) is expect_applied
+    assert_replay_stable(cluster)
+    cb.close()
+
+
+# --------------------------------------------------------------------------- #
+# coordinator crashes around its decision record
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("point,expect_applied", [
+    # killed after every participant voted yes but before logging the
+    # decision: presumed abort — recovery aborts the in-doubt votes
+    ("pre-decide", False),
+    # killed right after fsyncing the xdec record, before any decide
+    # was pushed: the commit IS decided — recovery pushes it through
+    ("dec-logged", True),
+])
+def test_coordinator_sigkill_at_marker(cluster, point, expect_applied):
+    cb, fids = baseline(cluster)
+    cb.close()
+    cluster.restart_coordinator(crash_at=point)
+    cb = cluster.client()
+    acked = attempt_cross_commit(cb, fids)
+    assert not acked, "commit cannot ack across a dead coordinator"
+    cluster.wait_coordinator_dead()
+    cluster.restart_coordinator()  # replay xdec (if any), settle votes
+    settle(cluster)
+    tags = assert_atomic_outcome(cluster, fids, acked)
+    assert (tags == {NEW}) is expect_applied, (point, tags)
+    assert_replay_stable(cluster)
+    cb.close()
+
+
+# --------------------------------------------------------------------------- #
+# crashes mid-rebalance: roll forward iff the target imported
+# --------------------------------------------------------------------------- #
+def test_source_sigkill_after_export_rolls_back(cluster):
+    cb, fids = baseline(cluster)
+    v0 = cb.shard_map["v"]
+    cluster.restart_shard(1, crash_at="mig-exported")
+    admin = cluster.client()
+    with pytest.raises(Exception):
+        admin.rebalance([1], 0)  # the source dies mid-export
+    cluster.wait_shard_dead(1)
+    cluster.restart_shard(1)
+    settle(cluster)
+    # nothing moved: same owner, same data, map version unchanged
+    assert set(shard_status(cluster, 1)["slots"]) == {1, 3}
+    assert_atomic_outcome(cluster, fids, acked=False)
+    fresh = cluster.client()
+    assert fresh.shard_map["v"] == v0
+    assert attempt_cross_commit(fresh, fids)  # the slot still serves
+    fresh.close()
+    admin.close()
+    cb.close()
+
+
+def test_target_sigkill_after_import_rolls_back_live(cluster):
+    cb, fids = baseline(cluster)
+    cluster.restart_shard(0, crash_at="mig-imported")
+    admin = cluster.client()
+    with pytest.raises(Exception):
+        admin.rebalance([1], 0)  # the TARGET dies after its mig-in fsync
+    cluster.wait_shard_dead(0)
+    cluster.restart_shard(0)
+    settle(cluster)
+    # the coordinator durably cancelled the migration before unfreezing
+    # the source, so the map still points at the source even though the
+    # target's WAL replays its import; a coordinator restart sweeps the
+    # stray copy off the target
+    assert_atomic_outcome(cluster, fids, acked=False)
+    cluster.restart_coordinator()
+    settle(cluster)
+    assert set(shard_status(cluster, 0)["slots"]) == {0, 2}
+    assert set(shard_status(cluster, 1)["slots"]) == {1, 3}
+    fresh = cluster.client()
+    assert attempt_cross_commit(fresh, fids)
+    assert_atomic_outcome(cluster, fids, acked=True)
+    fresh.close()
+    admin.close()
+    cb.close()
+
+
+def test_coordinator_sigkill_after_map_log_rolls_forward(cluster):
+    cb, fids = baseline(cluster)
+    v0 = cb.shard_map["v"]
+    cb.close()
+    cluster.restart_coordinator(crash_at="mig-mapped")
+    admin = cluster.client()
+    with pytest.raises(Exception):
+        admin.rebalance([1], 0)  # dies after fsyncing the new map
+    cluster.wait_coordinator_dead()
+    cluster.restart_coordinator()
+    settle(cluster)
+    # the new map was durable -> the migration completes: slot 1 now
+    # lives on server 0, the source's frozen copy was dropped
+    fresh = cluster.client()
+    assert fresh.shard_map["v"] > v0
+    assert fresh.shard_map["slots"][1] == 0
+    assert set(shard_status(cluster, 0)["slots"]) == {0, 1, 2}
+    assert set(shard_status(cluster, 1)["slots"]) == {3}
+    assert_atomic_outcome(cluster, fids, acked=False)
+    assert attempt_cross_commit(fresh, fids)
+    assert_atomic_outcome(cluster, fids, acked=True)
+    assert_replay_stable(cluster)
+    fresh.close()
+    admin.close()

@@ -234,7 +234,11 @@ def test_metrics_port_cli_serves_prometheus(tmp_path):
                 time.sleep(0.5)
         assert "# TYPE faasfs_server_requests_total counter" in body
         assert 'faasfs_server_requests_total{op="ping"}' in body
-        assert "faasfs_server_conns 0" in body  # gauge sampled at scrape
+        # gauge sampled at scrape; labeled by listen address so multiple
+        # shard servers sharing a registry never collide on one child
+        # (value not pinned: the server may not have reaped the closed
+        # connection by scrape time)
+        assert f'faasfs_server_conns{{addr="127.0.0.1:{port}"}} ' in body
 
         proc.send_signal(signal.SIGTERM)
         out, err = proc.communicate(timeout=30)

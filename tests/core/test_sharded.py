@@ -36,8 +36,8 @@ def test_state_spreads_across_shards():
     a = LocalServer(be)
     fids = [new_file(a, f"/f{i}", size=16) for i in range(8)]
     assert {be.shard_of_fid(f) for f in fids} == {0, 1, 2, 3}
-    holding_blocks = [sh for sh in be.shards if list(sh.store._blocks)]
-    holding_names = [sh for sh in be.shards if sh.store._names]
+    holding_blocks = [sh for sh in be.shards.values() if list(sh.store._blocks)]
+    holding_names = [sh for sh in be.shards.values() if sh.store._names]
     assert len(holding_blocks) == 4      # round-robin fids spread block state
     assert len(holding_names) >= 2       # path hash spreads the namespace
 
