@@ -26,6 +26,11 @@ Design points:
     call transparently re-dials (picking up epoch bumps from the new
     hello). Stray replies (unknown or already-answered request ids) are
     counted and dropped, never mis-delivered.
+  * **Push direction.** Frames the server originates carry request id 0
+    (client ids start at 1) and route to a handler registered via
+    ``set_push_handler`` — the lease/invalidation tier
+    (`repro.core.leases`) subscribes here. With no handler registered
+    they are counted (``pushes_dropped``) and discarded.
   * **Hello handshake.** The server's first frame pins the wire version
     and carries ``block_size`` / ``policy`` / ``n_shards`` / ``epoch``,
     so one client class speaks to monolithic (scalar timestamps) and
@@ -62,6 +67,10 @@ _RPC_US = obs.REGISTRY.histogram(
 _STRAYS = obs.REGISTRY.counter(
     "faasfs_client_stray_replies_total",
     help="unknown/duplicate reply ids dropped",
+).labels()
+_PUSHES_DROPPED = obs.REGISTRY.counter(
+    "faasfs_client_pushes_dropped_total",
+    help="server-initiated push frames dropped (no handler registered)",
 ).labels()
 
 #: ops submit() can put on the wire without blocking; everything else
@@ -398,6 +407,9 @@ class RemoteBackend(_RemoteCore):
         self._rx_wake = threading.Event()    # kicks the parked reader
         self._next_id = 1
         self._pending: Dict[int, Tuple[BackendFuture, _Decoder]] = {}
+        self._push_handler: Optional[Callable[[int, Any], None]] = None
+        self.pushes = 0          # server-initiated frames delivered
+        self.pushes_dropped = 0  # server-initiated frames w/o a handler
         self.stray_replies = 0   # unknown/duplicate request ids observed
         self.flushes = 0         # coalesced sends actually performed
         self.lease_completions = 0   # replies read by a waiting caller
@@ -429,8 +441,44 @@ class RemoteBackend(_RemoteCore):
     # ------------------------------------------------------------------ #
     # receive path (always under the reader lease)
     # ------------------------------------------------------------------ #
+    def set_push_handler(
+        self, handler: Optional[Callable[[int, Any], None]]
+    ) -> None:
+        """Register ``handler(msg_type, obj)`` for server-initiated frames
+        (request id 0 — the push direction of the mux connection). The
+        handler runs on whichever thread holds the reader lease, so it
+        must be fast and must never call back into this client's blocking
+        RPC surface. ``None`` unregisters."""
+        self._push_handler = handler
+
+    def _dispatch_push(self, msg_type: int, obj: Any) -> None:
+        handler = self._push_handler
+        if handler is None:
+            # push direction active but nobody subscribed: drop, but
+            # separately from strays — a stray is a protocol anomaly, an
+            # unhandled push is merely an unused feature
+            self.pushes_dropped += 1
+            _PUSHES_DROPPED.inc()
+            return
+        self.pushes += 1
+        try:
+            handler(msg_type, obj)
+        except Exception:
+            # a buggy push consumer must not kill the receive path that
+            # every pending RPC on this connection depends on
+            obs.REGISTRY.counter(
+                "faasfs_client_push_handler_errors_total",
+                help="exceptions raised by the registered push handler",
+            ).labels().inc()
+
     def _dispatch_reply(self, msg_type: int, req_id: int, obj: Any,
                         parked: bool = False) -> None:
+        if req_id == 0:
+            # server-initiated frame: request id 0 is never allocated by
+            # submit_frame (ids start at 1), so this is unambiguously the
+            # push direction, not a reply
+            self._dispatch_push(msg_type, obj)
+            return
         with self._mu:
             entry = self._pending.pop(req_id, None)
         if entry is None:
@@ -658,6 +706,8 @@ class RemoteBackend(_RemoteCore):
             "frames": frames,
             "lease_completions": self.lease_completions,
             "parked_completions": self.parked_completions,
+            "pushes": self.pushes,
+            "pushes_dropped": self.pushes_dropped,
             "pending": pending,
             "connected": connected,
         }

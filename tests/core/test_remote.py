@@ -222,6 +222,81 @@ def test_batch_ops_cross_the_wire(serve):
         assert lk[0] == rb.lookup("/b0")
 
 
+@pytest.fixture
+def push_server():
+    """A hand-rolled wire-speaking server that sends an unsolicited
+    (request-id 0) frame before each reply — the push direction the real
+    server uses for lease invalidations."""
+    import socket as socketmod
+
+    lis = socketmod.socket()
+    lis.bind(("127.0.0.1", 0))
+    lis.listen(1)
+    port = lis.getsockname()[1]
+    hello = {
+        "server": "fake", "version": wire.VERSION, "block_size": 16,
+        "policy": CachePolicy.EAGER.value, "n_shards": 0, "epoch": 1,
+    }
+    conns = []
+
+    def srv():
+        sock, _ = lis.accept()
+        conns.append(sock)
+        wire.send_frame(sock, wire.T_HELLO, hello, 0)
+        try:
+            while True:
+                _, req_id, obj = wire.recv_frame(sock)
+                # push FIRST, then the reply: the blocked caller's read
+                # must route the rid-0 frame without consuming it as the
+                # answer to the pending request
+                wire.send_frame(sock, wire.T_PING, {"push": obj}, 0)
+                wire.send_frame(sock, wire.T_OK, obj, req_id)
+        except (wire.WireError, OSError):
+            pass
+
+    t = threading.Thread(target=srv, daemon=True)
+    t.start()
+    yield port
+    for sock in conns:
+        try:
+            sock.close()
+        except OSError:
+            pass
+    lis.close()
+    t.join(timeout=2)
+
+
+def test_push_frames_route_to_registered_handler(push_server):
+    rb = RemoteBackend("127.0.0.1", push_server)
+    try:
+        # no handler yet: the push is counted as dropped, never as a
+        # stray, and the request still completes
+        assert rb._call(wire.T_PING, {"n": 1}) == {"n": 1}
+        stats = rb.connection_stats()
+        assert stats["pushes_dropped"] == 1
+        assert stats["pushes"] == 0
+        assert stats["stray_replies"] == 0
+
+        got = []
+        rb.set_push_handler(lambda msg_type, obj: got.append((msg_type, obj)))
+        assert rb._call(wire.T_PING, {"n": 2}) == {"n": 2}
+        assert got == [(wire.T_PING, {"push": {"n": 2}})]
+        stats = rb.connection_stats()
+        assert stats["pushes"] == 1
+        assert stats["stray_replies"] == 0
+
+        # a handler that raises must not take down the receive path
+        def boom(msg_type, obj):
+            raise RuntimeError("handler bug")
+
+        rb.set_push_handler(boom)
+        assert rb._call(wire.T_PING, {"n": 3}) == {"n": 3}
+        assert rb._call(wire.T_PING, {"n": 4}) == {"n": 4}
+        assert rb.connection_stats()["pushes"] == 3
+    finally:
+        rb.close()
+
+
 def test_submit_pipelines_independent_requests(serve):
     """submit() returns futures; N fetches put N requests in flight on
     one connection and each future resolves with its own block."""
