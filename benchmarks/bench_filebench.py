@@ -204,6 +204,96 @@ def _varmail_run() -> Dict[str, float]:
     }
 
 
+# --------------------------------------------------------------------------- #
+# webserving (ROADMAP item 3 gate): a read-heavy hot set served over the
+# REAL networked server — every read-only invocation on the sync path
+# pays a begin round trip; the leased path (bounded-staleness views,
+# docs/caching.md) serves the same invocations entirely from the warm
+# container's lease-coherent cache. Both phases run in the SAME process
+# against the SAME server, so the speedup ratio is machine-independent;
+# the staleness_rpcs row is the zero-RPC counter-proof (gated exactly).
+# --------------------------------------------------------------------------- #
+WEB_FILES = 32
+WEB_FILE_KB = 8
+WEB_PASSES = 12
+
+
+def _webserving_run() -> Dict[str, float]:
+    from repro.core import leases
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    srv = BackendServer(BackendService(block_size=BLOCK)).start()
+    rb = None
+    try:
+        rb = RemoteBackend("127.0.0.1", srv.port)
+        local = LocalServer(rb)
+        rt = FunctionRuntime(local)
+        root = "/mnt/tsfs/web"
+
+        def setup(fs):
+            fs.makedirs(root, exist_ok=True)
+            for i in range(WEB_FILES):
+                fd = fs.open(f"{root}/page{i:04d}", O_CREAT | O_RDWR)
+                fs.write(fd, b"w" * (WEB_FILE_KB * 1024))
+                fs.close(fd)
+
+        rt.invoke(setup)
+
+        def read_page(fs, i):
+            fd = fs.open(f"{root}/page{i:04d}")
+            fs.pread(fd, fs.fstat(fd)["st_size"], 0)
+            fs.close(fd)
+
+        def one_pass(runtime):
+            for i in range(WEB_FILES):
+                runtime.invoke(read_page, i, read_only=True)
+
+        # sync path: no tier, every read-only invocation real-begins
+        one_pass(rt)  # warm the LRU so both phases read hot blocks
+        t0 = time.perf_counter()
+        for _ in range(WEB_PASSES):
+            one_pass(rt)
+        sync_s = time.perf_counter() - t0
+
+        # leased path: same LocalServer/socket, views within the bound
+        rt_leased = FunctionRuntime(local, max_staleness_s=300.0)
+        tier = local.lease_tier
+        one_pass(rt_leased)  # real begin, then warm the view caches
+        one_pass(rt_leased)
+        rpc0 = rb.connection_stats()["rpcs"]
+        t0 = time.perf_counter()
+        for _ in range(WEB_PASSES):
+            one_pass(rt_leased)
+        leased_s = time.perf_counter() - t0
+        stale_rpcs = rb.connection_stats()["rpcs"] - rpc0
+        st = tier.stats()
+        hits, misses = st["view_hits"], st["view_misses"]
+        reads = WEB_PASSES * WEB_FILES
+        return {
+            "sync_reads_per_s": reads / sync_s,
+            "leased_reads_per_s": reads / leased_s,
+            "leased_speedup": sync_s / leased_s,
+            "staleness_rpcs": float(stale_rpcs),
+            "view_hit_rate": 100.0 * hits / max(1, hits + misses),
+        }
+    finally:
+        if rb is not None:
+            rb.close()
+        srv.shutdown()
+
+
+def run_webserving() -> List[str]:
+    w = _webserving_run()
+    return [
+        f"filebench_webserving_sync_reads_per_s,{w['sync_reads_per_s']:.0f},reads_per_s",
+        f"filebench_webserving_leased_reads_per_s,{w['leased_reads_per_s']:.0f},reads_per_s",
+        f"filebench_webserving_leased_speedup,{w['leased_speedup']:.2f},x_same_run",
+        f"filebench_webserving_staleness_rpcs,{w['staleness_rpcs']:.0f},count",
+        f"filebench_webserving_view_hit_rate,{w['view_hit_rate']:.1f},pct",
+    ]
+
+
 def run() -> List[str]:
     rows = []
     for p in PERSONALITIES:
@@ -214,6 +304,7 @@ def run() -> List[str]:
         rows.append(f"filebench_{p.name}_nfs,{tn / ITERS * 1e6:.1f},us_per_iter")
         rows.append(f"filebench_{p.name}_delta,{delta * 100:+.1f},pct_vs_nfs")
     rows.extend(run_varmail())
+    rows.extend(run_webserving())
     return rows
 
 
@@ -227,10 +318,12 @@ def run_varmail() -> List[str]:
 
 
 def _smoke() -> None:
-    """Shrink knobs so a CI varmail run finishes in seconds."""
-    global VARMAIL_ITERS, VARMAIL_MAILS
+    """Shrink knobs so a CI varmail+webserving run finishes in seconds."""
+    global VARMAIL_ITERS, VARMAIL_MAILS, WEB_FILES, WEB_PASSES
     VARMAIL_ITERS = 12
     VARMAIL_MAILS = 8
+    WEB_FILES = 12
+    WEB_PASSES = 4
 
 
 def main(argv: List[str]) -> None:
@@ -238,9 +331,11 @@ def main(argv: List[str]) -> None:
         _smoke()
     t0 = time.perf_counter()
     rows = []
-    # --smoke runs only the varmail row (the new-API gate); a bare run
-    # keeps the full six-personality comparison
-    gen = run_varmail() if "--smoke" in argv else run()
+    # --smoke runs only the varmail + webserving rows (the new-API and
+    # lease-tier gates); a bare run keeps the six-personality comparison
+    gen = (
+        run_varmail() + run_webserving() if "--smoke" in argv else run()
+    )
     for r in gen:
         rows.append(r)
         print(r, flush=True)

@@ -65,6 +65,9 @@ HIGHER_BETTER = {
 }
 EXACT = {
     "remote_fetch_batch_rpcs",
+    # the lease tier's counter-proof: view-served read-only invocations
+    # within the staleness bound issue ZERO server round trips
+    "filebench_webserving_staleness_rpcs",
 }
 #: same-run on/off ratios: absolute ceilings, no baseline needed. The
 #: always-on metrics path targets ~5% overhead (measured 2-4% p50); the
@@ -82,6 +85,10 @@ ABS_MAX = {
 ABS_MIN = {
     "sharded_proc_speedup_s2_vs_s1": 1.6,
     "sharded_proc_speedup_s4_vs_s2": 1.1,
+    # leased warm reads vs the per-begin sync path, measured in the SAME
+    # run against the SAME server socket (measured ~20x; the floor is
+    # the ISSUE acceptance bar with ample CI noise headroom)
+    "filebench_webserving_leased_speedup": 5.0,
 }
 
 

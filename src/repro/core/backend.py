@@ -289,6 +289,15 @@ class BackendService(BackendAPI):
         # invoked under commit_lock after a commit fully applies; the
         # sharded coordinator hooks this to advance its sync vector
         self.on_commit_applied: Optional[Callable[[Timestamp], None]] = None
+        # invoked OUTSIDE the commit lock, after the commit is durable
+        # and its reply is in hand — a freshness-only signal carrying
+        # the full payload, hooked by the lease broker (core/leases.py)
+        # to revoke in-process cache-tier views. Never on the
+        # correctness path: a missed notification costs staleness
+        # within the tier's declared bound, not serializability.
+        self.on_commit_effects: Optional[
+            Callable[[Timestamp, TxnPayload], None]
+        ] = None
         self._group = (
             _GroupCommitter(self, group_commit_window_s)
             if group_commit_window_s > 0
@@ -450,9 +459,13 @@ class BackendService(BackendAPI):
             self.stats.commits += 1
             return CommitReply(payload.read_ts)
         if self._group is not None:
-            return self._group.submit(payload)
-        with self.commit_lock:
-            return self._commit_locked(payload)
+            reply = self._group.submit(payload)
+        else:
+            with self.commit_lock:
+                reply = self._commit_locked(payload)
+        if self.on_commit_effects is not None:
+            self.on_commit_effects(reply.ts, payload)
+        return reply
 
     def _commit_locked(
         self, payload: TxnPayload, durable: bool = True

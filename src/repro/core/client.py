@@ -87,9 +87,30 @@ class LocalServer:
         self.misses = 0
         self.evictions = 0
         self.prefetched = 0
+        # bounded-staleness lease tier (core/leases.py); attached via
+        # leases.attach_lease_tier, shared by every function running in
+        # this container
+        self.lease_tier = None
 
     # ------------------------------------------------------------------ #
-    def begin(self, read_only: bool = False) -> "Transaction":
+    def begin(
+        self,
+        read_only: bool = False,
+        max_staleness_s: Optional[float] = None,
+    ) -> "Transaction":
+        tier = self.lease_tier
+        if read_only and tier is not None:
+            # bounded-staleness view: reuse the LAST real begin's read
+            # timestamp with zero round trips while it is within bound
+            # and no commit-time revocation ended it. A snapshot at a
+            # fixed past timestamp is immutable history, so this is
+            # always serializable — the bound caps freshness, not safety.
+            vts = tier.try_view(max_staleness_s)
+            if vts is not None:
+                txn = Transaction(self, vts, read_only=True)
+                txn.lease_view = True
+                return txn
+        token = tier.begin_token() if tier is not None else None
         with self._lock:
             # snapshot under the lock: concurrent cache hits reorder the
             # LRU (move_to_end), which would break a bare iteration
@@ -107,6 +128,8 @@ class LocalServer:
                     self.cache.pop(key, None)
             if self.policy != CachePolicy.STALE:
                 self.last_sync_ts = reply.read_ts
+        if tier is not None:
+            tier.on_real_begin(reply.read_ts, token)
         return Transaction(self, reply.read_ts, read_only=read_only)
 
     def _put(self, key: BlockKey, version: Timestamp, data: bytes) -> None:
@@ -151,7 +174,11 @@ class LocalServer:
         self.misses += 1
         ver, data = self.backend.fetch_block(key, at_ts)
         with self._lock:
-            if at_ts is None:
+            if at_ts is None or at_ts == self.last_sync_ts:
+                # a fetch at exactly last_sync_ts returns the latest
+                # version <= last_sync_ts — precisely the invariant a
+                # cache entry must satisfy, so snapshot reads at the sync
+                # point (lease-tier views) may warm the LRU too
                 self._put(key, ver, data)
         return ver, data
 
@@ -167,8 +194,9 @@ class LocalServer:
         ``cached_read``); ``extra`` are speculative read-ahead candidates
         that ride along in the same ``fetch_blocks`` call, warm the LRU,
         and are NOT returned or counted. Speculation is optimistic-path
-        only (``at_ts is None``) — snapshot reads never populate the
-        cache, so prefetching there would be a wasted fetch."""
+        only (``at_ts is None``) — snapshot reads at arbitrary past
+        timestamps cannot populate the cache, so prefetching there would
+        be a wasted fetch."""
         out: Dict[BlockKey, Tuple[Timestamp, bytes]] = {}
         to_fetch: List[BlockKey] = []
         demanded = set(keys)
@@ -196,8 +224,11 @@ class LocalServer:
         if to_fetch:
             results = self.backend.fetch_blocks(to_fetch, at_ts)
             with self._lock:
+                # see cached_read: at_ts == last_sync_ts fetches satisfy
+                # the cache invariant (latest version <= last_sync_ts)
+                populate = at_ts is None or at_ts == self.last_sync_ts
                 for key, (ver, data) in zip(to_fetch, results):
-                    if at_ts is None:
+                    if populate:
                         self._put(key, ver, data)
                     if key in demanded:
                         out[key] = (ver, data)
@@ -287,6 +318,27 @@ class Transaction:
         self._names: Dict[str, Tuple[Timestamp, Optional[FileId]]] = {}
         self.committed_payload: Optional[TxnPayload] = None
         self.done = False
+        # True iff this txn was served from the lease tier's bounded-
+        # staleness view (no begin RPC happened); such txns must stay
+        # server-free on their read paths wherever the tier can answer
+        self.lease_view = False
+
+    # ------------------------------------------------------------------ #
+    # lease-tier shims (no-ops when no tier is attached)
+    # ------------------------------------------------------------------ #
+    def _tier(self):
+        tier = self.local.lease_tier
+        if tier is not None and self.read_only:
+            return tier
+        return None
+
+    def _note_fids(self, fids) -> None:
+        # register read interest (acquire/renew leases) — only from
+        # paths that already contacted the server: view-served reads
+        # must not emit frames
+        tier = self.local.lease_tier
+        if tier is not None and not self.lease_view:
+            tier.note_access(fids)
 
     # ------------------------------------------------------------------ #
     # namespace
@@ -298,8 +350,16 @@ class Transaction:
         cached = self._names.get(path)
         if cached is not None:
             return cached[1]
+        tier = self._tier()
+        if tier is not None:
+            ent = tier.name_get(path, at)
+            if ent is not None:
+                self._names[path] = ent
+                return ent[1]
         ver, fid = self.backend.lookup(path, at)
         self._names[path] = (ver, fid)
+        if tier is not None:
+            tier.name_put(path, at, ver, fid)
         if not self.read_only:
             self.name_reads.setdefault(path, ver)
         return fid
@@ -315,11 +375,23 @@ class Transaction:
             p for p in paths
             if p not in self.name_updates and p not in self._names
         ]
+        tier = self._tier()
+        if tier is not None and missing:
+            still = []
+            for p in missing:
+                ent = tier.name_get(p, at)
+                if ent is not None:
+                    self._names[p] = ent
+                else:
+                    still.append(p)
+            missing = still
         if missing:
             for p, (ver, fid) in zip(
                 missing, self.backend.lookup_many(missing, at)
             ):
                 self._names[p] = (ver, fid)
+                if tier is not None:
+                    tier.name_put(p, at, ver, fid)
                 if not self.read_only:
                     self.name_reads.setdefault(p, ver)
         return [
@@ -338,12 +410,26 @@ class Transaction:
             fid for fid in fids
             if fid not in self._files and fid not in self._probed
         ]
+        tier = self._tier()
+        if tier is not None and missing:
+            still = []
+            for fid in missing:
+                ent = tier.meta_get(fid, at)
+                if ent is not None:
+                    self._probed[fid] = ent
+                else:
+                    still.append(fid)
+            missing = still
         if not missing:
             return
         for fid, entry in zip(missing, self.backend.fetch_metas(missing, at)):
             # entry is None for a never-bound id; cache the miss so the
             # walk does not re-probe it (probe_meta maps it to None)
-            self._probed[fid] = entry if entry is not None else (0, None)
+            ent = entry if entry is not None else (0, None)
+            self._probed[fid] = ent
+            if tier is not None:
+                tier.meta_put(fid, at, ent[0], ent[1])
+        self._note_fids(missing)
 
     def readdir(self, prefix: str) -> List[str]:
         """Direct children bound under ``prefix`` — a transactional read.
@@ -445,10 +531,18 @@ class Transaction:
                 ver, meta = probed
             else:
                 at = self.read_ts if self.read_only else None
-                try:
-                    ver, meta = self.backend.fetch_meta(fid, at)
-                except NotFound:
-                    ver, meta = 0, None
+                tier = self._tier()
+                ent = tier.meta_get(fid, at) if tier is not None else None
+                if ent is not None:
+                    ver, meta = ent
+                else:
+                    try:
+                        ver, meta = self.backend.fetch_meta(fid, at)
+                    except NotFound:
+                        ver, meta = 0, None
+                    if tier is not None:
+                        tier.meta_put(fid, at, ver, meta)
+                    self._note_fids((fid,))
             if meta is None or not meta.exists:
                 raise NotFound(f"file {fid}")
             if not self.read_only:
@@ -483,10 +577,16 @@ class Transaction:
         probed = self._probed.get(fid)
         if probed is None:
             at = self.read_ts if self.read_only else None
-            try:
-                probed = self.backend.fetch_meta(fid, at)
-            except NotFound:
-                probed = (0, None)
+            tier = self._tier()
+            probed = tier.meta_get(fid, at) if tier is not None else None
+            if probed is None:
+                try:
+                    probed = self.backend.fetch_meta(fid, at)
+                except NotFound:
+                    probed = (0, None)
+                if tier is not None:
+                    tier.meta_put(fid, at, probed[0], probed[1])
+                self._note_fids((fid,))
             self._probed[fid] = probed
         meta = probed[1]
         return meta if meta is not None and meta.exists else None
@@ -703,6 +803,13 @@ class Transaction:
     def commit(self) -> SyncTimestamp:
         self._check_open()
         self.done = True
+        if self.lease_view:
+            # view-served read-only txn: it serialized at its (past)
+            # snapshot timestamp the moment it began, has no effects to
+            # apply and no reads to validate — the commit RPC would be a
+            # server no-op, and view txns must stay zero-round-trip
+            self.committed_payload = self.payload()
+            return self.read_ts
         payload = self.committed_payload = self.payload()
         try:
             reply = self.backend.commit(payload)
@@ -714,6 +821,12 @@ class Transaction:
             for r in payload.reads:
                 self.local.cache.pop(r.key, None)
             raise
+        tier = self.local.lease_tier
+        if tier is not None:
+            # own commit: the shared view predates it — end it now so the
+            # container reads its own writes (read-your-own-writes does
+            # not wait for the server's push to loop back)
+            tier.on_local_commit(payload)
         # Write-through committed blocks we can reconstruct exactly: if the
         # txn READ the block, our cached base is the validated base the
         # backend patched, so patch-apply is exact. Blind writes (base never

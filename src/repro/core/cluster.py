@@ -537,7 +537,11 @@ class CoordinatorBackend(BackendAPI):
             self._ack_decision(txid, idx, by_srv[idx], ts_map)
 
         with self._mu:
-            self._floors.pop(txid, None)  # fully acked -> fully removed
+            if txid not in self._decisions:
+                # fully acked: _ack_decision removed the floor atomically
+                # with the last ack; a partially-acked txn keeps its floor
+                # (all slots) until the pusher lands the stragglers
+                self._floors.pop(txid, None)
             self._gts += 1
             gts = self._gts
             self.stats_local["cross"] += 1
@@ -562,14 +566,16 @@ class CoordinatorBackend(BackendAPI):
                 if ts is not None:
                     if ts > self._reported[s]:
                         self._reported[s] = ts
-                    floor = self._floors.get(txid)
-                    if floor is not None:
-                        floor.pop(s, None)
+            # the floor must keep capping EVERY slot of this txn until the
+            # last participant acks: releasing slots one ack at a time
+            # would let a begin observe the commit applied on one server
+            # but not the other — a torn (non-serializable) read vector
             unacked = self._decisions.get(txid)
             if unacked is not None:
                 unacked.discard(idx)
                 if not unacked:
                     self._decisions.pop(txid, None)
+                    self._floors.pop(txid, None)
             self._mu.notify_all()
 
     # ------------------------------------------------------------------ #
@@ -603,9 +609,8 @@ class CoordinatorBackend(BackendAPI):
                     for s, ts in ts_map.items():
                         if ts > self._reported[s]:
                             self._reported[s] = ts
-                        floor = self._floors.get(txid)
-                        if floor is not None:
-                            floor.pop(s, None)
+                    # as in _ack_decision: the floor releases all-or-
+                    # nothing when the last participant acks
                     unacked = self._decisions.get(txid)
                     if unacked is not None:
                         unacked.discard(idx)

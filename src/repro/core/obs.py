@@ -48,7 +48,7 @@ __all__ = [
     "now_us", "new_trace_id", "new_span_id",
     "current_trace", "set_trace", "span",
     "chrome_trace", "render_prometheus", "serve_metrics",
-    "LATENCY_BUCKETS_US", "SIZE_BUCKETS",
+    "LATENCY_BUCKETS_US", "PUSH_BUCKETS_US", "SIZE_BUCKETS",
 ]
 
 
@@ -68,6 +68,15 @@ LATENCY_BUCKETS_US: Tuple[float, ...] = (
     10, 20, 50, 100, 200, 500,
     1_000, 2_000, 5_000, 10_000, 20_000, 50_000,
     100_000, 200_000, 500_000, 1_000_000, 10_000_000,
+)
+
+#: bucket edges for commit-to-holder push-invalidation latency: finer
+#: below 1ms than the generic latency buckets — a push crosses one
+#: machine-local socket, so the interesting regime is 10us-1ms, and the
+#: long tail only needs enough resolution to flag a wedged event loop
+PUSH_BUCKETS_US: Tuple[float, ...] = (
+    10, 25, 50, 75, 100, 150, 250, 400, 650,
+    1_000, 2_500, 5_000, 10_000, 50_000, 250_000, 1_000_000,
 )
 
 #: default bucket edges for sizes/counts (batch sizes, fan-outs, bytes)

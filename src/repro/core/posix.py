@@ -60,6 +60,7 @@ O_CREAT = os.O_CREAT
 O_TRUNC = os.O_TRUNC
 O_APPEND = os.O_APPEND
 O_EXCL = os.O_EXCL
+O_DIRECTORY = os.O_DIRECTORY
 
 SEEK_SET, SEEK_CUR, SEEK_END = 0, 1, 2
 
@@ -244,6 +245,11 @@ class FaaSFS:
     # ------------------------------------------------------------------ #
     def open(self, path: str, flags: int = 0, mode: int = 0o644) -> int:
         p = self._norm(path)
+        if flags & O_DIRECTORY and flags & O_CREAT:
+            # Linux rejects the combination up front, before path
+            # resolution: it fails EINVAL even for paths that exist (or
+            # whose parents don't)
+            raise _err(_errno.EINVAL, p)
         self._prefetch_path(p)
         acc = flags & O_ACCMODE
         fid = self.txn.lookup(p)
@@ -258,6 +264,10 @@ class FaaSFS:
             if flags & O_CREAT and flags & O_EXCL:
                 raise _err(_errno.EEXIST, p)
             kind = self.txn.file_kind(fid) or KIND_FILE
+            if flags & O_DIRECTORY and kind != KIND_DIR:
+                # Linux: O_DIRECTORY on a non-directory fails ENOTDIR
+                # (checked at resolution, before any O_TRUNC side effect)
+                raise _err(_errno.ENOTDIR, p)
             if kind == KIND_DIR and (
                 acc != O_RDONLY or flags & (O_CREAT | O_TRUNC)
             ):

@@ -99,6 +99,7 @@ class _RemoteCore(BackendAPI):
         self._lease_end = 0
         self.rpcs = 0
         self.reconnects = 0
+        self.disconnects = 0
         self._closed = False
 
     # -- transport hook ------------------------------------------------ #
@@ -627,6 +628,7 @@ class RemoteBackend(_RemoteCore):
                     self._frames_base += self._rdr.frames
                 self._sock = None
                 self._rdr = None
+                self.disconnects += 1
                 pending, self._pending = self._pending, {}
             else:
                 pending = {}
@@ -700,6 +702,7 @@ class RemoteBackend(_RemoteCore):
             # _handshake counts every dial including the first; redials
             # is what a health check actually wants
             "redials": max(0, self.reconnects - 1),
+            "disconnects": self.disconnects,
             "stray_replies": self.stray_replies,
             "flushes": self.flushes,
             "bytes_copied": bytes_copied,

@@ -50,6 +50,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core import obs
+from repro.core.blockstore import SnapshotTooOld
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS
 from repro.core.types import Conflict, TxnStateError
@@ -167,6 +168,7 @@ class FunctionRuntime:
         strict_paths: bool = False,
         seed: Optional[int] = None,
         trace: bool = False,
+        max_staleness_s: Optional[float] = None,
     ):
         self.local = local
         self.mount = mount
@@ -177,6 +179,14 @@ class FunctionRuntime:
         self.trace = trace
         self.stats = RuntimeStats()
         self._rng = random.Random(seed)
+        # bounded-staleness reads: read-only invocations may be served
+        # from the container-shared lease tier (core/leases.py) with NO
+        # server round trips while the cached view is younger than this
+        # bound and no commit-time invalidation ended it
+        self.max_staleness_s = max_staleness_s
+        if max_staleness_s is not None and local.lease_tier is None:
+            from repro.core import leases
+            leases.attach_lease_tier(local, max_staleness_s=max_staleness_s)
 
     # ------------------------------------------------------------------ #
     def function(
@@ -271,7 +281,9 @@ class FunctionRuntime:
         attempt = 0
         while attempt < max_retries:
             with obs.span("invoke.attempt", "runtime", args={"n": attempt}):
-                txn = self.local.begin(read_only=ro)
+                txn = self.local.begin(
+                    read_only=ro, max_staleness_s=self.max_staleness_s,
+                )
                 fs = FaaSFS(txn, mount=self.mount, strict=self.strict_paths)
                 self.stats.attempts += 1
                 if stats:
@@ -296,6 +308,16 @@ class FunctionRuntime:
                     self._note_abort(c, stats, name)
                     attempt += 1
                     continue
+                except SnapshotTooOld:
+                    txn.abort()
+                    if txn.lease_view and self.local.lease_tier is not None:
+                        # the view outlived the retained history (a slot
+                        # migration GC'd versions behind it): close it and
+                        # restart against a fresh real begin
+                        self.local.lease_tier.invalidate_view()
+                        attempt += 1
+                        continue
+                    raise
                 except BaseException:
                     txn.abort()
                     raise

@@ -82,6 +82,7 @@ import threading
 from collections import deque
 from typing import Any, Dict, List, Optional, Set, Tuple
 
+from repro.core import leases as leasemod
 from repro.core import obs
 from repro.core import wal as walmod
 from repro.core import wire
@@ -254,6 +255,8 @@ class BackendServer:
         slow_op_us: int = 50_000,
         admin_token: Optional[str] = None,
         resolve_addr: Optional[Tuple[str, int]] = None,
+        lease_ttl_s: float = leasemod.DEFAULT_TTL_S,
+        push_max_blocks: int = 64,
     ):
         self.backend = backend
         self.metrics = obs.REGISTRY
@@ -322,6 +325,12 @@ class BackendServer:
         # it must still find a thread to run on
         self._release_workers = _WorkerPool(2, name="faasfs-release")
         self._completions: deque = deque()
+        # lease tier: per-file read-lease holders, revoked at commit time
+        # by push frames (req_id 0) queued here by worker threads and
+        # written by the loop — put_frame is loop-thread-only
+        self._leases = leasemod.LeaseTable(ttl_s=lease_ttl_s)
+        self.push_max_blocks = max(0, int(push_max_blocks))
+        self._push_jobs: deque = deque()
         self._inflight = 0               # dispatched blockable requests
         self._wake_r, self._wake_w = os.pipe()
         os.set_blocking(self._wake_r, False)
@@ -346,6 +355,12 @@ class BackendServer:
             "faasfs_server_sendq_bytes",
             lambda: sum(c.out.size for c in list(self._conns)),
             unit="bytes", help="unflushed reply bytes across connections",
+            labels=("addr",), label_values=addr,
+        )
+        self.metrics.gauge_fn(
+            "faasfs_server_lease_holders",
+            self._leases.holder_count,
+            help="connections holding at least one read lease",
             labels=("addr",), label_values=addr,
         )
 
@@ -559,6 +574,8 @@ class BackendServer:
                             self._pump_conn(sel, conn)
                 if self._completions:
                     self._drain_completions(sel)
+                if self._push_jobs:
+                    self._drain_pushes(sel)
                 if self._stop.is_set():
                     if listening:
                         listening = False
@@ -674,6 +691,27 @@ class BackendServer:
                     out.put_frame(wire.T_OK, {"authed": True}, req_id,
                                   mapv=self.reply_mapv())
                 continue
+            if msg_type == wire.T_LEASE:
+                # inline like T_AUTH: the holder IS the connection, which
+                # _dispatch never sees. Leases are interest registrations
+                # with a TTL — cheap dict inserts, never blocking.
+                fids = obj.get("f") if isinstance(obj, dict) else None
+                mode = (obj.get("m") if isinstance(obj, dict) else None) \
+                    or leasemod.MODE_INV
+                granted = self._leases.grant(conn, fids or (), mode)
+                out.put_frame(
+                    wire.T_OK,
+                    {"e": self.epoch, "ttl": self._leases.ttl_s,
+                     "g": granted},
+                    req_id, mapv=self.reply_mapv(),
+                )
+                continue
+            if msg_type == wire.T_LEASE_RELEASE:
+                fids = obj.get("f") if isinstance(obj, dict) else None
+                n = self._leases.release(conn, fids or ())
+                out.put_frame(wire.T_OK, {"r": n}, req_id,
+                              mapv=self.reply_mapv())
+                continue
             if (
                 self.admin_token is not None
                 and not conn.authed
@@ -770,8 +808,84 @@ class BackendServer:
             )
             obs.LOG.warn("slow_op", op=op, dur_us=dur,
                          trace=f"{trace[0]:016x}" if trace else "-")
+        if msg_type == wire.T_COMMIT and reply_type == wire.T_OK:
+            # revoke/push-update lease holders. Queued before the reply
+            # completion so the loop writes the committer's ack and the
+            # holders' invalidations in the same drain pass.
+            self._queue_lease_pushes(obj, reply)
         self._completions.append((conn, reply_type, reply, req_id, trace))
         self._wake()
+
+    def _queue_lease_pushes(self, obj: Any, reply: Any) -> None:
+        """Worker thread, commit already durably applied: build one push
+        frame per live lease holder of any touched file. The committer's
+        own connection is NOT excluded — many clients multiplex one
+        connection, and even for the writer itself the pre-commit view is
+        now stale. Freshness-only: a failure here is counted, never
+        surfaced to the committer."""
+        try:
+            fids, names, write_keys = leasemod.touched_obj(obj)
+            if not fids:
+                return
+            holders = self._leases.holders_for(fids)
+            if not holders:
+                return
+            commit_ts = reply.get("ts") if isinstance(reply, dict) else None
+            blocks = None
+            for hconn, (mode, hfids) in holders.items():
+                body = {
+                    "e": self.epoch, "f": hfids, "n": names,
+                    "t": commit_ts, "us": obs.now_us(),
+                }
+                ptype = wire.T_INVALIDATE
+                if mode == leasemod.MODE_PUSH and write_keys:
+                    if blocks is None:  # lazily, once per commit
+                        blocks = self._fetch_push_blocks(obj, reply,
+                                                         write_keys)
+                    hset = set(hfids)
+                    hblocks = {
+                        k: v for k, v in blocks.items() if k[0] in hset
+                    }
+                    if hblocks:
+                        ptype = wire.T_PUSH_VERSION
+                        body["b"] = hblocks
+                self._push_jobs.append((hconn, ptype, body))
+            self._wake()
+        except Exception:
+            leasemod._PUSH_ERRORS.inc()
+
+    def _fetch_push_blocks(self, obj: Any, reply: Any, write_keys):
+        """The committed bytes for push-mode holders, re-read at latest.
+        A block that raced PAST the committed version is skipped — the
+        invalidation itself still ends the holder's view, so shipping
+        nothing is always safe."""
+        bv = reply.get("bv") if isinstance(reply, dict) else None
+        if not isinstance(bv, dict):
+            return {}
+        keys = write_keys[: self.push_max_blocks]
+        out = {}
+        fetched = self.backend.fetch_blocks(keys, None)
+        for k, ent in zip(keys, fetched):
+            want = bv.get(k)
+            if ent is not None and want is not None and ent[0] == want:
+                out[k] = (ent[0], ent[1])
+        return out
+
+    def _drain_pushes(self, sel) -> None:
+        touched = set()
+        jobs = self._push_jobs
+        while jobs:
+            try:
+                conn, ptype, body = jobs.popleft()
+            except IndexError:
+                break
+            if conn.closed:
+                continue
+            conn.out.put_frame(ptype, body, 0, mapv=self.reply_mapv())
+            touched.add(conn)
+        for conn in touched:
+            if not conn.closed:
+                self._pump_conn(sel, conn)
 
     def _drain_completions(self, sel) -> None:
         touched = set()
@@ -850,6 +964,7 @@ class BackendServer:
                 pass
             conn.mask = 0
         self._conns.discard(conn)
+        self._leases.drop_holder(conn)  # leases die with the connection
         try:
             conn.sock.close()
         except OSError:
@@ -866,6 +981,7 @@ class BackendServer:
             # fid-hash shards (the partition function is wire contract)
             "n_shards": getattr(self.backend, "n_shards", 0),
             "epoch": self.epoch,
+            "lease_ttl": self._leases.ttl_s,
         }
 
     def reply_mapv(self) -> Optional[int]:

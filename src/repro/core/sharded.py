@@ -168,6 +168,10 @@ class ShardedBackend(BackendAPI):
         self._pending_prep: Dict[Tuple, List] = {}  # replay-time in-doubt
         self._frozen: Set[int] = set()              # slots mid-migration
         self._freeze_svcs: Optional[Dict[int, BackendService]] = None
+        # post-reply commit-effects hook (lease broker): fired with the
+        # UNSPLIT payload after the fast path or 2PC acks — freshness
+        # signal only, never on the correctness path (see backend.py)
+        self.on_commit_effects = None
         for s in sorted(slots):
             self.shards[s] = self._new_service(s)
 
@@ -575,9 +579,13 @@ class ShardedBackend(BackendAPI):
             # commit returned, so the gts read here is >= the one this
             # commit was assigned — a valid monotone commit token
             slot_ts = {s: reply.ts} if part.has_effects() else {}
-            return CommitReply(self._current_gts(), reply.block_versions,
-                               slot_ts=slot_ts)
-        return self._commit_2pc(parts)
+            out = CommitReply(self._current_gts(), reply.block_versions,
+                              slot_ts=slot_ts)
+        else:
+            out = self._commit_2pc(parts)
+        if self.on_commit_effects is not None:
+            self.on_commit_effects(out.ts, payload)
+        return out
 
     def _current_gts(self) -> Timestamp:
         with self._vec_lock:

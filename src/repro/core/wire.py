@@ -128,6 +128,20 @@ T_MIG_ABORT = 0x2E
 T_REBALANCE = 0x2F
 # shard status probe: owned slots, applied ts, in-doubt txids, digests
 T_SHARD_STATUS = 0x30
+# lease tier (v3 cache coherence) ----------------------------------------
+# acquire read leases; body {"f": [fid, ...], "m": "inv"|"push"} ->
+# {"e": server_epoch, "ttl": ttl_s, "g": [fid, ...]} (granted subset)
+T_LEASE = 0x31
+# drop leases early; body {"f": [fid, ...]} -> {"r": n_released}
+T_LEASE_RELEASE = 0x32
+# server -> client push (request id 0): a commit touched leased files;
+# body {"e": epoch, "f": [fid, ...], "n": [path, ...], "t": commit_ts,
+# "us": server monotonic micros at send}
+T_INVALIDATE = 0x33
+# server -> client push (request id 0): new block contents for a leased
+# file; body {"e": epoch, "f": fid, "b": {blk_idx: [ver, bytes]},
+# "t": commit_ts, "us": micros}
+T_PUSH_VERSION = 0x34
 
 #: human-readable op names for metrics/span labels (obs.py consumers
 #: pre-bind label children from this table at import time)
@@ -146,6 +160,8 @@ MSG_NAMES = {
     T_MIG_EXPORT: "mig_export", T_MIG_IMPORT: "mig_import",
     T_MIG_DROP: "mig_drop", T_MIG_ABORT: "mig_abort",
     T_REBALANCE: "rebalance", T_SHARD_STATUS: "shard_status",
+    T_LEASE: "lease", T_LEASE_RELEASE: "lease_release",
+    T_INVALIDATE: "invalidate", T_PUSH_VERSION: "push_version",
 }
 
 #: max body we will accept from a peer (a frame claiming more is corrupt)

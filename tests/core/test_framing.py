@@ -187,3 +187,100 @@ def test_drip_interleaved_with_whole_frames(server):
             assert (msg_type, req_id) == (wire.T_OK, rid)
     finally:
         sock.close()
+
+
+def test_lease_grant_and_release_over_raw_socket(server):
+    """T_LEASE / T_LEASE_RELEASE are handled inline by the event loop
+    (the holder IS the connection): grant echoes the epoch + TTL and the
+    granted fid list; release reports how many were dropped."""
+    sock = _connect(server)
+    try:
+        reader = _handshake(sock)
+        sock.sendall(wire.encode_frame(
+            wire.T_LEASE, {"f": [3, 5, 8], "m": "inv"}, req_id=2))
+        msg_type, req_id, obj = reader.recv_frame()
+        assert (msg_type, req_id) == (wire.T_OK, 2)
+        assert obj["e"] == server.epoch
+        assert obj["ttl"] > 0
+        assert sorted(obj["g"]) == [3, 5, 8]
+        sock.sendall(wire.encode_frame(
+            wire.T_LEASE_RELEASE, {"f": [5, 8, 99]}, req_id=3))
+        msg_type, req_id, obj = reader.recv_frame()
+        assert (msg_type, req_id) == (wire.T_OK, 3)
+        assert obj["r"] == 2  # fid 99 was never held
+    finally:
+        sock.close()
+
+
+def test_lease_request_dripped_one_byte_at_a_time(server):
+    """The inline lease path sits inside _parse_conn's incremental frame
+    loop — a byte-dripped T_LEASE must parse exactly once."""
+    sock = _connect(server)
+    try:
+        reader = _handshake(sock)
+        frame = wire.encode_frame(wire.T_LEASE, {"f": [1], "m": "push"},
+                                  req_id=9)
+        for i in range(len(frame)):
+            sock.sendall(frame[i:i + 1])
+        msg_type, req_id, obj = reader.recv_frame()
+        assert (msg_type, req_id) == (wire.T_OK, 9)
+        assert obj["g"] == [1]
+    finally:
+        sock.close()
+
+
+def test_push_invalidation_coalesces_with_pending_replies(server):
+    """A commit reply and the push frames it triggers leave the server
+    in the same drain pass: a second connection holding a lease must see
+    the T_INVALIDATE (rid 0) while its own pipelined requests keep their
+    replies — the push interleaves, it never corrupts framing."""
+    holder = _connect(server)
+    writer = _connect(server)
+    try:
+        hr = _handshake(holder)
+        wr = _handshake(writer)
+        # a real fid to lease and write: allocate via T_ALLOC_RANGE
+        writer.sendall(wire.encode_frame(
+            wire.T_ALLOC_RANGE, (0, 1), req_id=1))
+        _, _, grant = wr.recv_frame()
+        fid = grant[1]
+        # holder leases the fid, byte-dripping the request
+        frame = wire.encode_frame(wire.T_LEASE, {"f": [fid], "m": "inv"},
+                                  req_id=1)
+        for i in range(len(frame)):
+            holder.sendall(frame[i:i + 1])
+        _, rid, g = hr.recv_frame()
+        assert rid == 1 and g["g"] == [fid]
+        # holder pipelines some pings; writer commits a write to the fid
+        burst = bytearray()
+        for rid in range(10, 16):
+            wire.encode_frame_into(burst, wire.T_PING, None, req_id=rid)
+        holder.sendall(burst)
+        commit_obj = {
+            "rt": 0, "r": [], "w": [((fid, 0), [(0, b"x" * 8)])], "p": [],
+            "mu": {}, "nu": {}, "nr": {}, "mr": {}, "ro": False,
+        }
+        writer.sendall(wire.encode_frame(wire.T_COMMIT, commit_obj,
+                                         req_id=2))
+        t, rid, rep = wr.recv_frame()
+        assert (t, rid) == (wire.T_OK, 2), rep
+        # the holder drains: 6 ping replies + exactly one push, rid 0
+        got, push = [], None
+        deadline = time.time() + 5
+        while len(got) < 6 or push is None:
+            assert time.time() < deadline, (got, push)
+            msg_type, req_id, obj = hr.recv_frame()
+            if req_id == 0:
+                assert msg_type == wire.T_INVALIDATE
+                assert push is None, "exactly one push expected"
+                push = obj
+            else:
+                assert msg_type == wire.T_OK
+                got.append(req_id)
+        assert sorted(got) == list(range(10, 16))
+        assert push["f"] == [fid]
+        assert push["e"] == server.epoch
+        assert push["us"] > 0
+    finally:
+        holder.close()
+        writer.close()

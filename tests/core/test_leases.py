@@ -1,0 +1,379 @@
+"""Lease tier acceptance: bounded-staleness views stay serializable
+under concurrent writers, holder connection death, server restart, and
+mid-rebalance ``StaleShardMap`` — and leased read-only invocations
+within the staleness bound issue ZERO server round trips.
+
+The serializability oracle used throughout: a writer commits the SAME
+monotonically increasing value to two files atomically; any reader —
+view-served or not — must observe the two files equal, and values must
+never go backwards within one reader (its snapshots are totally
+ordered)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import leases, wire
+from repro.core.backend import BackendService
+from repro.core.client import LocalServer
+from repro.core.runtime import FunctionRuntime
+from repro.core.sharded import ShardedBackend
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+B = 16  # block size
+
+
+def _spin_until(pred, timeout_s=10.0, msg="condition"):
+    deadline = time.monotonic() + timeout_s
+    while not pred():
+        if time.monotonic() > deadline:
+            raise AssertionError(f"timed out waiting for {msg}")
+        time.sleep(0.005)
+
+
+def _write_pair(local, value: int):
+    t = local.begin()
+    for p in ("/pair/a", "/pair/b"):
+        fid = t.lookup(p)
+        if fid is None:
+            fid = t.create(p)
+        t.write(fid, 0, value.to_bytes(8, "big"))
+    return t.commit()
+
+
+def _read_pair(local, max_staleness_s):
+    t = local.begin(read_only=True, max_staleness_s=max_staleness_s)
+    fa, fb = t.lookup("/pair/a"), t.lookup("/pair/b")
+    if fa is None or fb is None:
+        t.commit()
+        return None, t.lease_view
+    a = int.from_bytes(t.read(fa, 0, 8), "big")
+    b = int.from_bytes(t.read(fb, 0, 8), "big")
+    t.commit()
+    assert a == b, f"torn snapshot: {a} != {b} (view={t.lease_view})"
+    return a, t.lease_view
+
+
+# --------------------------------------------------------------------------- #
+# tier mechanics over every backend kind (in-proc broker AND wire push)
+# --------------------------------------------------------------------------- #
+def test_view_serving_and_commit_revocation(backend_factory):
+    # reader and writer share ONE backend handle (over the networked
+    # kinds that means one multiplexed connection — pushes and commits
+    # interleave on the same socket, the hardest routing case)
+    be = backend_factory(block_size=B)
+    writer = LocalServer(be)
+    reader = LocalServer(be)
+    tier = leases.attach_lease_tier(reader, max_staleness_s=30.0)
+
+    _write_pair(writer, 1)
+    v, view = _read_pair(reader, 30.0)
+    assert v == 1 and not view  # first begin is always real
+    v, view = _read_pair(reader, 30.0)
+    assert v == 1 and view      # second is view-served
+
+    _write_pair(writer, 2)
+    # commit-time revocation ends the view (async over the wire)
+    _spin_until(lambda: tier.revokes >= 1, msg="revocation")
+    v, view = _read_pair(reader, 30.0)
+    assert v == 2 and not view
+    v, view = _read_pair(reader, 30.0)
+    assert v == 2 and view
+
+
+def test_staleness_bound_forces_real_begin(backend_factory):
+    be = backend_factory(block_size=B)
+    local = LocalServer(be)
+    leases.attach_lease_tier(local, max_staleness_s=0.05)
+    _write_pair(local, 7)
+    _read_pair(local, 0.05)
+    v, view = _read_pair(local, 0.05)
+    assert v == 7 and view
+    time.sleep(0.08)  # bound exceeded: next begin must be real
+    v, view = _read_pair(local, 0.05)
+    assert v == 7 and not view
+    # max_staleness_s=0 always forces a real begin
+    v, view = _read_pair(local, 0)
+    assert not view
+
+
+def test_view_snapshots_never_go_backwards(backend_factory):
+    be = backend_factory(block_size=B)
+    local = LocalServer(be)
+    leases.attach_lease_tier(local, max_staleness_s=5.0)
+    seen = 0
+    for i in range(1, 20):
+        _write_pair(local, i)
+        v, _ = _read_pair(local, 5.0)
+        assert v is not None and v >= seen
+        seen = v
+    assert seen == 19
+
+
+# --------------------------------------------------------------------------- #
+# concurrent reader/writer acceptance (ISSUE): remote-mono + sharded-proc
+# run via the fixture (plus every other kind for free)
+# --------------------------------------------------------------------------- #
+def test_concurrent_readers_vs_writer(backend_factory):
+    be = backend_factory(block_size=B)
+    writer = LocalServer(be)
+    stop = threading.Event()
+    errors = []
+
+    def read_loop():
+        local = LocalServer(be)
+        leases.attach_lease_tier(local, max_staleness_s=0.2)
+        last = 0
+        try:
+            while not stop.is_set():
+                v, _ = _read_pair(local, 0.2)
+                if v is not None:
+                    assert v >= last, f"went backwards {last} -> {v}"
+                    last = v
+        except Exception as e:  # surface into the main thread
+            errors.append(e)
+
+    _write_pair(writer, 1)
+    threads = [threading.Thread(target=read_loop) for _ in range(2)]
+    for th in threads:
+        th.start()
+    final = 1
+    deadline = time.monotonic() + 3.0
+    while time.monotonic() < deadline:
+        final += 1
+        _write_pair(writer, final)
+    stop.set()
+    for th in threads:
+        th.join(timeout=10)
+    assert not errors, errors[0]
+
+    # quiesced: a fresh real begin must see the final value
+    check = LocalServer(be)
+    v, _ = _read_pair(check, 0)
+    assert v == final
+
+
+# --------------------------------------------------------------------------- #
+# zero-RPC counter-proof (remote transport)
+# --------------------------------------------------------------------------- #
+def test_leased_view_reads_issue_zero_rpcs():
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    srv = BackendServer(BackendService(block_size=B)).start()
+    try:
+        rb = RemoteBackend("127.0.0.1", srv.port)
+        local = LocalServer(rb)
+        leases.attach_lease_tier(local, max_staleness_s=60.0)
+        rt = FunctionRuntime(local, max_staleness_s=60.0)
+
+        from repro.core import posix
+
+        def write(fs):
+            fd = fs.open("/mnt/tsfs/hot", posix.O_CREAT | posix.O_RDWR)
+            fs.write(fd, b"payload!")
+            fs.close(fd)
+
+        def read(fs):
+            fd = fs.open("/mnt/tsfs/hot", posix.O_RDONLY)
+            data = fs.read(fd, 64)
+            fs.close(fd)
+            return data
+
+        rt.invoke(write)
+        assert rt.invoke(read, read_only=True) == b"payload!"  # warms view
+        rpc0 = rb.connection_stats()["rpcs"]
+        for _ in range(25):
+            assert rt.invoke(read, read_only=True) == b"payload!"
+        assert rb.connection_stats()["rpcs"] == rpc0, (
+            "view-served read-only invocations must not touch the server"
+        )
+        rb.close()
+    finally:
+        srv.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# lease-holder connection death: leases die with the connection; the
+# tier detects the reconnect and refuses to serve the stale view
+# --------------------------------------------------------------------------- #
+def test_holder_connection_death_invalidates_view():
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    srv = BackendServer(BackendService(block_size=B)).start()
+    try:
+        rb_r = RemoteBackend("127.0.0.1", srv.port)
+        rb_w = RemoteBackend("127.0.0.1", srv.port)
+        reader, writer = LocalServer(rb_r), LocalServer(rb_w)
+        tier = leases.attach_lease_tier(reader, max_staleness_s=60.0)
+
+        _write_pair(writer, 1)
+        _read_pair(reader, 60.0)
+        _spin_until(lambda: srv._leases.holder_count() >= 1,
+                    msg="lease registration")
+
+        # sever the holder's socket: the server must drop its leases, so
+        # the next writer commit pushes to nobody — and the tier must
+        # notice the reconnect and do a real begin (a lost invalidation
+        # can cost a restart, never serializability)
+        rb_r._sock.shutdown(2)
+        _spin_until(lambda: srv._leases.holder_count() == 0,
+                    msg="server-side lease drop")
+        _spin_until(lambda: rb_r.disconnects >= 1,
+                    msg="client-side death detection")
+        _write_pair(writer, 2)
+        v, view = _read_pair(reader, 60.0)
+        assert v == 2 and not view, "stale view served after conn death"
+        v, view = _read_pair(reader, 60.0)
+        assert v == 2 and view  # re-leased on the new connection
+        rb_r.close()
+        rb_w.close()
+    finally:
+        srv.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# server restart: in-memory lease table is gone, epoch bumps; correct-
+# ness must not depend on the old leases
+# --------------------------------------------------------------------------- #
+def test_server_restart_epoch_semantics(tmp_path):
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    wal = str(tmp_path / "wal")
+    srv = BackendServer(BackendService(block_size=B), wal_path=wal).start()
+    port = srv.port
+    rb_r = RemoteBackend("127.0.0.1", port)
+    rb_w = RemoteBackend("127.0.0.1", port)
+    reader, writer = LocalServer(rb_r), LocalServer(rb_w)
+    leases.attach_lease_tier(reader, max_staleness_s=60.0)
+    try:
+        _write_pair(writer, 5)
+        v, _ = _read_pair(reader, 60.0)
+        assert v == 5
+        epoch0 = srv.epoch
+
+        # hard-stop (no drain — the moral equivalent of SIGKILL for all
+        # in-memory state: lease table, holder conns) and recover from
+        # the WAL on the same port
+        srv.shutdown()
+        srv = BackendServer(
+            BackendService(block_size=B), wal_path=wal, port=port,
+        ).start()
+        assert srv.epoch > epoch0
+        assert srv._leases.holder_count() == 0  # leases did not survive
+        _spin_until(lambda: rb_r.disconnects >= 1,
+                    msg="reader noticing the restart")
+
+        _write_pair(writer, 6)  # writer reconnects transparently
+        v, view = _read_pair(reader, 60.0)
+        assert v == 6 and not view, "view must not survive a restart"
+        v, view = _read_pair(reader, 60.0)
+        assert v == 6 and view  # re-leased against the new epoch
+    finally:
+        rb_r.close()
+        rb_w.close()
+        srv.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# sharded-proc: live rebalance mid-stream (StaleShardMap re-routes) with
+# view readers running throughout
+# --------------------------------------------------------------------------- #
+def test_views_survive_live_rebalance(tmp_path):
+    from repro.core.cluster import ClusterHarness
+
+    h = ClusterHarness(
+        str(tmp_path / "cluster"), n_servers=2, n_slots=4,
+        block_size=B, policy="invalidate", checkpoint_records=400,
+    ).start()
+    try:
+        wclient = h.client()
+        rclient = h.client()
+        writer = LocalServer(wclient)
+        reader = LocalServer(rclient)
+        tier = leases.attach_lease_tier(reader, max_staleness_s=0.2)
+        assert tier._rb is rclient.coord  # leases ride the coord conn
+
+        _write_pair(writer, 1)
+        v, _ = _read_pair(reader, 0.2)
+        assert v == 1
+        stop = threading.Event()
+        errors = []
+
+        def read_loop():
+            from repro.core.blockstore import SnapshotTooOld
+
+            last = 0
+            try:
+                while not stop.is_set():
+                    try:
+                        v, _ = _read_pair(reader, 0.2)
+                    except SnapshotTooOld:
+                        # the view outlived a migration's retained
+                        # history: close it and real-begin (exactly what
+                        # FunctionRuntime does for view invocations)
+                        tier.invalidate_view()
+                        continue
+                    if v is not None:
+                        assert v >= last
+                        last = v
+            except Exception as e:
+                errors.append(e)
+
+        th = threading.Thread(target=read_loop)
+        th.start()
+        final = 1
+        try:
+            for slots, to in (([0, 1], 1), ([0, 1], 0), ([2], 0)):
+                wclient.rebalance(slots, to)
+                for _ in range(5):
+                    final += 1
+                    _write_pair(writer, final)
+        finally:
+            stop.set()
+            th.join(timeout=15)
+        assert not errors, errors[0]
+        v, _ = _read_pair(LocalServer(h.client()), 0)
+        assert v == final
+    finally:
+        h.stop()
+
+
+# --------------------------------------------------------------------------- #
+# table unit behavior: TTL expiry + modes
+# --------------------------------------------------------------------------- #
+def test_lease_table_expiry_and_modes():
+    tbl = leases.LeaseTable(ttl_s=10.0)
+    tbl.grant("h1", [1, 2], leases.MODE_INV, now=100.0)
+    tbl.grant("h2", [2, 3], leases.MODE_PUSH, now=100.0)
+    hs = tbl.holders_for([2], now=105.0)
+    assert set(hs) == {"h1", "h2"}
+    assert hs["h1"][0] == leases.MODE_INV
+    assert hs["h2"][0] == leases.MODE_PUSH
+    # h1's leases expire; h2 renews fid 2
+    tbl.grant("h2", [2], leases.MODE_PUSH, now=109.0)
+    hs = tbl.holders_for([1, 2, 3], now=111.0)
+    assert set(hs) == {"h2"}
+    assert sorted(hs["h2"][1]) == [2]  # fid 3 expired too
+    assert tbl.expiries >= 2
+    assert tbl.release("h2", [2]) == 1
+    assert tbl.holders_for([2], now=111.0) == {}
+    tbl.grant("h3", [9], now=100.0)
+    assert tbl.holder_count() == 1  # h1/h2 pruned once empty, h3 live
+    assert tbl.drop_holder("h3") == 1
+    assert tbl.holder_count() == 0
+
+
+def test_touched_obj_extraction():
+    obj = {
+        "w": [((4, 0), [(0, b"x")]), ((4, 1), [(0, b"y")])],
+        "mu": {7: None},
+        "nu": {"/a": 9, "/gone": None},
+    }
+    fids, names, keys = leases.touched_obj(obj)
+    assert fids == {4, 7, 9}
+    assert sorted(names) == ["/a", "/gone"]
+    assert keys == [(4, 0), (4, 1)]

@@ -248,3 +248,68 @@ def test_metrics_port_cli_serves_prometheus(tmp_path):
         if proc.poll() is None:
             proc.kill()
             proc.wait(timeout=10)
+
+
+def test_lease_tier_metrics_end_to_end(remote_backend):
+    """The lease tier's registry metrics move with real wire activity:
+    grants on first leased reads, view hits/misses as begins are view-
+    served or real, a mode-labeled revoke + a push-latency observation
+    when a writer commit reaches a push-mode holder — and the server-
+    side holder gauge is scrapeable alongside them."""
+    from repro.core import leases
+
+    rb = remote_backend
+    writer = LocalServer(rb)
+    reader = LocalServer(rb)
+    leases.attach_lease_tier(
+        reader, max_staleness_s=30.0, mode=leases.MODE_PUSH
+    )
+    base = {
+        "grants": leases._GRANTS.value,
+        "revokes_push": leases._REVOKES_PUSH.value,
+        "view_hits": leases._HIT_VIEW.value,
+        "view_misses": leases._MISS_VIEW.value,
+        "pushes": leases._PUSH_US.count,
+    }
+
+    def write(v: int):
+        t = writer.begin()
+        fid = t.lookup("/metered")
+        if fid is None:
+            fid = t.create("/metered")
+        t.write(fid, 0, bytes([v]) * 8)
+        t.commit()
+
+    def read():
+        t = reader.begin(read_only=True, max_staleness_s=30.0)
+        fid = t.lookup("/metered")
+        data = t.read(fid, 0, 8)
+        t.commit()
+        return data[0], t.lease_view
+
+    write(1)
+    results = [read() for _ in range(3)]
+    assert [v for v, _ in results] == [1, 1, 1]
+    assert [vw for _, vw in results] == [False, True, True]
+    # the real begin leased the fid and counted the view miss; the two
+    # view-served begins counted hits
+    assert leases._GRANTS.value > base["grants"]
+    assert leases._MISS_VIEW.value >= base["view_misses"] + 1
+    assert leases._HIT_VIEW.value >= base["view_hits"] + 2
+
+    # a writer commit revokes the push-mode holder: the mode-labeled
+    # revoke counter moves and the push latency histogram observes the
+    # commit->delivery time (both arrive async over the wire)
+    write(2)
+    deadline = time.monotonic() + 10
+    while leases._REVOKES_PUSH.value == base["revokes_push"]:
+        assert time.monotonic() < deadline, "push revoke never arrived"
+        time.sleep(0.005)
+    assert leases._PUSH_US.count > base["pushes"]
+
+    text = obs.render_prometheus(obs.REGISTRY.snapshot())
+    assert "# TYPE faasfs_lease_grants_total counter" in text
+    assert 'faasfs_lease_revokes_total{mode="push"}' in text
+    assert 'faasfs_lease_cache_hits_total{tier="view"}' in text
+    assert "# TYPE faasfs_lease_push_us histogram" in text
+    assert "faasfs_server_lease_holders" in text

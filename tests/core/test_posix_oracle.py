@@ -33,7 +33,9 @@ PATHS = ["f1", "f2", "sub", "sub/f", "sub/deep", "sub/deep/g", "f1/bad"]
 
 ACC = [os.O_RDONLY, os.O_WRONLY, os.O_RDWR]
 EXTRA = [0, os.O_CREAT, os.O_TRUNC, os.O_APPEND, os.O_CREAT | os.O_EXCL,
-         os.O_CREAT | os.O_TRUNC, os.O_CREAT | os.O_APPEND]
+         os.O_CREAT | os.O_TRUNC, os.O_CREAT | os.O_APPEND,
+         os.O_DIRECTORY, os.O_DIRECTORY | os.O_CREAT,
+         os.O_DIRECTORY | os.O_TRUNC]
 
 _case = itertools.count()
 
@@ -291,6 +293,24 @@ FIXED_TRACES = [
      ("pwrite", 0, 1, 60), ("lseek", 0, -5, 2), ("read", 0, 10),
      ("ftruncate", 0, 13), ("pread", 0, 30, 0), ("pwrite", 0, 3, 29),
      ("pread", 0, 40, 0), ("ftruncate", 0, -1), ("lseek", 0, -1, 0)],
+    # O_DIRECTORY: EINVAL with O_CREAT fires before path resolution
+    # (missing path, missing parent, existing file, existing dir — all
+    # EINVAL); bare O_DIRECTORY is ENOTDIR on a file (before any
+    # O_TRUNC side effect), ENOENT when missing, OK read-only on a dir,
+    # EISDIR when write access rides along
+    [("open", 0, os.O_DIRECTORY | os.O_CREAT),
+     ("open", 6, os.O_DIRECTORY | os.O_CREAT),
+     ("open", 0, os.O_CREAT | os.O_RDWR), ("write", 0, 12), ("close", 0),
+     ("open", 0, os.O_DIRECTORY | os.O_CREAT),
+     ("open", 0, os.O_DIRECTORY),
+     ("open", 0, os.O_DIRECTORY | os.O_TRUNC), ("stat", 0),
+     ("open", 1, os.O_DIRECTORY),
+     ("mkdir", 2), ("open", 2, os.O_DIRECTORY | os.O_CREAT),
+     ("open", 2, os.O_DIRECTORY), ("close", 0),
+     ("open", 2, os.O_DIRECTORY | os.O_WRONLY),
+     ("open", 2, os.O_DIRECTORY | os.O_TRUNC),
+     ("open", 2, os.O_DIRECTORY | os.O_EXCL), ("close", 0),
+     ("open", 2, os.O_DIRECTORY | os.O_CREAT | os.O_EXCL)],
 ]
 
 

@@ -526,3 +526,122 @@ def test_conflict_legacy_list_extra_still_accepted():
     assert isinstance(err["x"], list)  # no detail -> legacy wire shape
     back = wire.exception_from_obj(err)
     assert back.keys == [("meta", 9)] and back.detail == []
+
+
+# --------------------------------------------------------------------------- #
+# lease / push-invalidation message types (wire additions for core/leases.py)
+# --------------------------------------------------------------------------- #
+
+def _decode_frame(frame):
+    msg_type, req_id, body_len = wire.decode_header(frame[: wire.HEADER_LEN])
+    assert body_len == len(frame) - wire.HEADER_LEN
+    return msg_type, req_id, wire.unpack(frame[wire.HEADER_LEN:])
+
+
+def test_lease_msg_types_distinct_and_named():
+    new = [wire.T_LEASE, wire.T_LEASE_RELEASE, wire.T_INVALIDATE,
+           wire.T_PUSH_VERSION]
+    assert len(set(new)) == 4
+    # MSG_NAMES membership matters operationally: the server pre-binds
+    # its per-op counters/histograms from it at import time
+    for t in new:
+        assert t in wire.MSG_NAMES
+    assert wire.MSG_NAMES[wire.T_INVALIDATE] == "invalidate"
+    assert wire.MSG_NAMES[wire.T_PUSH_VERSION] == "push_version"
+
+
+def test_push_frames_use_request_id_zero():
+    # server-initiated direction: rid 0 is reserved (client ids start at
+    # 1), so a push frame decodes unambiguously
+    frame = wire.encode_frame(
+        wire.T_INVALIDATE, {"e": 3, "f": [7], "n": ["/a"], "t": 9, "us": 1},
+        0,
+    )
+    msg_type, req_id, obj = _decode_frame(frame)
+    assert (msg_type, req_id) == (wire.T_INVALIDATE, 0)
+    assert obj["f"] == [7] and obj["n"] == ["/a"]
+
+
+def test_push_version_body_roundtrips_tuple_keys_and_bytes():
+    body = {
+        "e": 2, "f": [4, 9], "n": [], "t": 17, "us": 123456,
+        "b": {(4, 0): (17, b"\x00" * 64), (9, 3): (11, b"xyz")},
+    }
+    frame = wire.encode_frame(wire.T_PUSH_VERSION, body, 0)
+    _, rid, obj = _decode_frame(frame)
+    assert rid == 0
+    assert obj == body
+    # block keys must come back as tuples (dict-key ext type), or the
+    # client could not index its cache with them
+    assert all(isinstance(k, tuple) for k in obj["b"])
+
+
+if st is not None:
+    lease_requests = st.fixed_dictionaries({
+        "f": st.lists(st.integers(min_value=1, max_value=2**31),
+                      max_size=32),
+        "m": st.sampled_from(["inv", "push"]),
+    })
+
+    lease_grants = st.fixed_dictionaries({
+        "e": st.integers(min_value=1, max_value=2**31),
+        "ttl": st.floats(min_value=0.01, max_value=3600,
+                         allow_nan=False, allow_infinity=False),
+        "g": st.lists(st.integers(min_value=1, max_value=2**31),
+                      max_size=32),
+    })
+
+    invalidate_bodies = st.fixed_dictionaries({
+        "e": st.integers(min_value=1, max_value=2**31),
+        "f": st.lists(st.integers(min_value=1, max_value=2**31),
+                      max_size=32),
+        "n": st.lists(st.text(max_size=48), max_size=16),
+        "t": st.one_of(st.none(),
+                       st.integers(min_value=0, max_value=2**63 - 1)),
+        "us": st.integers(min_value=0, max_value=2**63 - 1),
+    })
+
+    push_version_bodies = st.fixed_dictionaries({
+        "e": st.integers(min_value=1, max_value=2**31),
+        "f": st.lists(st.integers(min_value=1, max_value=2**31),
+                      max_size=16),
+        "n": st.lists(st.text(max_size=32), max_size=8),
+        "t": st.integers(min_value=0, max_value=2**63 - 1),
+        "us": st.integers(min_value=0, max_value=2**63 - 1),
+        "b": st.dictionaries(
+            block_keys,
+            st.tuples(st.integers(min_value=0, max_value=2**63 - 1),
+                      st.binary(max_size=256)),
+            max_size=8,
+        ),
+    })
+
+    @settings(max_examples=100, deadline=None)
+    @given(lease_requests)
+    def test_property_lease_request_roundtrip(body):
+        _, rid, obj = _decode_frame(
+            wire.encode_frame(wire.T_LEASE, body, 7))
+        assert rid == 7 and obj == body
+
+    @settings(max_examples=100, deadline=None)
+    @given(lease_grants)
+    def test_property_lease_grant_roundtrip(body):
+        _, _, obj = _decode_frame(
+            wire.encode_frame(wire.T_OK, body, 1))
+        assert obj == body
+
+    @settings(max_examples=100, deadline=None)
+    @given(invalidate_bodies)
+    def test_property_invalidate_roundtrip(body):
+        t, rid, obj = _decode_frame(
+            wire.encode_frame(wire.T_INVALIDATE, body, 0))
+        assert (t, rid) == (wire.T_INVALIDATE, 0) and obj == body
+
+    @settings(max_examples=100, deadline=None)
+    @given(push_version_bodies)
+    def test_property_push_version_roundtrip(body):
+        t, rid, obj = _decode_frame(
+            wire.encode_frame(wire.T_PUSH_VERSION, body, 0))
+        assert (t, rid) == (wire.T_PUSH_VERSION, 0)
+        assert obj == body
+        assert all(isinstance(k, tuple) for k in obj["b"])
