@@ -87,6 +87,11 @@ class LocalServer:
         self.misses = 0
         self.evictions = 0
         self.prefetched = 0
+        # begins currently between their cached_keys snapshot and their
+        # reply application, counted under _lock: lease-tier push warming
+        # must pause while one is in flight, because a pushed block absent
+        # from that snapshot is invisible to the begin diff (leases.py)
+        self._begins_inflight = 0
         # bounded-staleness lease tier (core/leases.py); attached via
         # leases.attach_lease_tier, shared by every function running in
         # this container
@@ -116,18 +121,28 @@ class LocalServer:
             # LRU (move_to_end), which would break a bare iteration
             cached_keys = set(self.cache)
             last_sync = self.last_sync_ts
-        reply = self.backend.begin(last_sync, cached_keys, self.policy)
-        with self._lock:
-            for key, (ver, data) in reply.updates.items():
-                self._put(key, ver, data)
-            for key in reply.invalidations:
-                self.cache.pop(key, None)
-            for fid in reply.file_invalidations:
-                self.synced_files.pop(fid, None)
-                for key in [k for k in self.cache if k[0] == fid]:
-                    self.cache.pop(key, None)
-            if self.policy != CachePolicy.STALE:
-                self.last_sync_ts = reply.read_ts
+            self._begins_inflight += 1
+        reply = None
+        try:
+            reply = self.backend.begin(last_sync, cached_keys, self.policy)
+        finally:
+            # decrement and apply under ONE lock acquisition: a lease
+            # push applied between them would see the begin as done while
+            # last_sync_ts still predates the reply (leases.py warms only
+            # when _begins_inflight == 0)
+            with self._lock:
+                self._begins_inflight -= 1
+                if reply is not None:
+                    for key, (ver, data) in reply.updates.items():
+                        self._put(key, ver, data)
+                    for key in reply.invalidations:
+                        self.cache.pop(key, None)
+                    for fid in reply.file_invalidations:
+                        self.synced_files.pop(fid, None)
+                        for key in [k for k in self.cache if k[0] == fid]:
+                            self.cache.pop(key, None)
+                    if self.policy != CachePolicy.STALE:
+                        self.last_sync_ts = reply.read_ts
         if tier is not None:
             tier.on_real_begin(reply.read_ts, token)
         return Transaction(self, reply.read_ts, read_only=read_only)

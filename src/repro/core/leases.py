@@ -120,7 +120,12 @@ class LeaseTable:
     table is queried from worker threads (commit push generation) and
     the event loop (grant/release/conn close), so it carries its own
     mutex. Expired leases are pruned lazily — on the grant and lookup
-    paths — and counted."""
+    paths — and counted; additionally, every lease operation runs a
+    TTL-gated sweep of the WHOLE table, so leases on fids never touched
+    again (a long-lived holder over many distinct files, or a
+    misbehaving client looping T_LEASE over fresh ids) are reclaimed
+    within one TTL of any lease traffic rather than held until the
+    connection closes."""
 
     def __init__(self, ttl_s: float = DEFAULT_TTL_S):
         self.ttl_s = float(ttl_s)
@@ -128,9 +133,27 @@ class LeaseTable:
         self._held: Dict[Any, Dict[int, float]] = {}   # holder -> fid -> dl
         self._modes: Dict[Any, str] = {}
         self._by_fid: Dict[int, Set[Any]] = {}
+        self._next_sweep = 0.0
         self.grants = 0
         self.releases = 0
         self.expiries = 0
+
+    def _maybe_sweep_locked(self, now: float) -> None:
+        if now < self._next_sweep:
+            return
+        self._next_sweep = now + self.ttl_s
+        expired = 0
+        for holder in list(self._held):
+            held = self._held[holder]
+            for fid in [f for f, dl in held.items() if dl < now]:
+                del held[fid]
+                self._discard_locked(fid, holder)
+                expired += 1
+            if not held:
+                self._forget_locked(holder)
+        if expired:
+            self.expiries += expired
+            _EXPIRIES.inc(expired)
 
     def grant(self, holder: Any, fids, mode: str = MODE_INV,
               now: Optional[float] = None) -> List[int]:
@@ -138,6 +161,7 @@ class LeaseTable:
         deadline = now + self.ttl_s
         granted: List[int] = []
         with self._mu:
+            self._maybe_sweep_locked(now)
             held = self._held.setdefault(holder, {})
             self._modes[holder] = (
                 MODE_PUSH if mode == MODE_PUSH else MODE_INV
@@ -197,6 +221,7 @@ class LeaseTable:
         out: Dict[Any, Tuple[str, List[int]]] = {}
         expired = 0
         with self._mu:
+            self._maybe_sweep_locked(now)
             for fid in fids:
                 fid = int(fid)
                 for holder in list(self._by_fid.get(fid, ())):
@@ -217,13 +242,23 @@ class LeaseTable:
             _EXPIRIES.inc(expired)
         return out
 
-    def holder_count(self) -> int:
+    def holder_count(self, now: Optional[float] = None) -> int:
+        """Holders with at least one LIVE (unexpired) lease."""
+        now = time.monotonic() if now is None else now
         with self._mu:
-            return len(self._held)
+            return sum(
+                1 for held in self._held.values()
+                if any(dl >= now for dl in held.values())
+            )
 
-    def lease_count(self) -> int:
+    def lease_count(self, now: Optional[float] = None) -> int:
+        """Live (unexpired) leases across all holders."""
+        now = time.monotonic() if now is None else now
         with self._mu:
-            return sum(len(h) for h in self._held.values())
+            return sum(
+                sum(1 for dl in held.values() if dl >= now)
+                for held in self._held.values()
+            )
 
 
 # --------------------------------------------------------------------------- #
@@ -511,18 +546,55 @@ class LeaseTier:
         if msg_type == wire.T_PUSH_VERSION:
             blocks = obj.get("b") or {}
             if blocks:
-                local = self.local
-                with local._lock:
-                    for k, vd in blocks.items():
-                        # a pushed block may be NEWER than last_sync_ts:
-                        # the snapshot gate (snapshot_cache_ok) keeps it
-                        # from serving until a real begin syncs past it,
-                        # so warming here is always sound
-                        local._put(tuple(k), vd[0], vd[1])
+                self._warm(blocks)
             self._revoked(obj, push=True)
         elif msg_type == wire.T_INVALIDATE:
             self._revoked(obj, push=False)
         # unknown push types: ignore (forward compatibility)
+
+    def _warm(self, blocks: Dict[Any, Any]) -> None:
+        """Warm the shared LRU with pushed block contents — only where
+        provably sound. The server drains commit completions before push
+        jobs, so a push queued at commit time T can arrive AFTER a begin
+        reply whose read_ts >= T: blindly storing it would overwrite a
+        newer entry (or plant a stale one for a key the begin diff never
+        covered, because it was absent from cached_keys), and a later
+        view-served snapshot read would pass snapshot_cache_ok and
+        return pre-snapshot data. Three guards, all under the cache
+        lock:
+
+          * a begin in flight (cached_keys snapshot taken, reply not yet
+            applied) suspends warming entirely — a block stored now is
+            invisible to that begin's diff;
+          * an existing entry is only overwritten by a strictly newer
+            version (the begin diff covers cached keys, so the entry is
+            already the freshest covered version);
+          * an absent key is only planted when the pushed version is
+            NEWER than last_sync_ts (snapshot_cache_ok then keeps it
+            inert until a real begin syncs past it — and that begin's
+            diff covers the now-cached key).
+
+        Skipping is always safe: pushes are freshness, the revocation
+        itself ends the view either way."""
+        local = self.local
+        be = local.backend
+        with local._lock:
+            if getattr(local, "_begins_inflight", 0):
+                return
+            last_sync = local.last_sync_ts
+            for k, vd in blocks.items():
+                key = tuple(k)
+                ver = vd[0]
+                ent = local.cache.get(key)
+                if ent is not None:
+                    if not (ent.version < ver):
+                        continue
+                elif be.snapshot_cache_ok(key, ver, last_sync, last_sync):
+                    # covered by the sync point: a version newer than
+                    # this push may already be what "latest <= last_sync"
+                    # means for this key
+                    continue
+                local._put(key, ver, vd[1])
 
     def _on_broker_commit(self, ts, fids: Set[int], names, us) -> None:
         with self._mu:

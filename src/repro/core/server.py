@@ -655,6 +655,22 @@ class BackendServer:
         if not conn.closed:
             self._update_events(sel, conn)
 
+    @staticmethod
+    def _lease_fids(obj: Any) -> Optional[List[int]]:
+        """The validated ``"f"`` list of a T_LEASE / T_LEASE_RELEASE
+        body, or None if the (well-framed but hostile) body is not a
+        dict holding a list/tuple of ints."""
+        if not isinstance(obj, dict):
+            return None
+        fids = obj.get("f")
+        if fids is None:
+            return []
+        if not isinstance(fids, (list, tuple)):
+            return None
+        if not all(isinstance(f, int) for f in fids):
+            return None
+        return list(fids)
+
     def _parse_conn(self, sel, conn: _Conn) -> None:
         cap = self.max_inflight_per_conn
         reader = conn.reader
@@ -694,11 +710,23 @@ class BackendServer:
             if msg_type == wire.T_LEASE:
                 # inline like T_AUTH: the holder IS the connection, which
                 # _dispatch never sees. Leases are interest registrations
-                # with a TTL — cheap dict inserts, never blocking.
-                fids = obj.get("f") if isinstance(obj, dict) else None
+                # with a TTL — cheap dict inserts, never blocking. The
+                # body is validated here like T_AUTH's: these handlers
+                # run ON the event loop, so a wrong-typed field must
+                # become a T_ERR reply, never an exception that unwinds
+                # the loop for every connection.
+                fids = self._lease_fids(obj)
                 mode = (obj.get("m") if isinstance(obj, dict) else None) \
                     or leasemod.MODE_INV
-                granted = self._leases.grant(conn, fids or (), mode)
+                if fids is None or not isinstance(mode, str):
+                    out.put_frame(
+                        wire.T_ERR,
+                        wire.exception_to_obj(
+                            ValueError("bad lease body")),
+                        req_id, mapv=self.reply_mapv(),
+                    )
+                    continue
+                granted = self._leases.grant(conn, fids, mode)
                 out.put_frame(
                     wire.T_OK,
                     {"e": self.epoch, "ttl": self._leases.ttl_s,
@@ -707,8 +735,16 @@ class BackendServer:
                 )
                 continue
             if msg_type == wire.T_LEASE_RELEASE:
-                fids = obj.get("f") if isinstance(obj, dict) else None
-                n = self._leases.release(conn, fids or ())
+                fids = self._lease_fids(obj)
+                if fids is None:
+                    out.put_frame(
+                        wire.T_ERR,
+                        wire.exception_to_obj(
+                            ValueError("bad lease body")),
+                        req_id, mapv=self.reply_mapv(),
+                    )
+                    continue
+                n = self._leases.release(conn, fids)
                 out.put_frame(wire.T_OK, {"r": n}, req_id,
                               mapv=self.reply_mapv())
                 continue

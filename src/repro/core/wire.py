@@ -138,9 +138,10 @@ T_LEASE_RELEASE = 0x32
 # body {"e": epoch, "f": [fid, ...], "n": [path, ...], "t": commit_ts,
 # "us": server monotonic micros at send}
 T_INVALIDATE = 0x33
-# server -> client push (request id 0): new block contents for a leased
-# file; body {"e": epoch, "f": fid, "b": {blk_idx: [ver, bytes]},
-# "t": commit_ts, "us": micros}
+# server -> client push (request id 0): T_INVALIDATE plus the committed
+# block contents for the holder's leased files; body
+# {"e": epoch, "f": [fid, ...], "n": [path, ...],
+#  "b": {(fid, blk_idx): [ver, bytes]}, "t": commit_ts, "us": micros}
 T_PUSH_VERSION = 0x34
 
 #: human-readable op names for metrics/span labels (obs.py consumers

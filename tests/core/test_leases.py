@@ -362,9 +362,102 @@ def test_lease_table_expiry_and_modes():
     assert tbl.release("h2", [2]) == 1
     assert tbl.holders_for([2], now=111.0) == {}
     tbl.grant("h3", [9], now=100.0)
-    assert tbl.holder_count() == 1  # h1/h2 pruned once empty, h3 live
+    assert tbl.holder_count(now=105.0) == 1  # h1/h2 pruned, h3 live
     assert tbl.drop_holder("h3") == 1
-    assert tbl.holder_count() == 0
+    assert tbl.holder_count(now=105.0) == 0
+
+
+def test_lease_table_sweep_reclaims_untouched_fids():
+    """Leases on fids never re-granted and never touched by a commit
+    must still be reclaimed (within one TTL of any lease traffic), and
+    the gauges must never report expired entries as live."""
+    tbl = leases.LeaseTable(ttl_s=10.0)
+    # a hoarder leasing many distinct fids, never touched again
+    tbl.grant("hoarder", range(1000), now=100.0)
+    assert tbl.lease_count(now=105.0) == 1000
+    # ... all expired by 111: gauges report live-only immediately
+    assert tbl.lease_count(now=111.0) == 0
+    assert tbl.holder_count(now=111.0) == 0
+    # unrelated lease traffic on a DIFFERENT holder/fid sweeps the
+    # whole table — the hoarder's entries are physically reclaimed
+    tbl.grant("other", [5000], now=111.0)
+    assert "hoarder" not in tbl._held
+    assert len(tbl._by_fid) == 1
+    assert tbl.expiries >= 1000
+
+
+def test_hostile_lease_bodies_do_not_kill_the_server():
+    """T_LEASE / T_LEASE_RELEASE are handled inline ON the event loop:
+    a well-framed but wrong-typed body must come back as T_ERR, never as
+    an exception that unwinds the loop for every connection."""
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    srv = BackendServer(BackendService(block_size=B)).start()
+    try:
+        rb = RemoteBackend("127.0.0.1", srv.port)
+        hostile = [
+            {"f": 17},           # not iterable
+            {"f": ["x"]},        # not ints
+            {"f": "abc"},        # str is iterable but not a list
+            [1, 2, 3],           # body not a dict
+            7,
+        ]
+        for body in hostile:
+            with pytest.raises(Exception):
+                rb._call(wire.T_LEASE, body)
+            with pytest.raises(Exception):
+                rb._call(wire.T_LEASE_RELEASE, body)
+        with pytest.raises(Exception):
+            rb._call(wire.T_LEASE, {"f": [1], "m": 7})  # mode not a str
+        # the event loop survived: the same connection still serves
+        # RPCs, and a well-formed lease still succeeds
+        rb.ping()
+        reply = rb._call(wire.T_LEASE, {"f": [1, 2]})
+        assert sorted(reply["g"]) == [1, 2]
+        assert rb._call(wire.T_LEASE_RELEASE, {"f": [1]})["r"] == 1
+        assert rb.disconnects == 0  # every hostile body answered in-band
+        rb.close()
+    finally:
+        srv.shutdown()
+
+
+def test_push_warming_is_version_monotonic():
+    """A T_PUSH_VERSION queued before a begin reply can be DELIVERED
+    after it (the server drains completions first): warming must never
+    regress a cached version, plant a block already covered by the sync
+    point, or run while a begin is between its cached_keys snapshot and
+    its reply — any of those lets a later view-served snapshot read
+    pass snapshot_cache_ok and return pre-snapshot data."""
+    local = LocalServer(BackendService(block_size=B))
+    tier = leases.LeaseTier(local)
+    key = (7, 0)
+    local.last_sync_ts = 30
+    with local._lock:
+        local._put(key, 28, b"newer..........28")
+    # an older queued push must not clobber a newer cached version
+    tier._warm({key: (25, b"stale...........")})
+    assert local.cache[key].version == 28
+    # an absent key covered by the sync point must not be planted (the
+    # begin diff that advanced last_sync never saw it in cached_keys)
+    k2 = (8, 0)
+    tier._warm({k2: (25, b"stale...........")})
+    assert k2 not in local.cache
+    # a push genuinely newer than the sync point warms (and stays inert
+    # for snapshot reads until a real begin syncs past it)
+    tier._warm({k2: (31, b"fresh...........")})
+    assert local.cache[k2].version == 31
+    # ... and may be superseded by an even newer push, but never regress
+    tier._warm({k2: (33, b"fresher.........")})
+    tier._warm({k2: (32, b"reordered.......")})
+    assert local.cache[k2].version == 33
+    # warming is suspended entirely while a begin RPC is in flight
+    local._begins_inflight = 1
+    tier._warm({(9, 0): (99, b"racy............")})
+    assert (9, 0) not in local.cache
+    local._begins_inflight = 0
+    tier._warm({(9, 0): (99, b"racy............")})
+    assert (9, 0) in local.cache
 
 
 def test_touched_obj_extraction():
