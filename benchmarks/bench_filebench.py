@@ -21,7 +21,7 @@ from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.nfs_baseline import NFSClient, NFSServer
 from repro.core.posix import FaaSFS, O_APPEND, O_CREAT, O_RDWR
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.runtime import FunctionRuntime
 from repro.core.types import CachePolicy
 
@@ -62,7 +62,7 @@ def _faasfs_run(p: Personality) -> float:
             fs.pwrite(fd, b"d" * (p.file_kb * 1024), 0)
             fs.close(fd)
 
-    run_function(local, init)
+    runtime_for(local).invoke(init)
     rng = random.Random(0)
     t0 = time.perf_counter()
     for it in range(ITERS):
@@ -88,7 +88,7 @@ def _faasfs_run(p: Personality) -> float:
                 fs.fsync(fd)
                 fs.close(fd)
 
-        run_function(local, iteration)
+        runtime_for(local).invoke(iteration)
     return time.perf_counter() - t0
 
 

@@ -25,7 +25,7 @@ from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.nfs_baseline import NFSClient, NFSServer
 from repro.core.posix import FaaSFS, O_CREAT
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.sharded import ShardedBackend
 from repro.core.types import CachePolicy
 
@@ -73,7 +73,7 @@ def run_faasfs(
             fs.pwrite(fd, b"\0" * WH_BYTES, 0)
             fs.close(fd)
 
-    run_function(setup, init)
+    runtime_for(setup).invoke(init)
     committed = [0] * n_clients
     attempts = [0] * n_clients
     stop = time.perf_counter() + DURATION_S
@@ -96,7 +96,7 @@ def run_faasfs(
             from repro.core.retry import InvocationStats
 
             st = InvocationStats()
-            run_function(local, txn, stats=st, max_retries=1000)
+            runtime_for(local).invoke(txn, stats=st, max_retries=1000)
             committed[ci] += 1
             attempts[ci] += st.attempts
 

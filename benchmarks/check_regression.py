@@ -76,6 +76,16 @@ EXACT = {
 ABS_MAX = {
     "remote_seq_metrics_overhead_ratio": 1.15,
     "remote_seq_overhead_ratio": 1.5,
+    # delta checkpoints: a 1%-dirty save ships <=5% of the full-state
+    # bytes (measured ~3% — one dirty slab plus block rounding), and a
+    # WAL delta cycle after a single-block write stays a sliver of the
+    # full snapshot. Same-run ratios: model size cancels.
+    "delta_ckpt_dirty1pct_ratio": 0.05,
+    "delta_ckpt_wal_delta_ratio": 0.05,
+    # zero-copy restore: the per-block copy counter on a cold networked
+    # restore is EXACTLY zero — every payload byte lands straight off
+    # the wire in the arena buffer the returned arrays alias
+    "fullstack_restore_extra_copy_bytes": 0.0,
 }
 #: same-run scaling ratios: absolute floors. Commit service time is
 #: GIL-released durable-media wait, so shard processes overlap it even

@@ -256,6 +256,34 @@ class BackendAPI(ABC):
     @abstractmethod
     def alloc_file_id(self) -> FileId: ...
 
+    # ---------------------- zero-copy variant ------------------------- #
+    def fetch_blocks_into(
+        self,
+        keys: List[BlockKey],
+        at_ts: Optional[SyncTimestamp],
+        sink,
+    ) -> List[Tuple[Timestamp, Any]]:
+        """``fetch_blocks`` that lands payloads in caller memory.
+
+        ``sink(i, nbytes)`` is asked, per result index, for a writable
+        memoryview of exactly ``nbytes``; when it returns one the
+        payload is placed there and the result entry's data IS that
+        view, otherwise the entry is the usual ``bytes``. The default
+        shim copies once out of ``fetch_blocks`` (in-process backends
+        hand out their interned store bytes, so this is the single
+        materializing copy); ``RemoteBackend`` overrides it to decode
+        straight out of the ``recv_into`` rolling buffer into the sink
+        destination — zero bytes objects on the block hot path."""
+        out: List[Tuple[Timestamp, Any]] = []
+        for i, (ver, data) in enumerate(self.fetch_blocks(keys, at_ts)):
+            dst = sink(i, len(data))
+            if dst is not None:
+                dst[:] = data
+                out.append((ver, dst))
+            else:
+                out.append((ver, data))
+        return out
+
     # ------------------- scalar shims over the batch core ------------- #
     def fetch_block(
         self, key: BlockKey, at_ts: Optional[SyncTimestamp] = None

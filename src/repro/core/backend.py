@@ -627,13 +627,24 @@ class BackendService(BackendAPI):
         with self.commit_lock:
             yield
 
-    def export_snapshot(self) -> Dict:
+    #: delta checkpoints: ``export_snapshot(since=...)`` emits only
+    #: chains dirtied after that floor, and ``import_snapshot`` applies
+    #: snapshots as per-chain overlays — so base+delta imports, in
+    #: order, rebuild exactly the full state.
+    supports_delta_export = True
+
+    def export_snapshot(self, since: Optional[Timestamp] = None) -> Dict:
         """Wire-packable snapshot of the full shard state — current
         block/meta/namespace entries, the commit-log tail (cache
         invalidation scans survive a restart), and the sequencer. Caller
         holds the commit lock (``freeze``); only references are copied
-        here, serialization happens outside the lock."""
-        blocks, metas, names, next_fid = self.store.export_chains()
+        here, serialization happens outside the lock.
+
+        With ``since`` (a prior snapshot's ``ts``), only chains dirtied
+        after that commit timestamp are exported — the snapshot is a
+        DELTA that must be imported on top of the state it was cut
+        against. The returned ``ts`` is the floor for the next delta."""
+        blocks, metas, names, next_fid = self.store.export_chains(since)
         return {
             "kind": "mono",
             "ts": self._ts,

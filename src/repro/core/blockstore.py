@@ -262,29 +262,45 @@ class BlockStore:
     # garbage; snapshots older than the checkpoint correctly raise
     # SnapshotTooOld afterwards via the truncated flag)
     # ------------------------------------------------------------------ #
-    def export_chains(self):
+    def export_chains(self, since_ts: Optional[Timestamp] = None):
         """Wire-packable snapshot of every chain's newest entry. The
         caller must hold the backend commit lock, so 'newest' is a
         consistent committed state; values are immutable (bytes /
         FileMeta-by-value / fid) so only references are copied here —
-        serialization happens outside the lock."""
+        serialization happens outside the lock.
+
+        With ``since_ts``, only chains dirtied AFTER that commit
+        timestamp are exported — the delta-checkpoint version floor.
+        Meta chains filter on ``max(version_ts, mtime_ts)``: ``touch``
+        advances ``mtime_ts`` in place on the newest version WITHOUT
+        minting a new version timestamp, so an mtime-only touch would
+        otherwise be invisible to the floor and silently lost by a
+        base+delta recovery. ``import_chains`` applies entries as a
+        per-chain overlay, so a delta layers exactly onto the base
+        snapshot it was cut against."""
         with self._lock:
             blocks = [
                 (k, v.versions[-1][0], v.versions[-1][1],
                  v.truncated or len(v.versions) > 1)
-                for k, v in self._blocks.items() if v.versions
+                for k, v in self._blocks.items()
+                if v.versions
+                and (since_ts is None or v.versions[-1][0] > since_ts)
             ]
             metas = []
             for fid, v in self._meta.items():
                 if not v.versions:
                     continue
                 ts, m = v.versions[-1]
+                if since_ts is not None and max(ts, m.mtime_ts) <= since_ts:
+                    continue
                 metas.append((fid, ts, m.length, m.exists, m.kind,
                               m.mtime_ts, v.truncated or len(v.versions) > 1))
             names = [
                 (path, v.versions[-1][0], v.versions[-1][1],
                  v.truncated or len(v.versions) > 1)
-                for path, v in self._names.items() if v.versions
+                for path, v in self._names.items()
+                if v.versions
+                and (since_ts is None or v.versions[-1][0] > since_ts)
             ]
             return blocks, metas, names, self._next_file_id
 

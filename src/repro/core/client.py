@@ -249,6 +249,74 @@ class LocalServer:
                         out[key] = (ver, data)
         return out
 
+    def read_blocks_into(
+        self,
+        keys: List[BlockKey],
+        at_ts: Optional[SyncTimestamp],
+        dests: Dict[BlockKey, memoryview],
+        stats: Optional[List[int]] = None,
+    ) -> Dict[BlockKey, Timestamp]:
+        """``read_blocks`` that scatters payloads into caller-owned
+        writable memoryviews (``dests[key]``), for the zero-copy tensor
+        path. Misses go through ``fetch_blocks_into`` so the payload
+        lands in the destination straight off the wire; cache hits are
+        copied out of the LRU (a local memcpy, counted). Sink-filled
+        results are NEVER put in the LRU — the destination aliases
+        arena/tensor memory that will be sealed and later recycled, and
+        a cache must own its bytes. ``stats`` is a 2-element list
+        accumulating ``[bytes_sunk, bytes_copied]``. Returns the
+        observed version per key."""
+        vers: Dict[BlockKey, Timestamp] = {}
+        to_fetch: List[BlockKey] = []
+        with self._lock:
+            for key in keys:
+                ent = self.cache.get(key)
+                ok = ent is not None and (
+                    at_ts is None
+                    or self.backend.snapshot_cache_ok(
+                        key, ent.version, at_ts, self.last_sync_ts
+                    )
+                )
+                if ok:
+                    self.hits += 1
+                    self.cache.move_to_end(key)
+                    dst = dests[key]
+                    n = min(len(dst), len(ent.data))
+                    dst[:n] = ent.data[:n]
+                    if n < len(dst):
+                        dst[n:] = bytes(len(dst) - n)
+                    if stats is not None:
+                        stats[1] += len(dst)
+                    vers[key] = ent.version
+                else:
+                    self.misses += 1
+                    to_fetch.append(key)
+        if to_fetch:
+            def sink(i: int, nbytes: int):
+                dst = dests[to_fetch[i]]
+                return dst if len(dst) == nbytes else None
+
+            results = self.backend.fetch_blocks_into(to_fetch, at_ts, sink)
+            populate = at_ts is None or at_ts == self.last_sync_ts
+            for key, (ver, data) in zip(to_fetch, results):
+                vers[key] = ver
+                dst = dests[key]
+                if data is dst:
+                    if stats is not None:
+                        stats[0] += len(dst)
+                else:
+                    # size-mismatch fallback: payload came back as bytes
+                    n = min(len(dst), len(data))
+                    dst[:n] = data[:n]
+                    if n < len(dst):
+                        dst[n:] = bytes(len(dst) - n)
+                    if stats is not None:
+                        stats[1] += len(dst)
+                    if populate:
+                        with self._lock:
+                            self._put(key, ver, bytes(data))
+        return vers
+
     def lazy_sync_file(self, fid: FileId) -> None:
         if self.policy != CachePolicy.LAZY:
             return
@@ -332,6 +400,11 @@ class Transaction:
         # whole directory walk into it in ONE round trip
         self._names: Dict[str, Tuple[Timestamp, Optional[FileId]]] = {}
         self.committed_payload: Optional[TxnPayload] = None
+        # zero-copy accounting for read_into (extends the transport's
+        # bytes_copied discipline up into the txn layer): payload bytes
+        # landed directly in caller memory vs. fallback-copied there
+        self.bytes_sunk = 0
+        self.bytes_copied_into = 0
         self.done = False
         # True iff this txn was served from the lease tier's bounded-
         # staleness view (no begin RPC happened); such txns must stay
@@ -738,6 +811,84 @@ class Transaction:
             hi = end - bi * self.block_size if bi == b1 else self.block_size
             out += data[lo:hi]
         return bytes(out)
+
+    def read_into(self, fid: FileId, offset: int, size: int, out) -> int:
+        """``read`` that scatters into a caller-owned writable buffer.
+
+        Same predicate/versioning semantics as ``read``; returns the
+        logical byte count (reads clamp at EOF like ``read``). ``out``
+        must be a writable memoryview of at least ``size`` bytes; give
+        it block-aligned capacity (``BlockArena.alloc(n, round_to=
+        block_size)``) and a block-aligned ``offset`` and every block in
+        the span becomes a full-size sink destination — payloads then
+        land in ``out`` straight off the wire with zero per-block
+        copies (counted in ``bytes_sunk``; anything that needed a local
+        copy — cache hits, overlay writes, ragged edges — lands in
+        ``bytes_copied_into``). Bytes in ``out`` beyond the logical
+        count but within block-aligned capacity are scratch the fill
+        may clobber."""
+        self._check_open()
+        tf = self._file(fid)
+        if offset >= tf.length:
+            if not tf.dirty_meta:
+                self.predicates.append(
+                    LengthPredicate(fid, PredicateKind.GE, 0)
+                )
+                self.predicates.append(
+                    LengthPredicate(fid, PredicateKind.LE, offset)
+                )
+            return 0
+        end = min(offset + size, tf.length)
+        truncated = end < offset + size
+        if not tf.dirty_meta:
+            if truncated:
+                self.predicates.append(
+                    LengthPredicate(fid, PredicateKind.EQ, tf.base_length)
+                )
+            else:
+                self.predicates.append(
+                    LengthPredicate(fid, PredicateKind.GE, end)
+                )
+        bs = self.block_size
+        b0, b1 = offset // bs, (end - 1) // bs
+        out = memoryview(out)
+        cap = len(out)
+        at = self.read_ts if self.read_only else None
+        dests: Dict[BlockKey, memoryview] = {}
+        partial: List[int] = []
+        for bi in range(b0, b1 + 1):
+            lo = offset - bi * bs if bi == b0 else 0
+            out_off = bi * bs - offset
+            if lo == 0 and out_off + bs <= cap \
+                    and (fid, bi) not in self.writes:
+                dests[(fid, bi)] = out[out_off:out_off + bs]
+            else:
+                # ragged edge / overlay write: served via the bytes path
+                partial.append(bi)
+        stats = [0, 0]
+        if dests:
+            vers = self.local.read_blocks_into(list(dests), at, dests, stats)
+            if not self.read_only:
+                for key, ver in vers.items():
+                    self.reads.setdefault(key, ver)
+        if partial:
+            keys = [(fid, bi) for bi in partial]
+            blocks = self.local.read_blocks(keys, at)
+            for bi in partial:
+                ver, data = blocks[(fid, bi)]
+                if not self.read_only:
+                    self.reads.setdefault((fid, bi), ver)
+                w = self.writes.get((fid, bi))
+                if w is not None:
+                    data = w.apply_to(data, bs)
+                lo = offset - bi * bs if bi == b0 else 0
+                hi = end - bi * bs if bi == b1 else bs
+                dst_off = bi * bs - offset + lo
+                out[dst_off:dst_off + (hi - lo)] = data[lo:hi]
+                stats[1] += hi - lo
+        self.bytes_sunk += stats[0]
+        self.bytes_copied_into += stats[1]
+        return end - offset
 
     def write(self, fid: FileId, offset: int, data: bytes) -> int:
         self._check_open()

@@ -84,6 +84,12 @@ _PUSH_ERRORS = obs.REGISTRY.counter(
     "faasfs_lease_push_errors_total",
     help="push-frame generation failures (commit already acked)",
 ).labels()
+_PUSH_FANOUT = obs.REGISTRY.counter(
+    "faasfs_lease_push_fanout_total", labels=("type",),
+    help="per-holder frames queued at commit time (fan-out cost), by type",
+)
+_FANOUT_INV = _PUSH_FANOUT.labels("invalidate")
+_FANOUT_PUSH = _PUSH_FANOUT.labels("push_version")
 
 
 # --------------------------------------------------------------------------- #

@@ -333,6 +333,19 @@ class FaaSFS:
             raise _err(_errno.EISDIR, f.path)
         return self.txn.read(f.fid, offset, size)
 
+    def pread_into(self, fd: int, size: int, offset: int, out) -> int:
+        """``pread`` into a caller-owned writable buffer (the zero-copy
+        tensor path; see ``Transaction.read_into`` for the alignment
+        rules that make the fill copy-free). Returns the byte count."""
+        if offset < 0 or size < 0:
+            raise _err(_errno.EINVAL)
+        f = self._fd(fd)
+        if f.mode == O_WRONLY:
+            raise _err(_errno.EBADF, f.path)
+        if f.kind == KIND_DIR:
+            raise _err(_errno.EISDIR, f.path)
+        return self.txn.read_into(f.fid, offset, size, out)
+
     def pwrite(self, fd: int, data: bytes, offset: int) -> int:
         if offset < 0:  # like pread: EINVAL precedes even the fd lookup
             raise _err(_errno.EINVAL)

@@ -291,6 +291,30 @@ class _RemoteCore(BackendAPI):
     def fetch_blocks(self, keys: List[BlockKey], at_ts=None):
         return self._call(*self._enc_fetch_blocks(keys, at_ts))
 
+    def fetch_blocks_into(self, keys: List[BlockKey], at_ts, sink):
+        """Zero-copy ``fetch_blocks``: block payloads decode straight out
+        of the reader's ``recv_into`` rolling buffer into whatever
+        writable memoryview ``sink(i, nbytes)`` returns (arena or tensor
+        memory), skipping the per-payload ``bytes`` materialization.
+
+        The T_FETCH_BLOCKS reply carries exactly one bin per key, in key
+        order, and versions never encode as bins — so the wire-level bin
+        sink maps positionally onto the API-level sink. If the reply is
+        decoded without the sink (reader replaced by a redial, or an
+        error reply) the future fails typed or the entries come back as
+        plain bytes; callers must accept both."""
+        mt, body, decode = self._enc_fetch_blocks(keys, at_ts)
+        counter = [0]
+
+        def wire_sink(nbytes):
+            i = counter[0]
+            counter[0] += 1
+            if i >= len(keys):
+                return None
+            return sink(i, nbytes)
+
+        return self.submit_frame(mt, body, decode, sink=wire_sink).result()
+
     def fetch_meta(self, fid: FileId, at_ts=None):
         return self._call(*self._enc_fetch_meta(fid, at_ts))
 
@@ -416,6 +440,7 @@ class RemoteBackend(_RemoteCore):
         self.lease_completions = 0   # replies read by a waiting caller
         self.parked_completions = 0  # replies read by the parked reader
         self._rdr_base = 0       # bytes_copied carried over dead readers
+        self._sunk_base = 0      # bytes_sunk carried over dead readers
         self._frames_base = 0    # frame count carried over dead readers
         # eager dial: surfaces connection/handshake errors at construction
         with self._mu:
@@ -625,6 +650,7 @@ class RemoteBackend(_RemoteCore):
             if current:
                 if self._rdr is not None:
                     self._rdr_base += self._rdr.bytes_copied
+                    self._sunk_base += self._rdr.bytes_sunk
                     self._frames_base += self._rdr.frames
                 self._sock = None
                 self._rdr = None
@@ -655,6 +681,7 @@ class RemoteBackend(_RemoteCore):
             sock, self._sock = self._sock, None
             if self._rdr is not None:
                 self._rdr_base += self._rdr.bytes_copied
+                self._sunk_base += self._rdr.bytes_sunk
                 self._frames_base += self._rdr.frames
             self._rdr = None
             pending, self._pending = self._pending, {}
@@ -696,6 +723,7 @@ class RemoteBackend(_RemoteCore):
             pending = len(self._pending)
             connected = self._sock is not None
             bytes_copied = self._rdr_base + (rdr.bytes_copied if rdr else 0)
+            bytes_sunk = self._sunk_base + (rdr.bytes_sunk if rdr else 0)
             frames = self._frames_base + (rdr.frames if rdr else 0)
         return {
             "rpcs": self.rpcs,
@@ -706,6 +734,7 @@ class RemoteBackend(_RemoteCore):
             "stray_replies": self.stray_replies,
             "flushes": self.flushes,
             "bytes_copied": bytes_copied,
+            "bytes_sunk": bytes_sunk,
             "frames": frames,
             "lease_completions": self.lease_completions,
             "parked_completions": self.parked_completions,
@@ -723,7 +752,8 @@ class RemoteBackend(_RemoteCore):
     MAX_SEND_BUF = 256 * 1024
 
     def submit_frame(
-        self, msg_type: int, obj: Any, decode: _Decoder = None
+        self, msg_type: int, obj: Any, decode: _Decoder = None,
+        sink=None,
     ) -> BackendFuture:
         """Register a future under a fresh request id and buffer the frame
         for the wire; the reader thread resolves it. The frame goes out on
@@ -748,6 +778,11 @@ class RemoteBackend(_RemoteCore):
             rid = self._next_id
             self._next_id += 1
             self._pending[rid] = (fut, decode)
+            if sink is not None and self._rdr is not None:
+                # armed on THIS reader only: a redial replaces the reader
+                # (and fails this future), so a sink can never fire against
+                # a reply from a different connection generation
+                self._rdr.set_sink(rid, sink)
         self.rpcs += 1
         # trace context rides the frame (16-byte envelope, FLAG_TRACE);
         # untraced requests stay byte-identical to the v2 wire format

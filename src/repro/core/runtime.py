@@ -368,3 +368,20 @@ class FunctionRuntime:
             ),
             trace_id=ctx[0] if ctx else 0,
         )
+
+
+def runtime_for(target, **kwargs) -> FunctionRuntime:
+    """Coerce a ``LocalServer`` or ``FunctionRuntime`` to a runtime.
+
+    The ML-state layers (``CheckpointManager``, ``PagedKVCache``,
+    ``SnapshotServer``) accept either so legacy call sites that hold a
+    bare ``LocalServer`` keep working after the ``run_function``
+    deprecation; a runtime built here is cached on the server, so every
+    layer sharing one worker shares one runtime (and its stats)."""
+    if isinstance(target, FunctionRuntime):
+        return target
+    rt = getattr(target, "_default_runtime", None)
+    if rt is None:
+        rt = FunctionRuntime(target, **kwargs)
+        target._default_runtime = rt
+    return rt

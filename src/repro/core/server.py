@@ -279,6 +279,12 @@ class BackendServer:
         self.checkpoint_failures = 0    # failed background cycles
         self._ckpt_mu = threading.Lock()  # one checkpoint at a time
         self._ckpt_appends = 0          # wal.appends at the last checkpoint
+        # delta checkpoints: previous cycle's summary (covered seg +
+        # version floor). None => next cycle writes a self-contained
+        # full — in particular the FIRST cycle after any restart, so a
+        # floor never crosses process lifetimes.
+        self._ckpt_base: Optional[Dict] = None
+        self.ckpt_chain_max = 8         # force a full every N deltas
         self._ckpt_thread: Optional[threading.Thread] = None
         epoch, next_fid = 1, 1
         if wal_path is not None:
@@ -427,11 +433,16 @@ class BackendServer:
     # ------------------------------------------------------------------ #
     # checkpoint + compaction (the admin op and the background trigger)
     # ------------------------------------------------------------------ #
-    def run_checkpoint(self) -> Dict[str, int]:
+    def run_checkpoint(self, full: bool = False) -> Dict[str, int]:
         """Force one checkpoint + compaction cycle now. Serialized with
         the background trigger; safe to call while commits are in flight
         (the commit locks are held only for the O(state) capture and the
-        WAL rotation, not the serialization/fsync)."""
+        WAL rotation, not the serialization/fsync).
+
+        Cycles after the first export DELTAS against the previous
+        cycle's version floor (for backends that support it); every
+        ``ckpt_chain_max``-th cycle — or ``full=True`` — writes a
+        self-contained full, bounding recovery's chain walk."""
         wal = self.wal
         if not isinstance(wal, walmod.SegmentedWal):
             raise ValueError(
@@ -440,10 +451,15 @@ class BackendServer:
                 "single-file log)"
             )
         with self._ckpt_mu:
+            base = None if full else self._ckpt_base
+            if base is not None and base.get("chain_len", 1) >= \
+                    self.ckpt_chain_max:
+                base = None
             summary = walmod.checkpoint_backend(
                 wal, self.backend, self.epoch,
-                next_fid_fn=self.allocator.peek_next,
+                next_fid_fn=self.allocator.peek_next, base=base,
             )
+            self._ckpt_base = summary
             self._ckpt_appends = wal.appends
             self.checkpoints += 1
             return summary
@@ -885,6 +901,9 @@ class BackendServer:
                     if hblocks:
                         ptype = wire.T_PUSH_VERSION
                         body["b"] = hblocks
+                # fan-out cost: one frame per holder per commit
+                (leasemod._FANOUT_PUSH if ptype == wire.T_PUSH_VERSION
+                 else leasemod._FANOUT_INV).inc()
                 self._push_jobs.append((hconn, ptype, body))
             self._wake()
         except Exception:

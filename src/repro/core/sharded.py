@@ -440,8 +440,19 @@ class ShardedBackend(BackendAPI):
             for s in reversed(list(svcs)):
                 svcs[s].commit_lock.release()
 
-    def export_snapshot(self) -> Dict:
-        """Caller holds every shard lock (``freeze``)."""
+    #: delta checkpoints: ``since`` is a per-slot floor dict; every
+    #: owned slot appears in the snapshot (a slot absent from ``since``
+    #: — e.g. migrated in after the base — exports in full), so a delta
+    #: import's slot-reconciliation still sees the true ownership set.
+    supports_delta_export = True
+
+    def export_snapshot(
+        self, since: Optional[Dict[int, Timestamp]] = None
+    ) -> Dict:
+        """Caller holds every shard lock (``freeze``). ``since`` maps
+        slot -> that shard's previous snapshot ``ts`` (shard-local
+        clocks); each shard exports only chains dirtied past its own
+        floor. The next floor is ``{slot: shard_snap["ts"]}``."""
         with self._vec_lock:
             applied = list(self._applied)
             gts = self._gts
@@ -457,7 +468,12 @@ class ShardedBackend(BackendAPI):
             "kind": "sharded",
             "n": self.n_slots,
             "slots": slots,
-            "shards": [svcs[s].export_snapshot() for s in slots],
+            "shards": [
+                svcs[s].export_snapshot(
+                    since.get(s) if since is not None else None
+                )
+                for s in slots
+            ],
             "applied": applied,
             "gts": gts,
             "next_fid": next_fid,

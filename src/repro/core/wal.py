@@ -361,7 +361,11 @@ def recover(backend, path: str) -> Dict[str, int]:
 _SEG_PREFIX = "wal."
 _CKPT_PREFIX = "ckpt."
 _TMP_SUFFIX = ".tmp"
-CKPT_VERSION = 1
+#: v2 adds a ``base_seg`` chain link to the header: 0 = self-contained
+#: full snapshot, else the covered-segment index of the checkpoint this
+#: DELTA must be layered onto. v1 files (5-tuple header) still load as
+#: fulls — an existing directory upgrades in place.
+CKPT_VERSION = 2
 
 
 def _seg_name(idx: int) -> str:
@@ -541,24 +545,29 @@ def write_checkpoint(
     epoch: int,
     next_fid: int,
     state: Any,
+    base_seg: int = 0,
 ) -> str:
     """Serialize one backend snapshot into ``ckpt.<covered_seg>``.
 
     The file is a CRC-framed record sequence — ``("ckpt-hdr", version,
-    covered_seg, epoch, next_fid)``, ``("state", tree)``, ``("ckpt-end",
-    2)`` — written to a ``.tmp`` name, fsync'd, atomically renamed into
-    place, then the directory entry is fsync'd. A crash at ANY point
-    before the rename leaves only ignorable ``.tmp`` garbage; a torn
-    installed file (storage corruption) is rejected by the CRC/end-marker
-    check at load time and recovery falls back to the previous
-    checkpoint, whose covered segments are only deleted after a
+    covered_seg, epoch, next_fid, base_seg)``, ``("state", tree)``,
+    ``("ckpt-end", 2)`` — written to a ``.tmp`` name, fsync'd, atomically
+    renamed into place, then the directory entry is fsync'd. A crash at
+    ANY point before the rename leaves only ignorable ``.tmp`` garbage; a
+    torn installed file (storage corruption) is rejected by the
+    CRC/end-marker check at load time and recovery falls back to the
+    previous checkpoint, whose covered segments are only deleted after a
     *successful* install.
+
+    ``base_seg != 0`` marks ``state`` as a DELTA export: recovery must
+    first import ``ckpt.<base_seg>`` (itself possibly a delta — the
+    links form a chain ending in a full) and overlay this one on top.
     """
     final = os.path.join(dirpath, _ckpt_name(covered_seg))
     tmp = final + _TMP_SUFFIX
     with open(tmp, "wb") as f:
         _append_framed(f, ("ckpt-hdr", CKPT_VERSION, covered_seg, epoch,
-                           next_fid))
+                           next_fid, base_seg))
         _append_framed(f, ("state", state))
         _append_framed(f, ("ckpt-end", 2))
         f.flush()
@@ -568,6 +577,21 @@ def write_checkpoint(
     return final
 
 
+def _parse_ckpt_hdr(hdr: Any) -> Optional[Tuple[int, int, int, int]]:
+    """Validate a ``("ckpt-hdr", ...)`` record; returns ``(covered_seg,
+    epoch, next_fid, base_seg)`` or ``None``. v1 headers (5-tuple) are
+    full checkpoints (``base_seg = 0``); v2 (6-tuple) carries the chain
+    link explicitly."""
+    if not (isinstance(hdr, tuple) and len(hdr) >= 2
+            and hdr[0] == "ckpt-hdr"):
+        return None
+    if len(hdr) == 5 and hdr[1] == 1:
+        return hdr[2], hdr[3], hdr[4], 0
+    if len(hdr) == 6 and hdr[1] == CKPT_VERSION:
+        return hdr[2], hdr[3], hdr[4], hdr[5]
+    return None
+
+
 def load_checkpoint(path: str) -> Optional[Dict[str, Any]]:
     """Parse + validate one checkpoint file; ``None`` if torn/invalid
     (bad CRC, missing end marker, wrong record shape, unknown version)."""
@@ -575,9 +599,8 @@ def load_checkpoint(path: str) -> Optional[Dict[str, Any]]:
     if len(records) != 3:
         return None
     hdr, state_rec, end = records
-    if not (isinstance(hdr, tuple) and len(hdr) == 5 and hdr[0] == "ckpt-hdr"):
-        return None
-    if hdr[1] != CKPT_VERSION:
+    parsed = _parse_ckpt_hdr(hdr)
+    if parsed is None:
         return None
     if not (isinstance(state_rec, tuple) and len(state_rec) == 2
             and state_rec[0] == "state"):
@@ -585,17 +608,83 @@ def load_checkpoint(path: str) -> Optional[Dict[str, Any]]:
     if end != ("ckpt-end", 2):
         return None
     return {
-        "seg": hdr[2],
-        "epoch": hdr[3],
-        "next_fid": hdr[4],
+        "seg": parsed[0],
+        "epoch": parsed[1],
+        "next_fid": parsed[2],
+        "base_seg": parsed[3],
         "state": state_rec[1],
     }
 
 
+def _ckpt_header(path: str) -> Optional[Dict[str, int]]:
+    """Read + validate ONLY the first framed record of a checkpoint —
+    enough to walk ``base_seg`` chain links without deserializing the
+    state tree (compaction walks the live chain on every cycle)."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read(_REC_HDR.size)
+            if len(raw) < _REC_HDR.size:
+                return None
+            body_len, crc = _REC_HDR.unpack(raw)
+            body = f.read(body_len)
+    except OSError:
+        return None
+    if len(body) != body_len or zlib.crc32(body) != crc:
+        return None
+    try:
+        rec = wire.unpack(body)
+    except wire.WireError:
+        return None
+    parsed = _parse_ckpt_hdr(rec)
+    if parsed is None:
+        return None
+    return {"seg": parsed[0], "epoch": parsed[1], "next_fid": parsed[2],
+            "base_seg": parsed[3]}
+
+
+def _live_chain(dirpath: str, head_idx: int) -> set:
+    """Checkpoint indices reachable from ``head_idx`` via ``base_seg``
+    links, head included. Stops at a full checkpoint, a missing or
+    unreadable link, or a non-decreasing link (cycle guard). Recovery
+    re-validates the whole chain; this only scopes compaction — an
+    over-approximation merely keeps a file longer."""
+    keep = {head_idx}
+    idx = head_idx
+    while True:
+        h = _ckpt_header(os.path.join(dirpath, _ckpt_name(idx)))
+        if h is None or h["base_seg"] == 0 or h["base_seg"] >= idx:
+            return keep
+        idx = h["base_seg"]
+        keep.add(idx)
+
+
+def _snapshot_floor(state: Any) -> Any:
+    """The version floor a FUTURE delta export should filter against,
+    read off a just-exported snapshot: the monolithic backend's commit
+    timestamp, or the per-slot shard timestamps for a sharded one."""
+    if isinstance(state, dict) and state.get("kind") == "sharded":
+        return {s: sh["ts"] for s, sh in zip(state["slots"], state["shards"])}
+    if isinstance(state, dict) and "ts" in state:
+        return state["ts"]
+    return None
+
+
 def checkpoint_backend(
-    wal: SegmentedWal, backend, epoch: int, next_fid_fn=None
-) -> Dict[str, int]:
-    """One full checkpoint + compaction cycle against ``backend``.
+    wal: SegmentedWal, backend, epoch: int, next_fid_fn=None, base=None
+) -> Dict[str, Any]:
+    """One checkpoint + compaction cycle against ``backend``.
+
+    ``base`` is the PREVIOUS cycle's return value (or ``None``). When
+    the backend advertises ``supports_delta_export`` and ``base`` names
+    a still-installed checkpoint with a version floor, this cycle
+    exports only chains dirtied past that floor and installs the result
+    as a delta linked to ``base["seg"]`` — checkpoint cost scales with
+    the write rate since the last cycle, not the state size. Otherwise
+    (first cycle after a restart, floor-less backends, base file gone)
+    it falls back to a self-contained full. Compaction then deletes
+    every checkpoint BELOW the new head that is not on its live chain,
+    so a delta's ancestors survive exactly as long as something links
+    to them.
 
     Under the backend's ``freeze()`` (all commit locks — the capture is
     an O(state) reference walk, NOT the serialization): rotate the log so
@@ -613,16 +702,33 @@ def checkpoint_backend(
     racing past the rotation lands its record in the new (kept) segment.
     """
     t0 = obs.now_us()
+    delta_capable = getattr(backend, "supports_delta_export", False)
+    want_delta = (
+        delta_capable
+        and base is not None
+        and base.get("floor") is not None
+        and base.get("seg", 0) > 0
+        and os.path.exists(os.path.join(wal.dir, _ckpt_name(base["seg"])))
+    )
     with backend.freeze():
         covered = wal.rotate()
-        state = backend.export_snapshot()
+        if want_delta:
+            state = backend.export_snapshot(base["floor"])
+        else:
+            state = backend.export_snapshot()
         next_fid = next_fid_fn() if next_fid_fn is not None else 1
-    path = write_checkpoint(wal.dir, covered, epoch, next_fid, state)
+    base_seg = base["seg"] if want_delta else 0
+    path = write_checkpoint(wal.dir, covered, epoch, next_fid, state,
+                            base_seg=base_seg)
     removed = wal.drop_through(covered)
-    # previous checkpoints are now redundant (their fallback value is
-    # gone anyway: the segments after them were just deleted)
+    # compact: every checkpoint below the new head is redundant UNLESS
+    # the head's delta chain still links to it (its fallback value as a
+    # standalone restore point is gone anyway — the segments after it
+    # were just deleted — but as a chain base it carries the state the
+    # deltas above it omit)
+    keep = _live_chain(wal.dir, covered)
     for idx, old in list_checkpoints(wal.dir):
-        if idx < covered:
+        if idx < covered and idx not in keep:
             try:
                 os.unlink(old)
             except FileNotFoundError:
@@ -634,19 +740,25 @@ def checkpoint_backend(
         "seg": covered,
         "bytes": ckpt_bytes,
         "segments_removed": removed,
+        "base_seg": base_seg,
+        "floor": _snapshot_floor(state) if delta_capable else None,
+        "chain_len": len(keep),
     }
 
 
 def recover_dir(backend, dirpath: str) -> Dict[str, int]:
     """Bounded crash recovery over a segmented log directory.
 
-    Order: load the newest *valid* checkpoint (torn/invalid ones are
-    skipped — fall back toward older checkpoints), import its snapshot
-    into ``backend``, then replay only the WAL segments strictly after
-    the one it covers, truncating the final segment's torn tail. Leftover
-    ``.tmp`` files, invalid checkpoints, and segments already covered by
-    the loaded checkpoint are deleted (a crash between checkpoint install
-    and segment deletion re-runs the deletion here).
+    Order: resolve the newest *usable* checkpoint — valid itself AND,
+    if it is a delta, with every ``base_seg`` link down to a full
+    checkpoint valid too (torn files and broken-chain heads are skipped
+    — fall back toward older checkpoints). Import the chain base-first
+    (each delta overlays the state below it), then replay only the WAL
+    segments strictly after the head's covered segment, truncating the
+    final segment's torn tail. Leftover ``.tmp`` files, unusable
+    checkpoints, and segments already covered by the head are deleted (a
+    crash between checkpoint install and segment deletion re-runs the
+    deletion here).
 
     Raises ``RecoveryError`` — refusing to start — when the directory
     cannot prove full coverage of acked commits: no valid checkpoint but
@@ -655,21 +767,56 @@ def recover_dir(backend, dirpath: str) -> Dict[str, int]:
     torn record inside a NON-final segment (segments are fully fsync'd
     before rotation, so a mid-log tear is storage corruption, not a
     crash artifact — replaying past the hole would violate commit
-    order, replaying up to it would silently drop acked data).
+    order, replaying up to it would silently drop acked data). Falling
+    back past a broken delta chain hits the same proof: the broken
+    head's covered segments were compacted away, so the older candidate
+    cannot cover them and recovery REFUSES rather than silently serving
+    state that drops acked commits.
 
     Returns ``{"commits": tail_commits_replayed, "epoch", "fid_floor",
     "ckpt_seg", "ckpt_loaded"}`` — ``commits`` counts ONLY the tail, the
     number that bounds restart cost.
     """
     os.makedirs(dirpath, exist_ok=True)
-    chosen: Optional[Dict[str, Any]] = None
+    ckpts: Dict[int, str] = dict(list_checkpoints(dirpath))
+    loaded: Dict[int, Optional[Dict[str, Any]]] = {}
+
+    def _load(idx: int) -> Optional[Dict[str, Any]]:
+        if idx not in loaded:
+            path = ckpts.get(idx)
+            loaded[idx] = None if path is None else load_checkpoint(path)
+        return loaded[idx]
+
+    # newest-first: a candidate is usable iff it loads AND its base_seg
+    # chain resolves all the way to a full checkpoint (delta files whose
+    # base is gone or torn are as useless as torn files themselves)
+    chain: List[Dict[str, Any]] = []  # head first, full last
     invalid: List[str] = []
-    for idx, path in sorted(list_checkpoints(dirpath), reverse=True):
-        c = load_checkpoint(path)
-        if c is not None:
-            chosen = c
+    for idx in sorted(ckpts, reverse=True):
+        c = _load(idx)
+        if c is None:
+            invalid.append(ckpts[idx])
+            continue
+        cand = [c]
+        seen = {idx}
+        cur = c
+        while cur["base_seg"] != 0:
+            b = cur["base_seg"]
+            if b in seen or b >= cur["seg"]:
+                cand = []  # malformed link / cycle: head unusable
+                break
+            nxt = _load(b)
+            if nxt is None:
+                cand = []  # missing or torn base
+                break
+            seen.add(b)
+            cand.append(nxt)
+            cur = nxt
+        if cand:
+            chain = cand
             break
-        invalid.append(path)
+        invalid.append(ckpts[idx])
+    chosen = chain[0] if chain else None
 
     epoch = 0
     fid_floor = 1
@@ -693,10 +840,14 @@ def recover_dir(backend, dirpath: str) -> Dict[str, int]:
             "commits may be missing — refusing to recover"
         )
 
-    if chosen is not None:
-        backend.import_snapshot(chosen["state"])
+    if chain:
+        # base-first: the full snapshot, then each delta overlaid in
+        # commit order — import_snapshot applies per-chain overlays, so
+        # the stack reconstructs exactly the head's covered state
+        for c in reversed(chain):
+            backend.import_snapshot(c["state"])
         epoch = chosen["epoch"]
-        fid_floor = max(fid_floor, chosen["next_fid"])
+        fid_floor = max(fid_floor, *(c["next_fid"] for c in chain))
 
     commits = 0
     segs = [e for e in list_segments(dirpath) if e[0] > base_seg]
@@ -731,8 +882,9 @@ def recover_dir(backend, dirpath: str) -> Dict[str, int]:
             os.unlink(path)
         except FileNotFoundError:
             pass
+    chain_segs = {c["seg"] for c in chain}
     for idx, path in list_checkpoints(dirpath):
-        if chosen is not None and idx < base_seg:
+        if chosen is not None and idx < base_seg and idx not in chain_segs:
             try:
                 os.unlink(path)
             except FileNotFoundError:
@@ -752,4 +904,5 @@ def recover_dir(backend, dirpath: str) -> Dict[str, int]:
         "fid_floor": fid_floor,
         "ckpt_seg": base_seg,
         "ckpt_loaded": chosen is not None,
+        "ckpt_chain": len(chain),
     }

@@ -354,7 +354,7 @@ def _need(buf, off: int, n: int) -> None:
         raise WireError("truncated codec bytes")
 
 
-def _unpack_from(buf, off: int, stats=None) -> Tuple[Any, int]:
+def _unpack_from(buf, off: int, stats=None, sink=None) -> Tuple[Any, int]:
     _need(buf, off, 1)
     tag = buf[off]
     off += 1
@@ -363,9 +363,9 @@ def _unpack_from(buf, off: int, stats=None) -> Tuple[Any, int]:
     if tag >= 0xE0:                      # negative fixint
         return tag - 0x100, off
     if 0x80 <= tag <= 0x8F:              # fixmap
-        return _unpack_map(buf, off, tag & 0x0F, stats)
+        return _unpack_map(buf, off, tag & 0x0F, stats, sink)
     if 0x90 <= tag <= 0x9F:              # fixarray
-        return _unpack_list(buf, off, tag & 0x0F, stats)
+        return _unpack_list(buf, off, tag & 0x0F, stats, sink)
     if 0xA0 <= tag <= 0xBF:              # fixstr
         n = tag & 0x1F
         _need(buf, off, n)
@@ -379,6 +379,13 @@ def _unpack_from(buf, off: int, stats=None) -> Tuple[Any, int]:
     if tag in (0xC4, 0xC5, 0xC6):        # bin
         n, off = _unpack_len(buf, off, tag - 0xC4)
         _need(buf, off, n)
+        if sink is not None:
+            dst = sink(n)
+            if dst is not None:
+                dst[:] = buf[off : off + n]
+                if stats is not None and len(stats) > 1:
+                    stats[1] += n
+                return dst, off + n
         if stats is not None:
             stats[0] += n
         return bytes(buf[off : off + n]), off + n
@@ -390,7 +397,7 @@ def _unpack_from(buf, off: int, stats=None) -> Tuple[Any, int]:
         _need(buf, off, n)
         if ext_type != _EXT_TUPLE:
             raise WireError(f"unknown ext type {ext_type}")
-        inner, ioff = _unpack_from(buf, off, stats)
+        inner, ioff = _unpack_from(buf, off, stats, sink)
         if ioff != off + n or not isinstance(inner, list):
             raise WireError("malformed tuple ext payload")
         return tuple(inner), off + n
@@ -428,19 +435,19 @@ def _unpack_from(buf, off: int, stats=None) -> Tuple[Any, int]:
     if tag == 0xDC:
         _need(buf, off, 2)
         n = struct.unpack_from(">H", buf, off)[0]
-        return _unpack_list(buf, off + 2, n, stats)
+        return _unpack_list(buf, off + 2, n, stats, sink)
     if tag == 0xDD:
         _need(buf, off, 4)
         n = struct.unpack_from(">I", buf, off)[0]
-        return _unpack_list(buf, off + 4, n, stats)
+        return _unpack_list(buf, off + 4, n, stats, sink)
     if tag == 0xDE:
         _need(buf, off, 2)
         n = struct.unpack_from(">H", buf, off)[0]
-        return _unpack_map(buf, off + 2, n, stats)
+        return _unpack_map(buf, off + 2, n, stats, sink)
     if tag == 0xDF:
         _need(buf, off, 4)
         n = struct.unpack_from(">I", buf, off)[0]
-        return _unpack_map(buf, off + 4, n, stats)
+        return _unpack_map(buf, off + 4, n, stats, sink)
     raise WireError(f"unknown codec tag 0x{tag:02x}")
 
 
@@ -455,19 +462,19 @@ def _unpack_len(buf, off: int, width_idx: int) -> Tuple[int, int]:
     return struct.unpack_from(">I", buf, off)[0], off + 4
 
 
-def _unpack_list(buf, off: int, n: int, stats=None) -> Tuple[List[Any], int]:
+def _unpack_list(buf, off: int, n: int, stats=None, sink=None) -> Tuple[List[Any], int]:
     out = []
     for _ in range(n):
-        v, off = _unpack_from(buf, off, stats)
+        v, off = _unpack_from(buf, off, stats, sink)
         out.append(v)
     return out, off
 
 
-def _unpack_map(buf, off: int, n: int, stats=None) -> Tuple[Dict[Any, Any], int]:
+def _unpack_map(buf, off: int, n: int, stats=None, sink=None) -> Tuple[Dict[Any, Any], int]:
     out: Dict[Any, Any] = {}
     for _ in range(n):
-        k, off = _unpack_from(buf, off, stats)
-        v, off = _unpack_from(buf, off, stats)
+        k, off = _unpack_from(buf, off, stats, sink)
+        v, off = _unpack_from(buf, off, stats, sink)
         out[k] = v
     return out, off
 
@@ -586,7 +593,8 @@ class FrameReader:
     is the signal for coalescing replies before flushing."""
 
     __slots__ = ("sock", "_buf", "_head", "_tail", "frames",
-                 "body_bytes", "_stats", "last_trace", "last_mapv")
+                 "body_bytes", "_stats", "_sinks", "last_trace",
+                 "last_mapv")
 
     INIT_BUF = 1 << 16
     SHRINK_ABOVE = 4 << 20
@@ -598,7 +606,12 @@ class FrameReader:
         self._tail = 0
         self.frames = 0
         self.body_bytes = 0
-        self._stats = [0]
+        self._stats = [0, 0]
+        #: req_id -> sink callable for the NEXT frame carrying that id.
+        #: A sink receives each bin payload length and may return a
+        #: writable memoryview of exactly that length (payload lands
+        #: there, no bytes object is built) or None (normal copy-out).
+        self._sinks: Dict[int, Any] = {}
         #: (trace_id, span_id) from the last frame's envelope, or None
         self.last_trace: Optional[Tuple[int, int]] = None
         #: highest shard-map version any frame has advertised, or None
@@ -608,6 +621,23 @@ class FrameReader:
     def bytes_copied(self) -> int:
         """Payload (bin) bytes materialized out of the buffer."""
         return self._stats[0]
+
+    @property
+    def bytes_sunk(self) -> int:
+        """Payload (bin) bytes decoded straight into caller-provided
+        destinations (arena / tensor memory) instead of fresh ``bytes``
+        objects — the zero-copy half of the counter discipline."""
+        return self._stats[1]
+
+    def set_sink(self, req_id: int, sink) -> None:
+        """Arm ``sink`` for the next frame whose header carries
+        ``req_id``. Consumed by that one frame; the caller must re-arm
+        per request. Sinks do not survive reader replacement (redial):
+        callers fall back to the plain-bytes path automatically."""
+        self._sinks[req_id] = sink
+
+    def clear_sink(self, req_id: int) -> None:
+        self._sinks.pop(req_id, None)
 
     def _reclaim(self) -> None:
         buf = self._buf
@@ -663,7 +693,8 @@ class FrameReader:
             end = body_at + body_len
             if self._tail < end:
                 return None
-            obj, off = _unpack_from(mv[:end], body_at, self._stats)
+            sink = self._sinks.pop(req_id, None) if self._sinks else None
+            obj, off = _unpack_from(mv[:end], body_at, self._stats, sink)
             if off != end:
                 raise WireError(
                     f"{end - off} trailing byte(s) after frame body"

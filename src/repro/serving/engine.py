@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.tensorstate import TensorStore, unflatten_like
 
 PyTree = Any
@@ -60,10 +60,10 @@ class SnapshotServer:
 
         def do_read(fs: FaaSFS) -> None:
             store = TensorStore(fs, prefix=self.root)
-            holder["flat"] = store.load(self.name)
+            holder["flat"] = store.load(self.name, zero_copy=True)
             holder["ts"] = fs.txn.read_ts
 
-        run_function(self.local, do_read, read_only=True)
+        runtime_for(self.local).invoke(do_read, read_only=True)
         self.params = unflatten_like(self.template, holder["flat"])
         self.version = holder["ts"]
         self.stats.refreshes += 1

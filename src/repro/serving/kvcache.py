@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.posix import FaaSFS, O_CREAT
-from repro.core.retry import run_function
+from repro.core.runtime import InvocationStats, runtime_for
 
 
 @dataclass
@@ -99,13 +99,20 @@ class PagedKVCache:
     # ------------------------------------------------------------------ #
     # FaaSFS persistence: commit / re-attach sequences across invocations
     # ------------------------------------------------------------------ #
-    def persist(self, local, seq_id: str, *, prefix: str = "/mnt/tsfs/kv") -> int:
+    # ``target`` below is a FunctionRuntime or a bare LocalServer (a
+    # cached runtime is built over it) — persistence runs as real FaaS
+    # invocations: implicit BEGIN/COMMIT, Conflict restart, and the
+    # read-only fast path for attach, over any BackendAPI transport.
+    # Layout: ``{prefix}/{seq_id}.len`` (8-byte LE length) plus one
+    # ``.p{i}k`` / ``.p{i}v`` file per page — K and V separated so each
+    # file maps onto ONE contiguous pool destination and ``attach`` can
+    # land page bytes straight off the wire into the pool (zero-copy,
+    # counted by ``Transaction.bytes_sunk``).
+    def persist(self, target, seq_id: str, *, prefix: str = "/mnt/tsfs/kv") -> int:
         """Commit a sequence's pages atomically; returns commit timestamp."""
         seq = self._seqs[seq_id]
         pages_k = [self.k_pages[p] for p in seq.pages]
         pages_v = [self.v_pages[p] for p in seq.pages]
-
-        from repro.core.retry import InvocationStats
         inv = InvocationStats()
 
         def do(fs: FaaSFS) -> None:
@@ -114,41 +121,51 @@ class PagedKVCache:
             fs.pwrite(fd, int(seq.length).to_bytes(8, "little"), 0)
             fs.close(fd)
             for i, (pk, pv) in enumerate(zip(pages_k, pages_v)):
-                fd = fs.open(f"{prefix}/{seq_id}.p{i}", O_CREAT)
-                fs.pwrite(fd, pk.tobytes() + pv.tobytes(), 0)
+                fd = fs.open(f"{prefix}/{seq_id}.p{i}k", O_CREAT)
+                fs.pwrite(fd, pk.tobytes(), 0)
+                fs.close(fd)
+                fd = fs.open(f"{prefix}/{seq_id}.p{i}v", O_CREAT)
+                fs.pwrite(fd, pv.tobytes(), 0)
                 fs.close(fd)
 
-        run_function(local, do, stats=inv)
+        runtime_for(target).invoke(do, stats=inv)
         return inv.commit_ts
 
-    def attach(self, local, seq_id: str, *, prefix: str = "/mnt/tsfs/kv") -> int:
-        """Re-hydrate a persisted sequence (snapshot-consistent read)."""
+    def attach(self, target, seq_id: str, *, prefix: str = "/mnt/tsfs/kv") -> int:
+        """Re-hydrate a persisted sequence (snapshot-consistent read).
+
+        Page bytes are read INTO the pool slabs (``pread_into``): the
+        destination of every full block is the ``k_pages``/``v_pages``
+        memory itself, so a remote attach performs zero per-block
+        payload copies beyond the single wire decode."""
         self.new_sequence(seq_id)
         seq = self._seqs[seq_id]
-        holder: Dict[str, object] = {}
+        page_shape = self.k_pages.shape[1:]
+        page_bytes = int(np.prod(page_shape)) * self.k_pages.dtype.itemsize
+        holder: Dict[str, int] = {}
 
         def do(fs: FaaSFS) -> None:
             fd = fs.open(f"{prefix}/{seq_id}.len")
-            holder["length"] = int.from_bytes(fs.pread(fd, 8, 0), "little")
+            length = int.from_bytes(fs.pread(fd, 8, 0), "little")
             fs.close(fd)
-            n_pages = -(-holder["length"] // self.page_tokens)
-            raw = []
+            holder["length"] = length
+            n_pages = -(-length // self.page_tokens)
             for i in range(n_pages):
-                fd = fs.open(f"{prefix}/{seq_id}.p{i}")
-                n = fs.fstat(fd)["st_size"]
-                raw.append(fs.pread(fd, n, 0))
-                fs.close(fd)
-            holder["raw"] = raw
+                # idempotent across Conflict/staleness restarts:
+                # _page_for only appends pages the sequence lacks, and a
+                # re-run simply overwrites the same pool slabs
+                page, _ = self._page_for(seq, i * self.page_tokens)
+                for suffix, pool in (("k", self.k_pages), ("v", self.v_pages)):
+                    fd = fs.open(f"{prefix}/{seq_id}.p{i}{suffix}")
+                    n = fs.fstat(fd)["st_size"]
+                    if n != page_bytes:
+                        raise ValueError(
+                            f"kv page {seq_id}.p{i}{suffix}: {n} bytes, "
+                            f"expected {page_bytes}"
+                        )
+                    fs.pread_into(fd, n, 0, memoryview(pool[page]).cast("B"))
+                    fs.close(fd)
 
-        run_function(local, do, read_only=True)
-        length = int(holder["length"])  # type: ignore[arg-type]
-        page_shape = self.k_pages.shape[1:]
-        page_bytes = int(np.prod(page_shape)) * self.k_pages.dtype.itemsize
-        for i, blob in enumerate(holder["raw"]):  # type: ignore[union-attr]
-            page, _ = self._page_for(seq, i * self.page_tokens)
-            self.k_pages[page] = np.frombuffer(
-                blob[:page_bytes], self.k_pages.dtype).reshape(page_shape)
-            self.v_pages[page] = np.frombuffer(
-                blob[page_bytes:], self.v_pages.dtype).reshape(page_shape)
-        seq.length = length
-        return length
+        runtime_for(target).invoke(do, read_only=True)
+        seq.length = int(holder["length"])
+        return seq.length

@@ -4,7 +4,7 @@ import pytest
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS, O_CREAT
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.types import CachePolicy
 
 
@@ -13,7 +13,7 @@ def setup_file(local, path="/mnt/tsfs/f", size=64):
         fd = fs.open(path, O_CREAT)
         fs.pwrite(fd, b"0" * size, 0)
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def warm(local, path="/mnt/tsfs/f", size=64):
@@ -21,7 +21,7 @@ def warm(local, path="/mnt/tsfs/f", size=64):
         fd = fs.open(path)
         fs.pread(fd, size, 0)
 
-    run_function(local, fn, read_only=False)
+    runtime_for(local).invoke(fn, read_only=False)
 
 
 def modify(local, path="/mnt/tsfs/f", offset=0, data=b"MOD!"):
@@ -29,7 +29,7 @@ def modify(local, path="/mnt/tsfs/f", offset=0, data=b"MOD!"):
         fd = fs.open(path)
         fs.pwrite(fd, data, offset)
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def test_eager_pushes_changed_blocks():
@@ -120,7 +120,7 @@ def test_serializability_under_every_policy():
             fd = fs.open("/mnt/tsfs/ctr", O_CREAT)
             fs.pwrite(fd, (0).to_bytes(8, "little"), 0)
 
-        run_function(locals_[0], init)
+        runtime_for(locals_[0]).invoke(init)
 
         def incr(fs):
             fd = fs.open("/mnt/tsfs/ctr")
@@ -131,7 +131,7 @@ def test_serializability_under_every_policy():
 
         def worker(l):
             for _ in range(10):
-                run_function(l, incr)
+                runtime_for(l).invoke(incr)
 
         ts = [threading.Thread(target=worker, args=(l,)) for l in locals_]
         for t in ts:
@@ -143,4 +143,4 @@ def test_serializability_under_every_policy():
             fd = fs.open("/mnt/tsfs/ctr")
             assert int.from_bytes(fs.pread(fd, 8, 0), "little") == 30, policy
 
-        run_function(locals_[0], check, read_only=True)
+        runtime_for(locals_[0]).invoke(check, read_only=True)

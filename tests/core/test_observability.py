@@ -270,6 +270,8 @@ def test_lease_tier_metrics_end_to_end(remote_backend):
         "view_hits": leases._HIT_VIEW.value,
         "view_misses": leases._MISS_VIEW.value,
         "pushes": leases._PUSH_US.count,
+        "fanout_inv": leases._FANOUT_INV.value,
+        "fanout_push": leases._FANOUT_PUSH.value,
     }
 
     def write(v: int):
@@ -306,6 +308,13 @@ def test_lease_tier_metrics_end_to_end(remote_backend):
         assert time.monotonic() < deadline, "push revoke never arrived"
         time.sleep(0.005)
     assert leases._PUSH_US.count > base["pushes"]
+    # the server counted its per-holder fan-out: exactly one holder is
+    # leased here, so the typed fan-out counters moved by >= 1 total
+    fanout_delta = (
+        leases._FANOUT_INV.value - base["fanout_inv"]
+        + leases._FANOUT_PUSH.value - base["fanout_push"]
+    )
+    assert fanout_delta >= 1
 
     text = obs.render_prometheus(obs.REGISTRY.snapshot())
     assert "# TYPE faasfs_lease_grants_total counter" in text
@@ -313,3 +322,4 @@ def test_lease_tier_metrics_end_to_end(remote_backend):
     assert 'faasfs_lease_cache_hits_total{tier="view"}' in text
     assert "# TYPE faasfs_lease_push_us histogram" in text
     assert "faasfs_server_lease_holders" in text
+    assert "faasfs_lease_push_fanout_total" in text

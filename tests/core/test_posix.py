@@ -4,7 +4,7 @@ import pytest
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.posix import O_APPEND, O_CREAT, O_EXCL, O_TRUNC, SEEK_END, FaaSFS
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.types import Conflict, Exists, NotFound
 
 
@@ -22,14 +22,14 @@ def test_open_create_write_read(local):
         assert fs.read(fd, 6) == b" world"
         fs.close(fd)
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
     def check(fs: FaaSFS):
         fd = fs.open("/mnt/tsfs/a.txt")
         assert fs.pread(fd, 11, 0) == b"hello world"
         assert fs.fstat(fd)["st_size"] == 11
 
-    run_function(local, check, read_only=True)
+    runtime_for(local).invoke(check, read_only=True)
 
 
 def test_multiblock_write_and_zero_fill(local):
@@ -43,7 +43,7 @@ def test_multiblock_write_and_zero_fill(local):
         assert fs.pread(fd, 10, 60) == b"\0" * 10
         assert fs.pread(fd, 1, 100) == b"Y"
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def test_append_mode(local):
@@ -53,14 +53,14 @@ def test_append_mode(local):
         fs.write(fd, b"two.")
         fs.close(fd)
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
     def again(fs: FaaSFS):
         fd = fs.open("/mnt/tsfs/log", O_APPEND)
         fs.write(fd, b"three.")
         assert fs.pread(fd, 100, 0) == b"one.two.three."
 
-    run_function(local, again)
+    runtime_for(local).invoke(again)
 
 
 def test_truncate_and_regrow_zero_fill(local):
@@ -73,7 +73,7 @@ def test_truncate_and_regrow_zero_fill(local):
         # bytes 8..14 must read back as zeros, not stale 'A's
         assert fs.pread(fd, 8, 8) == b"\0" * 7 + b"B"
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def test_o_trunc_and_o_excl(local):
@@ -81,7 +81,7 @@ def test_o_trunc_and_o_excl(local):
         fd = fs.open("/mnt/tsfs/c", O_CREAT)
         fs.write(fd, b"data")
 
-    run_function(local, create)
+    runtime_for(local).invoke(create)
 
     def excl(fs):
         with pytest.raises(Exists):
@@ -89,7 +89,7 @@ def test_o_trunc_and_o_excl(local):
         fd = fs.open("/mnt/tsfs/c", O_TRUNC)
         assert fs.fstat(fd)["st_size"] == 0
 
-    run_function(local, excl)
+    runtime_for(local).invoke(excl)
 
 
 def test_lseek_end(local):
@@ -99,7 +99,7 @@ def test_lseek_end(local):
         assert fs.lseek(fd, -3, SEEK_END) == 5
         assert fs.read(fd, 3) == b"678"
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def test_unlink_and_rename_visibility(local):
@@ -107,7 +107,7 @@ def test_unlink_and_rename_visibility(local):
         fd = fs.open("/mnt/tsfs/old", O_CREAT)
         fs.write(fd, b"payload")
 
-    run_function(local, setup)
+    runtime_for(local).invoke(setup)
 
     def do_rename(fs):
         fs.rename("/mnt/tsfs/old", "/mnt/tsfs/new")
@@ -115,7 +115,7 @@ def test_unlink_and_rename_visibility(local):
         assert not fs.exists("/mnt/tsfs/old")
         assert fs.exists("/mnt/tsfs/new")
 
-    run_function(local, do_rename)
+    runtime_for(local).invoke(do_rename)
 
     def check(fs):
         with pytest.raises(NotFound):
@@ -123,7 +123,7 @@ def test_unlink_and_rename_visibility(local):
         fd = fs.open("/mnt/tsfs/new")
         assert fs.pread(fd, 7, 0) == b"payload"
 
-    run_function(local, check, read_only=True)
+    runtime_for(local).invoke(check, read_only=True)
 
 
 def test_readdir(local):
@@ -132,12 +132,12 @@ def test_readdir(local):
         for n in ("x", "y", "z"):
             fs.open(f"/mnt/tsfs/d/{n}", O_CREAT)
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
     def check(fs):
         assert fs.readdir("/mnt/tsfs/d") == ["x", "y", "z"]
 
-    run_function(local, check, read_only=True)
+    runtime_for(local).invoke(check, read_only=True)
 
 
 def test_readdir_sees_txn_local_creates(local):
@@ -149,7 +149,7 @@ def test_readdir_sees_txn_local_creates(local):
         fs.open("/mnt/tsfs/w/also", O_CREAT)
         assert fs.readdir("/mnt/tsfs/w") == ["also", "pre"]
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def test_readdir_unlink_in_txn_hides_entry(local):
@@ -158,13 +158,13 @@ def test_readdir_unlink_in_txn_hides_entry(local):
         for n in ("a", "b"):
             fs.open(f"/mnt/tsfs/u/{n}", O_CREAT)
 
-    run_function(local, setup)
+    runtime_for(local).invoke(setup)
 
     def fn(fs):
         fs.unlink("/mnt/tsfs/u/a")
         assert fs.readdir("/mnt/tsfs/u") == ["b"]
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def test_readdir_is_validated_against_concurrent_unlink(backend_factory):
@@ -179,7 +179,7 @@ def test_readdir_is_validated_against_concurrent_unlink(backend_factory):
         for n in ("x", "y"):
             fs.open(f"/mnt/tsfs/d/{n}", O_CREAT)
 
-    run_function(a, setup)
+    runtime_for(a).invoke(setup)
 
     ta = a.begin()
     fa = FaaSFS(ta)
@@ -190,7 +190,7 @@ def test_readdir_is_validated_against_concurrent_unlink(backend_factory):
     def remove(fs):
         fs.unlink("/mnt/tsfs/d/x")
 
-    run_function(b, remove)
+    runtime_for(b).invoke(remove)
 
     with pytest.raises(Conflict):
         ta.commit()
@@ -201,7 +201,7 @@ def test_path_routing_outside_mount(local):
         with pytest.raises(ValueError):
             fs.open("/etc/passwd")
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def test_flock_elision_conflicts(backend_factory):
@@ -211,7 +211,7 @@ def test_flock_elision_conflicts(backend_factory):
     def setup(fs):
         fs.open("/mnt/tsfs/lockfile", O_CREAT)
 
-    run_function(a, setup)
+    runtime_for(a).invoke(setup)
 
     ta = a.begin()
     tb = b.begin()

@@ -18,7 +18,7 @@ from hypothesis import strategies as st
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS, O_CREAT
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.types import CachePolicy
 
 POLICIES = st.sampled_from(list(CachePolicy))
@@ -39,7 +39,7 @@ def test_no_lost_updates(policy, n_clients, n_incr, block_size):
         fd = fs.open("/mnt/tsfs/ctr", O_CREAT)
         fs.pwrite(fd, (0).to_bytes(8, "little"), 0)
 
-    run_function(clients[0], setup)
+    runtime_for(clients[0]).invoke(setup)
 
     def incr(fs):
         fd = fs.open("/mnt/tsfs/ctr")
@@ -48,7 +48,7 @@ def test_no_lost_updates(policy, n_clients, n_incr, block_size):
 
     def worker(local):
         for _ in range(n_incr):
-            run_function(local, incr, max_retries=500)
+            runtime_for(local).invoke(incr, max_retries=500)
 
     threads = [threading.Thread(target=worker, args=(c,)) for c in clients]
     for t in threads:
@@ -62,7 +62,7 @@ def test_no_lost_updates(policy, n_clients, n_incr, block_size):
             int.from_bytes(fs.pread(fd, 8, 0), "little") == n_clients * n_incr
         )
 
-    run_function(clients[0], check, read_only=True)
+    runtime_for(clients[0]).invoke(check, read_only=True)
 
 
 @settings(max_examples=10, deadline=None, suppress_health_check=[HealthCheck.too_slow])
@@ -83,7 +83,7 @@ def test_multiblock_writes_never_torn(policy, n_writers, rounds):
         fd = fs.open("/mnt/tsfs/blob", O_CREAT)
         fs.pwrite(fd, b"\0" * SIZE, 0)
 
-    run_function(writers[0], setup)
+    runtime_for(writers[0]).invoke(setup)
     stop = threading.Event()
     torn = []
 
@@ -94,7 +94,7 @@ def test_multiblock_writes_never_torn(policy, n_writers, rounds):
                 fs.pread(fd, SIZE, 0)
                 fs.pwrite(fd, bytes([stamp]) * SIZE, 0)
 
-            run_function(local, fn, max_retries=500)
+            runtime_for(local).invoke(fn, max_retries=500)
 
     def read_worker():
         while not stop.is_set():
@@ -104,7 +104,7 @@ def test_multiblock_writes_never_torn(policy, n_writers, rounds):
                 if len(set(data)) > 1:
                     torn.append(bytes(data))
 
-            run_function(reader, fn, read_only=True)
+            runtime_for(reader).invoke(fn, read_only=True)
 
     rt = threading.Thread(target=read_worker)
     rt.start()
@@ -139,7 +139,7 @@ def test_equivalent_to_serial_execution(policy, data):
         for f in files:
             fs.open(f, O_CREAT)
 
-    run_function(local, setup)
+    runtime_for(local).invoke(setup)
 
     n_txns = data.draw(st.integers(1, 8))
     for _ in range(n_txns):
@@ -168,7 +168,7 @@ def test_equivalent_to_serial_execution(policy, data):
                     fs.ftruncate(fd, off)
                 fs.close(fd)
 
-        run_function(local, txn_fn)
+        runtime_for(local).invoke(txn_fn)
         # replay on the model
         for op, f, off, size, fill in ops:
             buf = model[f]
@@ -189,4 +189,4 @@ def test_equivalent_to_serial_execution(policy, data):
             assert n == len(model[f]), (f, n, len(model[f]))
             assert fs.pread(fd, n, 0) == bytes(model[f])
 
-    run_function(local, check, read_only=True)
+    runtime_for(local).invoke(check, read_only=True)

@@ -226,3 +226,20 @@ def test_run_function_shim_is_deprecated_but_works(backend):
 
     with pytest.warns(DeprecationWarning):
         assert run_function(local, check, read_only=True) == b"legacy"
+
+
+def test_no_run_function_callers_remain_in_src():
+    """The deprecation is finished: ``repro.core.retry`` itself is the
+    ONLY module in ``src/repro`` still naming ``run_function`` — every
+    state/serving/core consumer runs on ``FunctionRuntime``."""
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[2] / "src" / "repro"
+    offenders = []
+    for p in sorted(root.rglob("*.py")):
+        if p.name == "retry.py":
+            continue  # the shim itself
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if "run_function(" in line and not line.lstrip().startswith("#"):
+                offenders.append(f"{p.relative_to(root)}:{i}")
+    assert offenders == []

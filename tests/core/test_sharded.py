@@ -7,7 +7,7 @@ import pytest
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS, O_CREAT
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.sharded import ShardedBackend
 from repro.core.types import CachePolicy, Conflict
 
@@ -112,7 +112,7 @@ def test_cross_shard_rename_atomic_snapshots():
         fd = fs.open(src, O_CREAT)
         fs.write(fd, b"payload")
 
-    run_function(w, create)
+    runtime_for(w).invoke(create)
 
     stop = threading.Event()
     errors = []
@@ -142,7 +142,7 @@ def test_cross_shard_rename_atomic_snapshots():
         def flip(fs, cur=cur, other=other):
             fs.rename(cur, other)
 
-        run_function(w, flip)
+        runtime_for(w).invoke(flip)
         cur, other = other, cur
     stop.set()
     for t in threads:
@@ -444,7 +444,7 @@ def test_exists_surfaces_snapshot_too_old_instead_of_false():
     def create(fs):
         fs.open("/mnt/tsfs/hot", O_CREAT)
 
-    run_function(w, create)
+    runtime_for(w).invoke(create)
     r = LocalServer(be)
     txn = r.begin(read_only=True)      # pin the snapshot
     fs = FaaSFS(txn)
@@ -453,7 +453,7 @@ def test_exists_surfaces_snapshot_too_old_instead_of_false():
         def flip(fs2, cur=cur, other=other):
             fs2.rename(cur, other)
 
-        run_function(w, flip)
+        runtime_for(w).invoke(flip)
         cur, other = other, cur
     with pytest.raises(SnapshotTooOld):
         fs.exists("/mnt/tsfs/hot")

@@ -11,7 +11,7 @@ from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.blockstore import SnapshotTooOld, Versioned
 from repro.core.posix import FaaSFS, O_CREAT
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.types import CachePolicy
 
 
@@ -20,7 +20,7 @@ def _setup_counter(local):
         fd = fs.open("/mnt/tsfs/ctr", O_CREAT)
         fs.pwrite(fd, (0).to_bytes(8, "little"), 0)
 
-    run_function(local, init)
+    runtime_for(local).invoke(init)
 
 
 def _incr(local):
@@ -29,7 +29,7 @@ def _incr(local):
         cur = int.from_bytes(fs.pread(fd, 8, 0), "little")
         fs.pwrite(fd, (cur + 1).to_bytes(8, "little"), 0)
 
-    run_function(local, fn)
+    runtime_for(local).invoke(fn)
 
 
 def _read(local) -> int:
@@ -39,7 +39,7 @@ def _read(local) -> int:
         fd = fs.open("/mnt/tsfs/ctr")
         out["v"] = int.from_bytes(fs.pread(fd, 8, 0), "little")
 
-    run_function(local, fn, read_only=True)
+    runtime_for(local).invoke(fn, read_only=True)
     return out["v"]
 
 

@@ -1,17 +1,21 @@
-"""TensorState: pytree <-> blocks, delta saves, snapshot loads."""
+"""TensorState: pytree <-> blocks, delta saves, snapshot loads, and the
+zero-copy arena restore path — over every backend kind (in-process,
+sharded, real-socket remote, multi-process cluster)."""
+import gc
+
 import numpy as np
 import pytest
 
-from repro.core.backend import BackendService
+from repro.core.arena import BlockArena
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.tensorstate import TensorStore, flatten_with_names, unflatten_like
 
 
 @pytest.fixture
-def local():
-    return LocalServer(BackendService(block_size=256))
+def local(backend_factory):
+    return LocalServer(backend_factory(block_size=256))
 
 
 def tree():
@@ -29,13 +33,13 @@ def test_roundtrip(local):
     def save(fs):
         TensorStore(fs).save("m", t)
 
-    run_function(local, save)
+    runtime_for(local).invoke(save)
     out = {}
 
     def load(fs):
         out["flat"] = TensorStore(fs).load("m")
 
-    run_function(local, load, read_only=True)
+    runtime_for(local).invoke(load, read_only=True)
     restored = unflatten_like(t, out["flat"])
     for (n1, a), (n2, b) in zip(flatten_with_names(t), flatten_with_names(restored)):
         assert n1 == n2
@@ -49,7 +53,7 @@ def test_delta_save_writes_only_dirty_blocks(local):
     def save_full(fs):
         stats["full"] = TensorStore(fs).save("m", t, block_bytes=256)
 
-    run_function(local, save_full)
+    runtime_for(local).invoke(save_full)
 
     # mutate a few elements of one leaf only
     t2 = {"w": {"a": t["w"]["a"].copy(), "b": t["w"]["b"].copy()},
@@ -60,7 +64,7 @@ def test_delta_save_writes_only_dirty_blocks(local):
     def save_delta(fs):
         stats["delta"] = TensorStore(fs).save("m", t2, baseline=baseline, block_bytes=256)
 
-    run_function(local, save_delta)
+    runtime_for(local).invoke(save_delta)
     assert stats["delta"]["bytes_written"] < stats["full"]["bytes_written"]
     assert stats["delta"]["blocks_written"] == 1   # single dirty 256B block
 
@@ -69,7 +73,7 @@ def test_delta_save_writes_only_dirty_blocks(local):
     def load(fs):
         out["flat"] = TensorStore(fs).load("m")
 
-    run_function(local, load, read_only=True)
+    runtime_for(local).invoke(load, read_only=True)
     np.testing.assert_array_equal(out["flat"]["w/a"], t2["w"]["a"])
 
 
@@ -79,7 +83,7 @@ def test_snapshot_load_is_consistent_under_concurrent_save(local):
     def save(fs):
         TensorStore(fs).save("m", t)
 
-    run_function(local, save)
+    runtime_for(local).invoke(save)
 
     # open a snapshot reader, then commit a new version from another client
     other = LocalServer(local.backend)
@@ -93,10 +97,88 @@ def test_snapshot_load_is_consistent_under_concurrent_save(local):
     def save2(fs2):
         TensorStore(fs2).save("m", t2)
 
-    run_function(other, save2)
+    runtime_for(other).invoke(save2)
 
     # the pinned snapshot still reads the OLD version of the other leaf
     second_leaf = store.load("m")["w/b"]
     np.testing.assert_array_equal(second_leaf, t["w"]["b"])
     np.testing.assert_array_equal(first_leaf, t["w"]["a"])
     txn.commit()
+
+
+def test_zero_copy_load_counters_prove_no_assembly_copies(backend_factory):
+    """The copy-accounting gate: a cold-cache zero-copy load lands every
+    block either straight off the wire into the arena (``bytes_sunk``)
+    or via exactly one counted copy (``bytes_copied_into`` — LRU hits
+    and non-sink transports). Over a real socket the per-block copy
+    counter must be ZERO: the single wire decode IS the landing."""
+    backend = backend_factory(block_size=256)
+    writer = LocalServer(backend)
+    t = tree()
+
+    def save(fs):
+        TensorStore(fs).save("m", t)
+
+    runtime_for(writer).invoke(save)
+
+    # a FRESH worker: cold block cache, so every byte crosses the backend
+    reader = LocalServer(backend)
+    arena = BlockArena()
+    counts = {}
+
+    def load(fs):
+        out = TensorStore(fs, arena=arena).load("m", zero_copy=True)
+        counts["sunk"] = fs.txn.bytes_sunk
+        counts["copied"] = fs.txn.bytes_copied_into
+        counts["flat"] = out
+
+    runtime_for(reader).invoke(load, read_only=True)
+    flat = counts["flat"]
+    total = sum(a.nbytes for _, a in flatten_with_names(t))
+    for name, a in flatten_with_names(t):
+        np.testing.assert_array_equal(a, flat[name])
+        assert not flat[name].flags.writeable      # sealed arena views
+    # every payload byte is accounted to exactly one landing path
+    assert counts["sunk"] + counts["copied"] >= total
+    assert arena.bytes_filled == counts["sunk"]
+    assert arena.bytes_copied == counts["copied"]
+    if backend_factory.kind.startswith("remote"):
+        # networked path: zero per-block copies beyond the wire decode
+        assert counts["copied"] == 0
+        assert counts["sunk"] >= total
+        wire_stats = backend.connection_stats()
+        assert wire_stats["bytes_sunk"] >= total
+
+
+def test_arena_buffers_recycle_when_views_die(backend_factory):
+    """Sealed arena buffers return to the pool when the LAST aliasing
+    array view is garbage-collected — a second load reuses the same
+    pooled memory instead of allocating fresh."""
+    backend = backend_factory(block_size=256)
+    local = LocalServer(backend)
+    t = tree()
+
+    def save(fs):
+        TensorStore(fs).save("m", t)
+
+    runtime_for(local).invoke(save)
+    arena = BlockArena()
+    out = {}
+
+    def load(fs):
+        out["flat"] = TensorStore(fs, arena=arena).load("m", zero_copy=True)
+
+    runtime_for(local).invoke(load, read_only=True)
+    assert arena.outstanding == len(out["flat"])
+    view = out["flat"]["w/a"][:4]                  # slice keeps buffer alive
+    out.clear()
+    gc.collect()
+    assert arena.outstanding == 1                  # only w/a's buffer left
+    del view
+    gc.collect()
+    assert arena.outstanding == 0
+    runtime_for(local).invoke(load, read_only=True)
+    assert arena.reuses > 0                        # pool hits, not fresh allocs
+    out.clear()
+    gc.collect()
+    assert arena.outstanding == 0

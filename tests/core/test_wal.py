@@ -666,7 +666,7 @@ def test_recover_empty_and_checkpointless_dirs(tmp_path):
     summary = walmod.recover_dir(rec, str(tmp_path / "fresh"))
     assert summary == {
         "commits": 0, "epoch": 0, "fid_floor": 1,
-        "ckpt_seg": 0, "ckpt_loaded": False,
+        "ckpt_seg": 0, "ckpt_loaded": False, "ckpt_chain": 0,
     }
     # segments but no checkpoint: plain full replay
     d = str(tmp_path / "nockpt")
@@ -872,3 +872,200 @@ def test_recovery_refuses_segment_gap_and_mid_log_tear(tmp_path):
     os.unlink(segs[1][1])
     with pytest.raises(walmod.RecoveryError):
         walmod.recover_dir(BackendService(block_size=32), d)
+
+
+# --------------------------------------------------------------------------- #
+# delta checkpoints: base+delta chains
+# --------------------------------------------------------------------------- #
+def _chain_cycles(wal, be, seeds, n_ops=15):
+    """Workload rounds each followed by a checkpoint, threading the delta
+    base between cycles exactly as the server does. Returns summaries."""
+    summaries, base = [], None
+    for seed in seeds:
+        _run_workload(be, seed, n_ops=n_ops)
+        base = walmod.checkpoint_backend(wal, be, epoch=1, base=base)
+        summaries.append(base)
+    return summaries
+
+
+@pytest.mark.parametrize("kind", ["mono", "sharded2"])
+def test_delta_chain_recovery_digest_equal_to_full(tmp_path, kind):
+    """Base + deltas imported in chain order rebuild EXACTLY the state a
+    single full checkpoint would carry — blocks, metas (incl. mtime),
+    namespace, log tail, sequencers — for mono and sharded backends."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = _mk_kind(kind)
+    be.set_wal(wal)
+    s = _chain_cycles(wal, be, [41, 42, 43])
+    wal.close()
+
+    assert s[0]["base_seg"] == 0                     # first cycle: full
+    assert s[1]["base_seg"] == s[0]["seg"]           # deltas link the chain
+    assert s[2]["base_seg"] == s[1]["seg"]
+    assert s[2]["chain_len"] == 3
+    # the whole chain survives compaction; nothing else does
+    live = sorted(i for i, _ in walmod.list_checkpoints(d))
+    assert live == [s[0]["seg"], s[1]["seg"], s[2]["seg"]]
+
+    rec = _mk_kind(kind)
+    summary = walmod.recover_dir(rec, d)
+    assert summary["ckpt_loaded"] is True
+    assert summary["ckpt_chain"] == 3
+    assert summary["ckpt_seg"] == s[2]["seg"]
+    assert _digest(rec) == _digest(be)
+
+
+def test_delta_bytes_scale_with_write_rate_not_state_size(tmp_path):
+    """After a small write burst against a large installed state, the
+    delta checkpoint is a small fraction of the full one."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=64)
+    be.set_wal(wal)
+    local = LocalServer(be)
+    txn = local.begin()
+    for i in range(64):
+        fid = txn.create(f"/big/f{i}")
+        txn.write(fid, 0, bytes([i % 251]) * 512)
+    txn.commit()
+    full = walmod.checkpoint_backend(wal, be, epoch=1)
+    txn = local.begin()
+    txn.write(txn.lookup("/big/f0"), 0, b"dirty")
+    txn.commit()
+    delta = walmod.checkpoint_backend(wal, be, epoch=1, base=full)
+    wal.close()
+    assert delta["base_seg"] == full["seg"]
+    assert delta["bytes"] < full["bytes"] * 0.2
+    rec = BackendService(block_size=64)
+    walmod.recover_dir(rec, d)
+    assert _digest(rec) == _digest(be)
+
+
+def test_delta_captures_mtime_only_touch(tmp_path):
+    """Creating a file touches the parent dir's mtime IN PLACE (no new
+    meta version). The delta meta filter keys on max(version_ts,
+    mtime_ts), so the touched dir meta must ride the delta — a
+    version-ts-only filter would silently regress the dir's mtime."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    local = LocalServer(be)
+    txn = local.begin()
+    txn.write(txn.create("/d/a"), 0, b"base")
+    txn.commit()
+    full = walmod.checkpoint_backend(wal, be, epoch=1)
+    txn = local.begin()
+    txn.write(txn.create("/d/b"), 0, b"new")        # touches /d's mtime
+    txn.commit()
+    walmod.checkpoint_backend(wal, be, epoch=1, base=full)
+    wal.close()
+    rec = BackendService(block_size=32)
+    walmod.recover_dir(rec, d)
+    assert _digest(rec) == _digest(be)              # incl. dir mtimes
+
+
+def test_torn_delta_falls_back_to_intact_chain(tmp_path, monkeypatch):
+    """Newest delta torn while its covered segments still exist (crash
+    during compaction): recovery falls back to the previous chain head
+    and replays the remaining tail — zero acked loss."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    s = _chain_cycles(wal, be, [51, 52])
+    _run_workload(be, 53, n_ops=8)
+    monkeypatch.setattr(walmod.SegmentedWal, "drop_through",
+                        lambda self, idx: 0)         # crash before delete
+    s3 = walmod.checkpoint_backend(wal, be, epoch=1, base=s[-1])
+    monkeypatch.undo()
+    tail = _run_workload(be, 54, n_ops=6)
+    wal.close()
+    # the newest delta tears (storage corruption after install)
+    with open(os.path.join(d, walmod._ckpt_name(s3["seg"])), "r+b") as f:
+        f.seek(12)
+        f.write(b"\xde\xad\xbe\xef")
+
+    rec = BackendService(block_size=32)
+    summary = walmod.recover_dir(rec, d)
+    assert summary["ckpt_seg"] == s[-1]["seg"]       # previous chain head
+    assert summary["ckpt_chain"] == 2
+    assert summary["commits"] >= tail                # nothing acked is lost
+    assert _digest(rec) == _digest(be)
+
+
+def test_broken_delta_chain_refuses_instead_of_dropping(tmp_path):
+    """A delta whose base checkpoint is gone (rot after compaction) is
+    unusable, and since its covered segments were deleted no older
+    candidate can prove coverage either: recovery must REFUSE — never
+    silently serve state missing acked commits."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    s = _chain_cycles(wal, be, [61, 62, 63])
+    wal.close()
+    os.unlink(os.path.join(d, walmod._ckpt_name(s[0]["seg"])))  # base rots
+    with pytest.raises(walmod.RecoveryError):
+        walmod.recover_dir(BackendService(block_size=32), d)
+
+
+def test_missing_base_falls_back_to_full_export(tmp_path):
+    """checkpoint_backend with a base whose file is gone must not write
+    an unresolvable delta: it silently falls back to a full."""
+    d = str(tmp_path / "w")
+    wal = walmod.SegmentedWal(d)
+    be = BackendService(block_size=32)
+    be.set_wal(wal)
+    _run_workload(be, 71, n_ops=10)
+    full = walmod.checkpoint_backend(wal, be, epoch=1)
+    _run_workload(be, 72, n_ops=5)
+    stale = dict(full, seg=999)                      # names a gone ckpt
+    nxt = walmod.checkpoint_backend(wal, be, epoch=1, base=stale)
+    wal.close()
+    assert nxt["base_seg"] == 0
+    rec = BackendService(block_size=32)
+    walmod.recover_dir(rec, d)
+    assert _digest(rec) == _digest(be)
+
+
+def test_server_delta_wiring_chain_cap_and_restart_full(tmp_path):
+    """BackendServer.run_checkpoint threads the delta base: cycle 2 is a
+    delta, the chain cap forces a periodic full, and the first cycle
+    after a restart is ALWAYS full (floors never cross process lives)."""
+    from repro.core.remote import RemoteBackend
+    from repro.core.server import BackendServer
+
+    d = str(tmp_path / "waldir")
+    server = BackendServer(BackendService(block_size=32), wal_path=d).start()
+    server.ckpt_chain_max = 3
+    rb = RemoteBackend("127.0.0.1", server.port)
+    local = LocalServer(rb)
+
+    def commit_one(i):
+        txn = local.begin()
+        p = f"/srv/f{i % 4}"
+        fid = txn.lookup(p) or txn.create(p)
+        txn.write(fid, 0, b"%04d" % i)
+        txn.commit()
+
+    base_segs = []
+    for i in range(5):
+        commit_one(i)
+        base_segs.append(server.run_checkpoint()["base_seg"])
+    # full, delta, delta (chain_len 3 = cap) -> full, delta
+    assert [b == 0 for b in base_segs] == [True, False, False, True, False]
+    rb.close()
+    server.shutdown()
+
+    server2 = BackendServer(BackendService(block_size=32), wal_path=d).start()
+    rb2 = RemoteBackend("127.0.0.1", server2.port)
+    local2 = LocalServer(rb2)
+    txn = local2.begin()
+    assert txn.lookup("/srv/f0") is not None         # state recovered
+    txn.abort()
+    s = server2.run_checkpoint()
+    assert s["base_seg"] == 0                        # restart => full first
+    rb2.close()
+    server2.shutdown()

@@ -66,3 +66,83 @@ def test_restore_from_second_worker(local):
     cm2 = CheckpointManager(other)
     restored, step = cm2.restore(state())
     assert step == 5 and restored["params"]["w"][0, 0] == 5.0
+
+
+def test_sigkill_during_save_never_restores_torn_checkpoint(tmp_path):
+    """SIGKILL a real server process mid-save-stream, restart it on the
+    same WAL directory: every acked save survives, and the latest
+    pointer names a FULLY committed checkpoint — all leaves from the
+    SAME step, never a torn mix (saves are one atomic transaction)."""
+    import os
+    import subprocess
+    import sys
+    import threading
+    import time
+    from pathlib import Path
+
+    from repro.core.remote import RemoteBackend
+
+    repo_root = Path(__file__).resolve().parents[1]
+    wal = tmp_path / "wal"
+
+    def spawn():
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(repo_root / "src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.server",
+             "--wal", str(wal), "--block-size", "4096"],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env, cwd=str(repo_root),
+        )
+        line = proc.stdout.readline()
+        assert line.startswith("LISTENING"), (line, proc.stderr.read())
+        return proc, int(line.split()[1])
+
+    proc, port = spawn()
+    rb = RemoteBackend("127.0.0.1", port)
+    cm = CheckpointManager(LocalServer(rb))
+    acked = []
+    stop = threading.Event()
+
+    def save_loop():
+        step = 0
+        while not stop.is_set():
+            step += 1
+            try:
+                cm.save(step, state(float(step)), delta_from_last=False)
+            except Exception:
+                return                     # server died mid-save: expected
+            acked.append(step)
+
+    t = threading.Thread(target=save_loop)
+    t.start()
+    deadline = time.monotonic() + 30
+    while len(acked) < 3 and time.monotonic() < deadline:
+        time.sleep(0.002)
+    assert len(acked) >= 3
+    proc.kill()                            # SIGKILL, mid-save with high odds
+    proc.wait()
+    stop.set()
+    t.join()
+    rb.close()
+
+    proc2, port2 = spawn()                 # recovers checkpoint + WAL tail
+    try:
+        rb2 = RemoteBackend("127.0.0.1", port2)
+        cm2 = CheckpointManager(LocalServer(rb2))
+        step = cm2.latest_step()
+        # acked saves are durable; a commit may outrun its lost ack, so
+        # the recovered latest can only be >= the last acked step
+        assert step is not None and step >= max(acked)
+        restored, got = cm2.restore(state(), zero_copy=False)
+        assert got == step
+        np.testing.assert_array_equal(
+            restored["params"]["w"],
+            np.full((32, 32), float(step), np.float32),
+        )
+        np.testing.assert_array_equal(restored["opt"]["m"], 0)
+        rb2.close()
+    finally:
+        proc2.kill()
+        proc2.wait()

@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config, reduced_config
-from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.serving.kvcache import PagedKVCache
 
@@ -66,10 +65,13 @@ def test_isolation_between_sequences(cfg):
     np.testing.assert_array_equal(KY[:, 0], ky)
 
 
-def test_persist_and_attach_across_workers(cfg):
+def test_persist_and_attach_across_workers(cfg, backend_factory):
     """The paper's cross-invocation cache survival: commit a conversation's
-    KV pages, re-hydrate them on a different worker, bit-exact."""
-    be = BackendService(block_size=1 << 16)
+    KV pages, re-hydrate them on a different worker, bit-exact — over
+    every backend kind. On networked kinds the re-attach lands page
+    bytes straight off the wire into the pool slabs (sunk, not copied);
+    the block size divides the page size so every page is whole blocks."""
+    be = backend_factory(block_size=256)
     w1, w2 = LocalServer(be), LocalServer(be)
 
     pk1 = PagedKVCache(cfg, num_pages=8, page_tokens=4)
@@ -80,6 +82,9 @@ def test_persist_and_attach_across_workers(cfg):
     ts = pk1.persist(w1, "conv1")
     assert ts > 0
 
+    remote = backend_factory.kind.startswith("remote")
+    if remote:
+        sunk_before = be.connection_stats()["bytes_sunk"]
     pk2 = PagedKVCache(cfg, num_pages=8, page_tokens=4)
     length = pk2.attach(w2, "conv1")
     assert length == 7
@@ -87,6 +92,11 @@ def test_persist_and_attach_across_workers(cfg):
     K2, V2 = pk2.materialize("conv1", 8)
     np.testing.assert_array_equal(K1, K2)
     np.testing.assert_array_equal(V1, V2)
+    if remote:
+        # 2 pages x (k + v): all page payload crossed the wire zero-copy
+        page_bytes = pk2.k_pages[0].nbytes
+        assert be.connection_stats()["bytes_sunk"] - sunk_before >= \
+            4 * page_bytes
 
     # appended continuation stays local until the next persist
     pk2.append("conv1", *tok_kv(cfg, 50))

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.data.pipeline import DataConfig, PipelineCursor, synth_batch
 from repro.optim import adamw
 
@@ -72,11 +72,11 @@ def test_pipeline_cursor_atomic_with_step():
         seen.append(step)
 
     for _ in range(5):
-        run_function(local, consume)
+        runtime_for(local).invoke(consume)
     # aborted/retried functions must not skip steps
     assert sorted(set(seen))[-1] == 4
 
     def peek(fs):
         assert cur.peek(fs, 0) == 5
 
-    run_function(local, peek, read_only=True)
+    runtime_for(local).invoke(peek, read_only=True)

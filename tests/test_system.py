@@ -16,7 +16,7 @@ from repro.configs.base import ShapeCell, get_config, reduced_config
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS
-from repro.core.retry import run_function
+from repro.core.runtime import runtime_for
 from repro.core.types import CachePolicy
 from repro.data.pipeline import DataConfig, synth_batch
 from repro.models import model as M
@@ -118,7 +118,7 @@ def test_crash_mid_step_leaves_no_partial_state(tiny_setup):
         raise Boom()
 
     with pytest.raises(Boom):
-        run_function(local, crashing)
+        runtime_for(local).invoke(crashing)
 
     after = trainer.read_state()
     for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):

@@ -7,7 +7,6 @@ import pytest
 from repro.core.backend import BackendService
 from repro.core.client import LocalServer
 from repro.core.posix import FaaSFS
-from repro.core.retry import run_function
 from repro.core.types import CachePolicy, Conflict
 from repro.serving.engine import SnapshotServer
 from repro.train.elastic import ElasticCoordinator
